@@ -1,0 +1,51 @@
+"""Kernel micro-bench: delta apply / fused linear, jnp path vs the naive
+dense-delta formulation (what the Pallas kernels replace). Times are CPU
+wall — the structural win on TPU is in the roofline tables."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _naive_dense(x, w, idx, val):
+    dense = jnp.zeros(w.shape, w.dtype)
+    dense = jnp.put_along_axis(dense, idx, val, axis=-2, inplace=False)
+    return jnp.dot(x, w + dense)
+
+
+def run() -> list[str]:
+    out = []
+    for m, d_in, d_out, k in [(256, 1024, 1024, 1), (256, 1024, 1024, 20)]:
+        x = jnp.asarray(RNG.normal(size=(m, d_in)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(d_in, d_out)) * 0.02, jnp.float32)
+        idx = jnp.asarray(RNG.integers(0, d_in, size=(k, d_out)), jnp.int32)
+        val = jnp.asarray(RNG.normal(size=(k, d_out)), jnp.float32)
+
+        f_sparse = jax.jit(lambda x, v: ops.fused_linear(x, w, idx, v))
+        f_naive = jax.jit(lambda x, v: _naive_dense(x, w, idx, v))
+        t_s = time_fn(f_sparse, x, val)
+        t_n = time_fn(f_naive, x, val)
+        out.append(
+            f"kernel.fused_linear.k{k},{t_s:.0f},naive_dense_us={t_n:.0f} "
+            f"speedup={t_n/max(t_s,1e-9):.2f}x"
+        )
+        g_sparse = jax.jit(jax.grad(lambda v: jnp.sum(ops.fused_linear(x, w, idx, v) ** 2)))
+        g_naive = jax.jit(jax.grad(lambda v: jnp.sum(_naive_dense(x, w, idx, v) ** 2)))
+        t_gs = time_fn(g_sparse, val)
+        t_gn = time_fn(g_naive, val)
+        out.append(
+            f"kernel.delta_grad.k{k},{t_gs:.0f},naive_dense_us={t_gn:.0f} "
+            f"speedup={t_gn/max(t_gs,1e-9):.2f}x"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

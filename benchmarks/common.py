@@ -1,0 +1,83 @@
+"""Shared benchmark helpers. Output convention (benchmarks.run):
+``name,us_per_call,derived`` CSV lines."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import PeftConfig, TrainConfig, get_config, reduced
+from repro.data.loader import DataLoader, peek_batch
+from repro.models import get_model
+from repro.peft import get_peft, stats
+from repro.train.trainer import Trainer
+
+
+def bench_model(arch="qwen2-1.5b", **cfg_kw):
+    cfg = reduced(get_config(arch))
+    if cfg_kw:
+        cfg = cfg.replace(**cfg_kw)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def time_fn(fn, *args, iters=5, warmup=2) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def train_and_eval(
+    cfg, m, params, method: str, *, k=1, lora_rank=4, steps=120, lr=3e-3,
+    task="reasoning", batch=16, seq=32, seed=11,
+) -> dict:
+    """Fine-tune with one PEFT method; return accuracy + memory stats."""
+    peft = get_peft(PeftConfig(method=method, k=k, lora_rank=lora_rank))
+    tcfg = TrainConfig(learning_rate=lr, steps=steps, log_every=0, checkpoint_every=0)
+    tr = Trainer(m, peft, tcfg, params)
+    st = stats(params, tr.state.trainable)
+    opt_bytes = sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves((tr.state.opt_state.mu, tr.state.opt_state.nu))
+    )
+    grad_bytes = sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(tr.state.trainable)
+    )
+    data = DataLoader(task, cfg.vocab_size, batch, seq, seed=seed)
+    t0 = time.perf_counter()
+    hist = tr.run(data, steps=steps)
+    wall = time.perf_counter() - t0
+    data.close()
+
+    test = peek_batch(task, cfg.vocab_size, 128, seq, seed=9999)
+    eff, ad = peft.model_inputs(params, tr.state.trainable, tr.aux)
+    logits, _ = m.forward(eff, ad, {kk: jnp.asarray(v) for kk, v in test.items()})
+    if "answer_pos" in test:
+        pp = test["answer_pos"][0] - 1
+        preds = np.argmax(np.asarray(logits[:, pp, : cfg.vocab_size], np.float32), -1)
+        acc = float(np.mean(preds == test["answer"]))
+    else:  # token accuracy on masked positions
+        preds = np.argmax(np.asarray(logits[:, :-1, : cfg.vocab_size], np.float32), -1)
+        tgt = test["targets"][:, 1:]
+        mask = test.get("loss_mask", np.ones_like(tgt, np.float32))
+        acc = float((preds == tgt)[mask > 0].mean())
+    return {
+        "method": method,
+        "fraction": st["fraction"],
+        "acc": acc,
+        "final_loss": float(np.mean([h["loss"] for h in hist[-5:]])),
+        "opt_state_bytes": int(opt_bytes),
+        "trainable_bytes": int(grad_bytes),
+        "samples_per_s": steps * batch / wall,
+        "us_per_step": wall / steps * 1e6,
+    }

@@ -1,0 +1,28 @@
+"""Paper Fig. 4: NeuroAda vs mask-based sparse tuning across trainable-param
+budgets, same selection, same LR protocol (reduced-scale protocol: synthetic
+commonsense-style task + arithmetic task)."""
+
+from __future__ import annotations
+
+from benchmarks.common import bench_model, train_and_eval
+
+
+def run(steps: int = 120) -> list[str]:
+    cfg, m, params = bench_model("qwen2-1.5b")
+    out = []
+    for task in ("reasoning", "arithmetic"):
+        for k in (1, 4, 16):
+            for method in ("neuroada", "masked"):
+                r = train_and_eval(
+                    cfg, m, params, method, k=k, steps=steps, task=task
+                )
+                out.append(
+                    f"fig4.{task}.k{k}.{method},{r['us_per_step']:.0f},"
+                    f"acc={r['acc']:.3f} frac={r['fraction']:.4f} "
+                    f"loss={r['final_loss']:.3f}"
+                )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

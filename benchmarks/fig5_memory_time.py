@@ -1,0 +1,36 @@
+"""Paper Fig. 5: training memory + throughput across model sizes for
+NeuroAda / mask-based / full FT.
+
+On this CPU container "memory" is the measured optimizer+grad state bytes
+(the quantity the paper's CUDA numbers are dominated by) and throughput is
+samples/s of the jitted step."""
+
+from __future__ import annotations
+
+from benchmarks.common import bench_model, train_and_eval
+
+SIZES = {  # reduced-family stand-ins for RoBERTa-base→LLaMA (paper x-axis)
+    "small": dict(d_model=64, num_layers=2),
+    "medium": dict(d_model=128, num_layers=4),
+    "large": dict(d_model=256, num_layers=4),
+}
+
+
+def run(steps: int = 40) -> list[str]:
+    out = []
+    for size, kw in SIZES.items():
+        cfg, m, params = bench_model("qwen2-1.5b", **kw)
+        for method in ("neuroada", "masked", "full"):
+            r = train_and_eval(
+                cfg, m, params, method, k=1, steps=steps, task="lm",
+            )
+            state_mb = (r["opt_state_bytes"] + r["trainable_bytes"]) / 2**20
+            out.append(
+                f"fig5.{size}.{method},{r['us_per_step']:.0f},"
+                f"state_MB={state_mb:.2f} samples_per_s={r['samples_per_s']:.1f}"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,73 @@
+"""Paper Fig. 6: performance vs proportion of neurons allowed to adapt.
+
+Same total budget spread over a fraction of neurons: we emulate X% neuron
+coverage by masking delta values for the complementary rows (selection
+still magnitude-based)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model
+from repro.configs import PeftConfig, TrainConfig
+from repro.data.loader import DataLoader, peek_batch
+from repro.peft import get_peft
+from repro.train.trainer import Trainer
+
+
+def _restrict_to_fraction(values, frac: float, rng):
+    """Zero-LR rows: freeze (1-frac) of output neurons by masking grads via
+    a values mask folded into post-init values (simplest faithful variant:
+    drop those rows' deltas from training by keeping them at exactly 0
+    through a mask applied in a grad transform)."""
+
+    masks = {}
+    flat, treedef = jax.tree_util.tree_flatten(values, is_leaf=lambda x: x is None)
+    keys = jax.random.split(rng, max(len(flat), 1))
+    out = []
+    for leaf, key in zip(flat, keys):
+        if leaf is None:
+            out.append(None)
+            continue
+        d_out = leaf.shape[-1]
+        keep = (jax.random.uniform(key, (d_out,)) < frac).astype(leaf.dtype)
+        out.append(jnp.broadcast_to(keep, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def run(steps: int = 100) -> list[str]:
+    cfg, m, params = bench_model("qwen2-1.5b")
+    out = []
+    for frac in (0.25, 0.5, 1.0):
+        peft = get_peft(PeftConfig(method="neuroada", k=2))
+        mask_tree = {}
+
+        def grad_transform(grads, _m=mask_tree):
+            return jax.tree.map(
+                lambda g, mk: None if g is None else g * mk,
+                grads, _m["mask"], is_leaf=lambda x: x is None,
+            )
+
+        tcfg = TrainConfig(learning_rate=3e-3, steps=steps, log_every=0,
+                           checkpoint_every=0)
+        tr = Trainer(m, peft, tcfg, params, grad_transform=grad_transform)
+        mask_tree["mask"] = _restrict_to_fraction(
+            tr.state.trainable, frac, jax.random.PRNGKey(42)
+        )
+        data = DataLoader("reasoning", cfg.vocab_size, 16, 32, seed=21)
+        tr.run(data, steps=steps)
+        data.close()
+        test = peek_batch("reasoning", cfg.vocab_size, 128, 32, seed=9999)
+        eff, ad = peft.model_inputs(params, tr.state.trainable, tr.aux)
+        logits, _ = m.forward(eff, ad, {k: jnp.asarray(v) for k, v in test.items()})
+        pp = test["answer_pos"][0] - 1
+        preds = np.argmax(np.asarray(logits[:, pp, : cfg.vocab_size], np.float32), -1)
+        acc = float(np.mean(preds == test["answer"]))
+        out.append(f"fig6.neuron_frac_{frac},0,acc={acc:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

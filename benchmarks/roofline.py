@@ -1,0 +1,147 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three structural terms per (arch × shape × mesh):
+
+    T_compute = HLO_FLOPs/device / 197 TFLOP/s      (v5e bf16 peak)
+    T_memory  = HLO_bytes/device / 819 GB/s          (HBM)
+    T_coll    = wire_bytes/device / 50 GB/s          (ICI, 1-link serial)
+
+plus MODEL_FLOPS (the *useful* FLOPs: 4·N·D for NeuroAda training — frozen
+weights skip the weight-grad matmul — 2·N·D prefill, 2·N·B decode) and the
+ratio MODEL_FLOPS/HLO_FLOPs exposing remat/dispatch waste. The roofline
+fraction reported in §Perf is
+
+    RF = T_model / max(T_compute, T_memory, T_coll),  T_model = MODEL_FLOPS
+         /(devices · peak)
+
+i.e. model-FLOPs utilisation at the structural bound (no-overlap, so RF is
+a lower bound on achievable MFU).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline \
+           --json dryrun_single.json [--md out.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models import get_model
+
+_PARAM_CACHE: dict[str, tuple[float, float]] = {}
+
+
+def param_counts(arch: str) -> tuple[float, float]:
+    """(total_params, active_params) — active discounts MoE experts by K/E."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    total = active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        name = "/".join(str(p.key) for p in path if hasattr(p, "key"))
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if cfg.num_experts and any(k in name for k in ("wgate", "wup", "wdown")):
+            active += n * cfg.experts_per_token / cfg.num_experts
+        else:
+            active += n
+    _PARAM_CACHE[arch] = (total, active)
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Useful FLOPs per step (whole job, all devices)."""
+    shape = SHAPES[shape_name]
+    _, n_active = param_counts(arch)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        # fwd 2ND + bwd-dx 2ND; weight-grad matmuls skipped (frozen W)
+        return 4.0 * n_active * tokens
+    if shape.mode == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq
+
+
+def analyze(rec: dict) -> dict | None:
+    if "error" in rec or "skipped" in rec:
+        return None
+    arch, shape = rec["arch"], rec["shape"]
+    dev = rec["devices"]
+    t_c = rec["flops_per_device"] / PEAK_FLOPS_BF16
+    t_m = rec["bytes_per_device"] / HBM_BW
+    t_x = rec["collectives"]["total"] / ICI_BW  # total == per-chip wire share
+    mf = model_flops(arch, shape)
+    t_model = mf / dev / PEAK_FLOPS_BF16
+    bound = max(t_c, t_m, t_x)
+    dominant = {t_c: "compute", t_m: "memory", t_x: "collective"}[bound]
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "variant")},
+        "t_compute": t_c,
+        "t_memory": t_m,
+        "t_coll": t_x,
+        "bound_s": bound,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / dev / max(rec["flops_per_device"], 1.0),
+        "roofline_frac": t_model / max(bound, 1e-30),
+        "hbm_gib": rec["peak_mem_per_device"] / 2**30,
+    }
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | T_comp (ms) | T_mem (ms) | T_coll (ms) | "
+        "bound | useful/HLO | RF | HBM GiB |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']*1e3:.2f} | {r['t_memory']*1e3:.2f} "
+            f"| {r['t_coll']*1e3:.2f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.2%} "
+            f"| {r['hbm_gib']:.1f} |\n"
+        )
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", required=True, nargs="+")
+    ap.add_argument("--md", default="")
+    ap.add_argument("--csv", default="")
+    args = ap.parse_args()
+    rows = []
+    for path in args.json:
+        with open(path) as f:
+            for rec in json.load(f):
+                r = analyze(rec)
+                if r:
+                    rows.append(r)
+    md = to_markdown(rows)
+    print(md)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(md)
+    if args.csv:
+        import csv
+
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Roofline tables (§Dry-run /
+§Roofline) are produced separately by ``benchmarks.roofline`` from the
+dry-run JSON artifacts (they need the 512-device platform).
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer train steps")
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+    steps = 40 if args.fast else 120
+
+    from benchmarks import (
+        bench_kernels,
+        fig4_budget_parity,
+        fig5_memory_time,
+        fig6_neuron_proportion,
+        fig7_selection_strategies,
+        table1_memory,
+    )
+
+    suites = [
+        ("table1", table1_memory.run, {}),
+        ("kernels", bench_kernels.run, {}),
+        ("fig5", fig5_memory_time.run, {"steps": min(steps, 40)}),
+        ("fig6", fig6_neuron_proportion.run, {"steps": steps + 80}),
+        ("fig7", fig7_selection_strategies.run, {"steps": steps + 80}),
+        ("fig4", fig4_budget_parity.run, {"steps": steps}),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn, kw in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for line in fn(**kw):
+                print(line, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name}.ERROR,0,{traceback.format_exc(limit=1).splitlines()[-1]}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Table 1: per-projection selection-state memory — binary mask vs
+NeuroAda's compact (BF16 value + int index) form, on the paper's models.
+
+Analytic (exact byte counts) + measured (actual array sizes from the two
+PEFT implementations on a reduced model)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import PeftConfig, get_config, reduced
+from repro.models import get_model
+from repro.peft import get_peft
+
+PAPER_MODELS = {
+    "LLaMA-1 7B": 4096,
+    "LLaMA-2 7B": 4096,
+    "LLaMA-1 13B": 5120,
+    "LLaMA-2 13B": 5120,
+}
+
+
+def analytic_rows(k: int = 1):
+    rows = []
+    for name, d in PAPER_MODELS.items():
+        mask_mb = d * d / 8 / 2**20  # 1 bit per weight (paper's lower bound)
+        # k BF16 values (2B) + k int16-packable indices (2B) per neuron
+        ours_mb = d * k * 4 / 2**20
+        rows.append((name, d, mask_mb, ours_mb, mask_mb / ours_mb))
+    return rows
+
+
+def measured_row(k: int = 1):
+    cfg = reduced(get_config("qwen2-1.5b"))
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    na = get_peft(PeftConfig(method="neuroada", k=k))
+    vals, idx = na.init(params, jax.random.PRNGKey(1))
+    na_bytes = sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves((vals, idx))
+    )
+    mk = get_peft(PeftConfig(method="masked", k=k))
+    _, mask = mk.init(params, jax.random.PRNGKey(1))
+    mask_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(mask))
+    return na_bytes, mask_bytes
+
+
+def run() -> list[str]:
+    out = []
+    for name, d, mask_mb, ours_mb, ratio in analytic_rows():
+        out.append(
+            f"table1.{name.replace(' ', '_')},0,mask={mask_mb:.2f}MB"
+            f" neuroada={ours_mb:.3f}MB saving={ratio:.0f}x"
+        )
+    na_b, mask_b = measured_row()
+    out.append(
+        f"table1.measured_reduced_model,0,"
+        f"neuroada_bytes={na_b} mask_bytes={mask_b} ratio={mask_b/na_b:.1f}x"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,77 @@
+"""End-to-end training driver: a ~100M-param dense LM fine-tuned with
+NeuroAda for a few hundred steps through the FULL production stack —
+host-sharded data pipeline, grad accumulation, NaN guard, straggler
+monitor, async checkpointing with kill-and-resume.
+
+  PYTHONPATH=src python examples/finetune_e2e.py [--steps 300] [--arch qwen2-1.5b]
+"""
+
+import argparse
+import logging
+import os
+import shutil
+
+import jax
+
+from repro.configs import PeftConfig, TrainConfig, get_config, reduced
+from repro.data.loader import DataLoader
+from repro.models import get_model
+from repro.peft import get_peft, stats
+from repro.train.trainer import Trainer
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+
+def build_100m(arch: str):
+    """~90M params: real depth/width. ~12 s/step on this 1-core CPU — use
+    --steps 30 for a smoke run; a few hundred steps is an overnightable
+    CPU job or minutes on one accelerator."""
+    cfg = get_config(arch).replace(
+        name=arch + "-100m", num_layers=6, d_model=768, d_ff=2048,
+        num_heads=12, num_kv_heads=4, head_dim=64, vocab_size=32000,
+        flash_threshold=1 << 30,
+    )
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if not args.resume and os.path.exists(args.ckpt):
+        shutil.rmtree(args.ckpt)
+
+    cfg = build_100m(args.arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    peft = get_peft(PeftConfig(method="neuroada", k=args.k))
+    tcfg = TrainConfig(
+        learning_rate=3e-3, steps=args.steps, microbatches=2,
+        checkpoint_every=100, checkpoint_dir=args.ckpt, log_every=20,
+    )
+    trainer = Trainer(model, peft, tcfg, params)
+    st = stats(params, trainer.state.trainable)
+    print(f"model ≈{st['total']/1e6:.0f}M params; trainable {st['fraction']:.4%}")
+
+    start = trainer.try_resume()
+    data = DataLoader(
+        "arithmetic", cfg.vocab_size, 32, 64, seed=1, start_step=start,
+        host_id=0, host_count=1,
+    )
+    hist = trainer.run(data, steps=args.steps)
+    data.close()
+    print(f"final loss {hist[-1]['loss']:.4f}; "
+          f"stragglers flagged: {len(trainer.monitor.flagged)}; "
+          f"skipped (NaN-guard): {trainer.nan_guard.skipped}")
+    print(f"checkpoints: {trainer.ckpt.steps()} in {args.ckpt}")
+    print("re-run with --resume to continue from the latest checkpoint")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""NeuroAda vs LoRA vs BitFit vs mask-based vs full FT on the same task,
+same protocol (the paper's Tables 2–4 comparison at CPU scale).
+
+  PYTHONPATH=src python examples/peft_comparison.py [--steps 150]
+"""
+
+import argparse
+
+from benchmarks.common import bench_model, train_and_eval
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+
+    cfg, m, params = bench_model("qwen2-1.5b")
+    print(f"{'method':10s} {'trainable%':>10s} {'acc':>6s} {'loss':>7s} "
+          f"{'opt state':>10s} {'samp/s':>7s}")
+    for method, kw in [
+        ("neuroada", dict(k=1, lr=3e-3)),
+        ("neuroada", dict(k=16, lr=3e-3)),
+        ("lora", dict(lora_rank=4, lr=1e-3)),
+        ("bitfit", dict(lr=1e-3)),
+        ("masked", dict(k=16, lr=3e-3)),
+        ("full", dict(lr=5e-4)),
+    ]:
+        r = train_and_eval(cfg, m, params, method, steps=args.steps,
+                           task="reasoning", **kw)
+        tag = method + (f"(k={kw['k']})" if "k" in kw else "")
+        print(f"{tag:10s} {r['fraction']:>9.4%} {r['acc']:>6.1%} "
+              f"{r['final_loss']:>7.3f} {r['opt_state_bytes']/2**20:>8.2f}MB "
+              f"{r['samples_per_s']:>7.1f}")
+
+
+if __name__ == "__main__":
+    main()

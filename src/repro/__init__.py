@@ -1,0 +1,4 @@
+"""repro: NeuroAda (Zhang et al., 2025) as a production multi-pod JAX
+training/serving framework. See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    load_pytree,
+    restore_into,
+    save_pytree,
+)
+
+__all__ = ["CheckpointManager", "load_pytree", "restore_into", "save_pytree"]

@@ -1,0 +1,185 @@
+"""Device-agnostic checkpointing: atomic publish, async writes, auto-resume.
+
+Trees are flattened to path-keyed numpy arrays in an ``.npz`` plus a JSON
+manifest (step, config hash, tree structure). Restore rebuilds the nested
+dict and can re-shard onto any mesh (elastic restart): arrays are plain
+host numpy, ``device_put`` with the target sharding happens at load.
+
+Atomicity: write to ``<dir>/tmp.<step>`` then ``os.replace`` into place —
+a torn write never becomes the latest checkpoint. ``AsyncWriter`` moves the
+serialisation off the training thread (one in flight, back-pressure on the
+next save).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import jax
+import numpy as np
+
+_SENTINEL_NONE = "__none__"
+_DTYPE_KEY = "__dtype__"  # sidecar entries for non-numpy-native dtypes (bf16)
+
+
+def _path_part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "name"):  # GetAttrKey (NamedTuple fields)
+        return str(p.name)
+    return str(p.idx)
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None
+    )[0]:
+        key = "/".join(_path_part(p) for p in path)
+        if leaf is None:
+            flat[key] = np.array(_SENTINEL_NONE)
+            continue
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # npz can't represent ml_dtypes natively: store the raw bits
+            # as uint16 plus a dtype sidecar (restored via .view()).
+            flat[f"{_DTYPE_KEY}/{key}"] = np.array(arr.dtype.name)
+            flat[key] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _unflatten(flat: dict[str, np.ndarray]):
+    import ml_dtypes
+
+    dtypes = {
+        k[len(_DTYPE_KEY) + 1 :]: str(v)
+        for k, v in flat.items()
+        if k.startswith(_DTYPE_KEY + "/")
+    }
+    tree: dict = {}
+    for key, val in flat.items():
+        if key.startswith(_DTYPE_KEY + "/"):
+            continue
+        node = tree
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        if val.dtype.kind == "U" and str(val) == _SENTINEL_NONE:
+            node[parts[-1]] = None
+        elif key in dtypes:
+            node[parts[-1]] = val.view(np.dtype(dtypes[key]))
+        else:
+            node[parts[-1]] = val
+    return tree
+
+
+def save_pytree(path: str, tree, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:  # explicit handle: no .npz suffix munging
+        np.savez(f, **_flatten(tree))
+    os.replace(tmp, path)
+    if metadata is not None:
+        mtmp = path + ".meta.tmp"
+        with open(mtmp, "w") as f:
+            json.dump(metadata, f)
+        os.replace(mtmp, path + ".meta.json")
+
+
+def load_pytree(path: str):
+    with np.load(path, allow_pickle=False) as z:
+        return _unflatten({k: z[k] for k in z.files})
+
+
+def restore_into(template, restored_dict):
+    """Map a restored nested dict back into ``template``'s structure
+    (NamedTuples flatten to attr names) — elastic restore re-shards by
+    simply device_put-ing the result with the current shardings."""
+    import jax.numpy as jnp
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: x is None
+    )
+    leaves = []
+    for path, tmpl in flat:
+        node = restored_dict
+        for p in path:
+            node = node[_path_part(p)]
+        if tmpl is None or node is None:
+            leaves.append(None)
+        else:
+            leaves.append(jnp.asarray(node).astype(tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """step-indexed checkpoints under ``dir``, keep-last-N, auto-resume."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: threading.Thread | None = None
+        self._error: BaseException | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".npz"):
+                out.append(int(f[5:13]))
+        return sorted(out)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def save(self, step: int, tree, metadata: dict | None = None):
+        self.wait()  # one write in flight
+        host_tree = jax.tree.map(
+            lambda x: None if x is None else np.asarray(x),
+            tree,
+            is_leaf=lambda x: x is None,
+        )
+        meta = dict(metadata or {}, step=step)
+
+        def _write():
+            try:
+                save_pytree(self._path(step), host_tree, meta)
+                self._gc()
+            except BaseException as e:  # surfaced at the next wait()
+                self._error = e
+
+        if self.async_write:
+            self._pending = threading.Thread(target=_write, daemon=True)
+            self._pending.start()
+        else:
+            _write()
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            for suffix in (".npz", ".npz.meta.json"):
+                p = os.path.join(self.dir, f"ckpt_{s:08d}{suffix}")
+                if os.path.exists(p):
+                    os.remove(p)
+
+    def restore_latest(self):
+        """-> (step, tree) or (None, None). Elastic: caller re-shards."""
+        self.wait()
+        steps = self.steps()
+        if not steps:
+            return None, None
+        step = steps[-1]
+        return step, load_pytree(self._path(step))

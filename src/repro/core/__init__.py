@@ -1,0 +1,43 @@
+"""NeuroAda core: the paper's contribution as a composable JAX module."""
+
+from repro.core.delta import (
+    Delta,
+    adapter_bytes,
+    delta_matmul,
+    init_delta,
+    merge,
+    scatter_to_dense,
+)
+from repro.core.selection import STRATEGIES, k_for_budget, topk_indices
+from repro.core.adapt import (
+    DEFAULT_EXCLUDE,
+    adaptable_shapes,
+    count_total,
+    count_trainable,
+    init_adapters,
+    is_adaptable,
+    merge_adapters,
+    trainable_fraction,
+    zip_adapters,
+)
+
+__all__ = [
+    "Delta",
+    "STRATEGIES",
+    "DEFAULT_EXCLUDE",
+    "adaptable_shapes",
+    "adapter_bytes",
+    "count_total",
+    "count_trainable",
+    "delta_matmul",
+    "init_adapters",
+    "init_delta",
+    "is_adaptable",
+    "k_for_budget",
+    "merge",
+    "merge_adapters",
+    "scatter_to_dense",
+    "topk_indices",
+    "trainable_fraction",
+    "zip_adapters",
+]

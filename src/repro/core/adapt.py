@@ -1,0 +1,172 @@
+"""Model-level NeuroAda: build/merge adapter trees over whole param pytrees.
+
+An *adapter tree* mirrors the (nested-dict) param tree but contains a
+``Delta`` leaf only at adapted matrices. It is split into two aligned trees:
+
+* ``indices`` — int32, frozen (never differentiated),
+* ``values``  — float, zero-init, the ONLY trainable parameters.
+
+The trainer differentiates w.r.t. ``values`` alone, so AdamW states are
+``(…, k, d_out)``-shaped by construction (paper Eq. 6) — no masking tricks.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import Delta, init_delta
+from repro.core.selection import topk_indices
+
+# Matrices we never adapt by default: embeddings (rows are tokens, not
+# neurons), routers (tiny, load-balance-sensitive). Only ``…/w`` leaves of
+# linear sub-layers are candidates — biases, norms, conv kernels and SSM
+# state params are not row-neuron matrices. See DESIGN.md §3.
+DEFAULT_EXCLUDE = (
+    r".*embed.*",
+    r".*router.*",
+)
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def is_adaptable(name: str, leaf: Any, exclude=DEFAULT_EXCLUDE) -> bool:
+    if not name.endswith("/w"):
+        return False
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    return not any(re.fullmatch(pat, name) for pat in exclude)
+
+
+def adaptable_shapes(params, exclude=DEFAULT_EXCLUDE) -> dict[str, tuple[int, ...]]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = path_str(path)
+        if is_adaptable(name, leaf, exclude):
+            out[name] = tuple(leaf.shape)
+    return out
+
+
+def init_adapters(
+    params,
+    k: int,
+    *,
+    strategy: str = "magnitude",
+    rng: jax.Array | None = None,
+    grads=None,
+    dtype=jnp.float32,
+    exclude=DEFAULT_EXCLUDE,
+):
+    """Build (indices_tree, values_tree) for every adaptable matrix.
+
+    Trees have the same nested-dict structure as ``params`` but with
+    non-adapted leaves replaced by ``None`` (pruned from flattening via
+    tree.map's None handling is NOT used; we keep explicit Nones so zips
+    stay structurally aligned with params).
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    n_ad = sum(is_adaptable(path_str(p), l, exclude) for p, l in leaves)
+    rngs = iter(jax.random.split(rng, max(n_ad, 1))) if rng is not None else None
+
+    def one(path, w):
+        name = path_str(path)
+        if not is_adaptable(name, w, exclude):
+            return None, None
+        g = None
+        if grads is not None:
+            g = _tree_get(grads, path)
+        r = next(rngs) if rngs is not None else None
+        kk = min(k, w.shape[-2])
+        idx = topk_indices(w, kk, strategy=strategy, rng=r, grad=g)
+        d = init_delta(idx, dtype=dtype)
+        return d.idx, d.val
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(params)
+    pairs = [one(p, l) for p, l in paths_leaves[0]]
+    treedef = paths_leaves[1]
+    indices = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+    values = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+    return indices, values
+
+
+def _tree_get(tree, path):
+    node = tree
+    for p in path:
+        key = p.key if hasattr(p, "key") else p.idx
+        node = node[key]
+    return node
+
+
+def zip_adapters(indices, values):
+    """Combine aligned (indices, values) trees into a tree of Delta leaves.
+
+    Leaves where indices is None stay None (non-adapted matrices).
+    """
+    return jax.tree.map(
+        lambda i, v: None if i is None else Delta(i, v),
+        indices,
+        values,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def merge_adapters(params, indices, values):
+    """Alg. 1 phase 3: fold every Delta into its frozen matrix, in one pass."""
+    from repro.core.delta import merge
+
+    def one(w, i, v):
+        if i is None:
+            return w
+        return merge(w, Delta(i, v))
+
+    return jax.tree.map(one, params, indices, values, is_leaf=lambda x: x is None)
+
+
+def count_trainable(values) -> int:
+    return sum(
+        int(jnp.size(v)) for v in jax.tree.leaves(values) if v is not None
+    )
+
+
+def count_total(params) -> int:
+    return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+
+
+def trainable_fraction(params, values) -> float:
+    return count_trainable(values) / max(count_total(params), 1)
+
+
+def map_deltas(fn: Callable[[str, Delta], Delta], indices, values):
+    """Apply fn(name, Delta) -> Delta over the adapter tree (for sharding)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        indices, is_leaf=lambda x: x is None
+    )
+    vflat = jax.tree_util.tree_flatten(values, is_leaf=lambda x: x is None)[0]
+    out_i, out_v = [], []
+    for (path, i), v in zip(flat, vflat):
+        if i is None:
+            out_i.append(None)
+            out_v.append(None)
+        else:
+            d = fn(path_str(path), Delta(i, v))
+            out_i.append(d.idx)
+            out_v.append(d.val)
+    return (
+        jax.tree_util.tree_unflatten(treedef, out_i),
+        jax.tree_util.tree_unflatten(treedef, out_v),
+    )

@@ -1,0 +1,70 @@
+"""Sparse bypass deltas (Eq. 3–4) and the one-shot merge (Alg. 1 phase 3).
+
+Storage is the paper's mask-free compact form: per adapted matrix
+``W (..., d_in, d_out)`` we keep ``idx (..., k, d_out) int32`` and
+``val (..., k, d_out)`` in the compute dtype. No dense mask, no dense delta.
+
+The forward contribution is the gather-contraction
+
+    yΔ[..., o] = Σ_j val[j, o] · x[..., idx[j, o]]
+
+whose transpose (autodiff) gives exactly the paper's sparse backward:
+``dval[j,o] = Σ_batch dy[...,o] · x[..., idx[j,o]]`` and a scatter-add into
+``dx`` of only k·d_out coordinates.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Delta(NamedTuple):
+    """A NeuroAda adapter for one weight matrix. ``idx`` is non-trainable."""
+
+    idx: jax.Array  # (..., k, d_out) int32 — positions along d_in
+    val: jax.Array  # (..., k, d_out) compute dtype — zero-init trainables
+
+
+def init_delta(idx: jax.Array, dtype=jnp.float32) -> Delta:
+    return Delta(idx=idx, val=jnp.zeros(idx.shape, dtype=dtype))
+
+
+def delta_matmul(x: jax.Array, delta: Delta) -> jax.Array:
+    """Apply the bypass connections: x (..., d_in) -> (..., d_out).
+
+    Pure-jnp reference path (XLA fuses gather+mul+reduce); the Pallas path
+    lives in repro.kernels.sparse_delta and is numerically identical.
+    """
+    idx, val = delta.idx, delta.val
+    if idx.ndim != 2:
+        raise ValueError(f"delta_matmul wants rank-2 idx (k, d_out); got {idx.shape}")
+    xg = x[..., idx]  # (..., k, d_out) gather along the feature axis
+    return jnp.sum(xg * val.astype(x.dtype), axis=-2)
+
+
+def scatter_to_dense(delta: Delta, d_in: int, dtype=None) -> jax.Array:
+    """Materialise Δ as a dense (..., d_in, d_out) matrix (tests/merge only)."""
+    idx, val = delta.idx, delta.val
+    dtype = dtype or val.dtype
+    dense = jnp.zeros(idx.shape[:-2] + (d_in,) + idx.shape[-1:], dtype=dtype)
+    return jnp.put_along_axis(dense, idx, val.astype(dtype), axis=-2, inplace=False)
+
+
+def merge(w: jax.Array, delta: Delta) -> jax.Array:
+    """W[i, I_i] += Δ — zero inference overhead afterwards."""
+    sel = jnp.take_along_axis(w, delta.idx, axis=-2)
+    return jnp.put_along_axis(
+        w, delta.idx, sel + delta.val.astype(w.dtype), axis=-2, inplace=False
+    )
+
+
+def trainable_count(delta: Delta) -> int:
+    return int(jnp.size(delta.val))
+
+
+def adapter_bytes(delta: Delta) -> int:
+    """Paper Table 1 accounting: BF16 value + int index per selected weight."""
+    return int(jnp.size(delta.val)) * (delta.val.dtype.itemsize + delta.idx.dtype.itemsize)

@@ -1,0 +1,84 @@
+"""Phase 1 of NeuroAda (Alg. 1): offline per-neuron top-k selection.
+
+A weight matrix is stored ``(d_in, d_out)`` (JAX convention: ``y = x @ W``),
+so a *neuron* in the paper's sense (a row of the ``(d_out, d_in)`` torch
+matrix) is an output column here. Selection therefore runs along the
+contraction axis (``-2``) independently for each output unit, for any number
+of leading batch axes (layer-stacks ``(L, d_in, d_out)``, expert stacks
+``(E, d_in, d_out)``).
+
+Strategies (paper §4, Fig. 7): ``magnitude`` (default — task-agnostic, no
+warm-up), ``gradient`` (|g| from a warm-up batch), ``reverse`` (lowest
+magnitude), ``random``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+STRATEGIES = ("magnitude", "gradient", "reverse", "random")
+
+
+def _per_unit_topk(scores: jax.Array, k: int) -> jax.Array:
+    """Top-k along axis -2, per output unit.
+
+    scores: (..., d_in, d_out) float. Returns int32 indices (..., k, d_out),
+    sorted by descending score (ties broken toward lower index, matching
+    ``lax.top_k`` semantics).
+    """
+    d_in = scores.shape[-2]
+    if not 1 <= k <= d_in:
+        raise ValueError(f"k={k} out of range for d_in={d_in}")
+    # lax.top_k works on the last axis: move d_in last.
+    st = jnp.swapaxes(scores, -1, -2)  # (..., d_out, d_in)
+    _, idx = jax.lax.top_k(st, k)  # (..., d_out, k)
+    return jnp.swapaxes(idx, -1, -2).astype(jnp.int32)  # (..., k, d_out)
+
+
+def topk_indices(
+    w: jax.Array,
+    k: int,
+    *,
+    strategy: str = "magnitude",
+    rng: jax.Array | None = None,
+    grad: jax.Array | None = None,
+) -> jax.Array:
+    """Select k input-connection indices per output neuron of ``w``.
+
+    w: (..., d_in, d_out). Returns (..., k, d_out) int32, unique per column.
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; want one of {STRATEGIES}")
+    if strategy == "magnitude":
+        scores = jnp.abs(w).astype(jnp.float32)
+    elif strategy == "reverse":
+        scores = -jnp.abs(w).astype(jnp.float32)
+    elif strategy == "gradient":
+        if grad is None:
+            raise ValueError("strategy='gradient' requires grad=|dL/dW| array")
+        if grad.shape != w.shape:
+            raise ValueError(f"grad shape {grad.shape} != w shape {w.shape}")
+        scores = jnp.abs(grad).astype(jnp.float32)
+    else:  # random — a fresh uniform score per entry; top-k of noise is a
+        # uniform draw of k distinct indices per neuron.
+        if rng is None:
+            raise ValueError("strategy='random' requires rng")
+        scores = jax.random.uniform(rng, w.shape, dtype=jnp.float32)
+    return _per_unit_topk(scores, k)
+
+
+def k_for_budget(total_params: int, adaptable: dict[str, tuple[int, ...]], fraction: float) -> int:
+    """Smallest k whose trainable fraction reaches ``fraction`` of total.
+
+    ``adaptable`` maps param name -> shape (..., d_in, d_out); each
+    contributes ``prod(shape)/d_in * k`` trainables (= d_out·k per matrix,
+    times leading stack dims).
+    """
+    per_k = sum(int(jnp.prod(jnp.array(s))) // s[-2] for s in adaptable.values())
+    if per_k == 0:
+        raise ValueError("no adaptable parameters")
+    target = fraction * total_params
+    k = max(1, int(-(-target // per_k)))  # ceil
+    max_k = min(s[-2] for s in adaptable.values())
+    return min(k, max_k)

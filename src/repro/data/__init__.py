@@ -1,0 +1,4 @@
+from repro.data.loader import DataLoader, peek_batch
+from repro.data.synthetic import TASKS
+
+__all__ = ["DataLoader", "TASKS", "peek_batch"]

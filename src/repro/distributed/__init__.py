@@ -1,0 +1,23 @@
+from repro.distributed.context import (
+    clear_activation_sharding,
+    constrain,
+    constrain_inner,
+    constrain_moe,
+    set_activation_sharding,
+)
+from repro.distributed.fault import NanGuard, StragglerMonitor
+from repro.distributed.sharding import (
+    adapter_shardings,
+    batch_specs,
+    data_axes,
+    needs_fsdp,
+    param_shardings,
+    spec_for_param,
+)
+
+__all__ = [
+    "NanGuard", "StragglerMonitor", "adapter_shardings", "batch_specs",
+    "clear_activation_sharding", "constrain", "constrain_inner",
+    "constrain_moe", "data_axes", "needs_fsdp", "param_shardings",
+    "set_activation_sharding", "spec_for_param",
+]

@@ -1,0 +1,102 @@
+"""Activation-sharding context (Megatron-style sequence parallelism).
+
+The trainer/dry-run sets the mesh axes for batch and sequence dims before
+tracing; model code calls :func:`constrain` on the residual stream at block
+boundaries. Between TP regions the hidden state is sharded over the
+``model`` axis along SEQUENCE — the remat-saved layer activations shrink
+by the TP degree, which is what makes 405B×4k training fit HBM.
+
+No-op when unset (CPU tests, single-device examples).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {
+    "batch": None, "seq": None, "batch_div": 1, "seq_div": 1,
+    # variant ∈ none | sp_only | inner_mlp | inner_all  (§Perf A/B switch)
+    "variant": "inner_mlp",
+}
+
+
+def set_activation_sharding(
+    batch_axes, seq_axes, *, batch_div: int = 1, seq_div: int = 1,
+    variant: str = "inner_mlp",
+) -> None:
+    _STATE.update(
+        batch=batch_axes, seq=seq_axes, batch_div=batch_div, seq_div=seq_div,
+        variant=variant,
+    )
+
+
+def clear_activation_sharding() -> None:
+    set_activation_sharding(None, None, batch_div=1, seq_div=1)
+
+
+def constrain(h: jax.Array) -> jax.Array:
+    """h (B, S, D) -> sharding-constrained h (sequence-parallel layout)."""
+    if _STATE["variant"] == "none":
+        return h
+    if _STATE["seq"] is None and _STATE["batch"] is None:
+        return h
+    if h.ndim != 3:
+        return h
+    spec = [None, None, None]
+    if _STATE["batch"] is not None and h.shape[0] % max(_STATE["batch_div"], 1) == 0 and h.shape[0] >= _STATE["batch_div"]:
+        spec[0] = _STATE["batch"]
+    if _STATE["seq"] is not None and h.shape[1] % max(_STATE["seq_div"], 1) == 0 and h.shape[1] >= _STATE["seq_div"]:
+        spec[1] = _STATE["seq"]
+    if spec == [None, None, None]:
+        return h
+    return jax.lax.with_sharding_constraint(h, P(*spec))
+
+
+def constrain_moe(x: jax.Array) -> jax.Array:
+    """MoE dispatch/expert buffers (G, E, C, …): G over the data axes, E
+    over the TP axis. Without this GSPMD replicates G across data — every
+    device computes all groups for its local expert (16× expert-FLOP waste,
+    §Perf iteration 6)."""
+    if _STATE["variant"] == "none" or x.ndim < 3:
+        return x
+    spec = [None] * x.ndim
+    b = _STATE["batch"]
+    if b is not None and x.shape[0] % max(_STATE["batch_div"], 1) == 0 and x.shape[0] >= _STATE["batch_div"]:
+        spec[0] = b
+    tp = _STATE["seq"]
+    if tp is not None and x.shape[1] % max(_STATE["seq_div"], 1) == 0 and x.shape[1] >= _STATE["seq_div"]:
+        spec[1] = tp
+    if spec == [None] * x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_inner(x: jax.Array) -> jax.Array:
+    """Megatron-TP layout INSIDE a block: the last (feature/head) axis of a
+    (B, S, F) or (B, S, H, hd) activation shards over the TP axis, sequence
+    unsharded. Without this, a block-boundary SP constraint propagates
+    S-sharding through the whole block and GSPMD degenerates to full-weight
+    gathers (ZeRO-style) — see EXPERIMENTS.md §Perf iteration 1.
+    """
+    variant = _STATE["variant"]
+    if variant in ("none", "sp_only"):
+        return x
+    if variant == "inner_mlp" and x.ndim != 3:
+        return x  # only rank-3 (MLP/SSM hiddens), not attention heads
+    tp = _STATE["seq"]  # the TP axis name doubles as the SP seq axis
+    if tp is None or x.ndim < 3:
+        return x
+    div = max(_STATE["seq_div"], 1)
+    axis = x.ndim - 1 if x.ndim == 3 else x.ndim - 2  # F or H axis
+    if x.shape[axis] % div or x.shape[axis] < div:
+        return x
+    spec = [None] * x.ndim
+    if (
+        _STATE["batch"] is not None
+        and x.shape[0] % max(_STATE["batch_div"], 1) == 0
+        and x.shape[0] >= _STATE["batch_div"]
+    ):
+        spec[0] = _STATE["batch"]
+    spec[axis] = tp
+    return jax.lax.with_sharding_constraint(x, P(*spec))

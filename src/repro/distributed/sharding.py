@@ -1,0 +1,265 @@
+"""Path-rule sharding: param/adapter/batch/cache PartitionSpecs.
+
+Megatron-style TP on the ``model`` axis (col-parallel qkv/up/in_proj,
+row-parallel o/down/out_proj), vocab-sharded embeddings, expert-parallel
+MoE, channel-sharded SSM inner dim. Data parallel over ``("pod","data")``.
+Every rule checks divisibility and falls back to replication — a reduced
+smoke config on a 1-device mesh gets all-replicated specs automatically.
+
+NeuroAda deltas inherit their host matrix's ``d_out`` sharding
+(``delta_spec_from``) so the bypass compute stays local to the TP shard
+that owns those output neurons.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.adapt import path_str
+
+COL_KEYS = {
+    "wq", "wk", "wv", "wgate", "wup", "in_proj", "dt_proj", "head",
+    "self_wq", "self_wk", "self_wv", "cross_wq", "cross_wk", "cross_wv",
+}
+ROW_KEYS = {
+    "wo", "wdown", "out_proj", "x_proj", "bc_proj", "self_wo", "cross_wo",
+}
+EXPERT_KEYS = {"wgate", "wup", "wdown"}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def data_axes(mesh: Mesh):
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    return dp if dp else None
+
+
+def _put(spec: list, dim: int, axes, shape, mesh: Mesh):
+    """Assign axes to dim if divisible, else leave replicated."""
+    if axes is None:
+        return
+    if shape[dim] % _axis_size(mesh, axes) == 0:
+        spec[dim] = axes
+
+
+def spec_for_param(
+    name: str, shape: tuple[int, ...], mesh: Mesh, family: str, *, fsdp: bool = False
+) -> P:
+    """TP on ``model``; optional FSDP (ZeRO-3 layout) on the data axes.
+
+    NeuroAda's frozen base has NO optimizer state, so ZeRO exists purely to
+    fit *parameters*: enable ``fsdp`` only when TP-sharded params exceed
+    HBM (llama3-405b). Everything else runs TP-only — zero weight gathers
+    per step (EXPERIMENTS.md §Perf iteration 3)."""
+    parts = name.split("/")
+    leaf = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+    spec: list = [None] * len(shape)
+    fsdp = data_axes(mesh) if fsdp else None
+
+    def done():
+        return P(*spec)
+
+    if "model" not in mesh.axis_names:
+        return done()
+
+    if parent == "embed" and leaf == "w":
+        _put(spec, 0, "model", shape, mesh)  # vocab-sharded
+        _put(spec, 1, fsdp, shape, mesh)  # FSDP on d_model
+        return done()
+    if parent == "router":
+        return done()  # tiny, replicated
+    if leaf in ("w", "b"):
+        if family == "moe" and parent in EXPERT_KEYS and len(shape) >= 3:
+            _put(spec, -3 if leaf == "w" else -2, "model", shape, mesh)  # EP
+            if leaf == "w":
+                _put(spec, -2, fsdp, shape, mesh)  # FSDP on d_in
+            return done()
+        if parent in COL_KEYS:
+            _put(spec, -1, "model", shape, mesh)
+            if leaf == "w":
+                _put(spec, -2, fsdp, shape, mesh)
+            return done()
+        if parent in ROW_KEYS:
+            if leaf == "w":
+                _put(spec, -2, "model", shape, mesh)
+                _put(spec, -1, fsdp, shape, mesh)
+            return done()  # row-parallel bias replicated
+        return done()
+    if leaf == "conv_w" or leaf == "conv_b":
+        _put(spec, -1, "model", shape, mesh)  # per-channel
+        return done()
+    if leaf == "A_log":
+        if family == "ssm":
+            _put(spec, -2, "model", shape, mesh)  # (…, di, N)
+        else:
+            _put(spec, -1, "model", shape, mesh)  # mamba2 per-head
+        return done()
+    if leaf in ("skip_D", "gate_norm"):
+        _put(spec, -1, "model", shape, mesh)
+        return done()
+    return done()  # norms & everything else replicated
+
+
+def needs_fsdp(params, mesh: Mesh, hbm_budget_bytes: float = 8 * 2**30) -> bool:
+    """TP-only params per device > budget ⇒ shard weights over data too."""
+    total = 0
+    for l in jax.tree.leaves(params):
+        if l is None:
+            continue
+        n = 1
+        for d in l.shape:
+            n *= d
+        total += n * jnp.dtype(l.dtype).itemsize
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    return total / tp > hbm_budget_bytes
+
+
+def param_shardings(params, mesh: Mesh, family: str, *, fsdp: bool | None = None):
+    if fsdp is None:
+        fsdp = needs_fsdp(params, mesh)
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        name = path_str(path)
+        return NamedSharding(
+            mesh, spec_for_param(name, leaf.shape, mesh, family, fsdp=fsdp)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def delta_spec_from(wspec: P, idx_shape: tuple[int, ...]) -> P:
+    """Delta (…, k, d_out) inherits the host matrix's d_out sharding."""
+    parts = list(wspec) + [None] * (len(idx_shape) - len(wspec))
+    spec = list(parts[: len(idx_shape)])
+    wlist = list(wspec)
+    spec = [None] * len(idx_shape)
+    # leading stack dims copy the weight's leading spec entries
+    lead = len(idx_shape) - 2
+    for i in range(min(lead, max(len(wlist) - 2, 0))):
+        spec[i] = wlist[i]
+    spec[-2] = None  # k axis
+    spec[-1] = wlist[-1] if wlist else None  # d_out axis
+    return P(*spec)
+
+
+def adapter_shardings(params, indices, mesh: Mesh, family: str, *, fsdp: bool | None = None):
+    """Shardings for (indices, values) trees given the param tree."""
+    if fsdp is None:
+        fsdp = needs_fsdp(params, mesh)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    specs = {
+        path_str(p): spec_for_param(path_str(p), l.shape, mesh, family, fsdp=fsdp)
+        for p, l in flat_p
+    }
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        name = path_str(path)
+        wspec = specs.get(name, P())
+        return NamedSharding(mesh, delta_spec_from(wspec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, indices)
+
+
+def like_tree(template_shardings, tree):
+    """Map an existing sharding tree onto a same-structure tree (opt states)."""
+    return jax.tree.map(
+        lambda s, _: s, template_shardings, tree, is_leaf=lambda x: x is None
+    )
+
+
+# ------------------------------------------------------------ batch / cache
+
+
+def _dp_or_none(dim_size: int, mesh: Mesh):
+    dp = data_axes(mesh)
+    if dp and dim_size % _axis_size(mesh, dp) == 0:
+        return dp
+    return None
+
+
+def _seq_axes(dim_size: int, mesh: Mesh, batch_taken: bool):
+    """Context-shard a sequence dim: model axis, plus data axes if the
+    batch could not take them (long_500k B=1)."""
+    axes = []
+    if not batch_taken:
+        dp = data_axes(mesh)
+        if dp:
+            axes.extend(dp)
+    if "model" in mesh.axis_names:
+        axes.append("model")
+    axes = tuple(axes)
+    if axes and dim_size % _axis_size(mesh, axes) == 0:
+        return axes
+    if "model" in mesh.axis_names and dim_size % _axis_size(mesh, "model") == 0:
+        return "model"
+    return None
+
+
+def batch_specs(batch_tree, mesh: Mesh, cfg=None):
+    """Shardings for a (possibly nested, incl. 'cache') batch spec tree."""
+
+    def cache_spec(key: str, leaf):
+        shape = leaf.shape
+        if key in ("k", "v", "shared_k", "shared_v", "self_k", "self_v",
+                   "cross_k", "cross_v"):
+            # (L|G, B, S, KV, hd)
+            spec = [None] * len(shape)
+            bdp = _dp_or_none(shape[1], mesh)
+            spec[1] = bdp
+            spec[2] = _seq_axes(shape[2], mesh, batch_taken=bdp is not None)
+            return P(*spec)
+        if key == "conv":
+            spec = [None] * len(shape)
+            spec[-3] = _dp_or_none(shape[-3], mesh)  # B
+            if "model" in mesh.axis_names and shape[-1] % _axis_size(mesh, "model") == 0:
+                spec[-1] = "model"  # channels
+            return P(*spec)
+        if key == "ssm":
+            spec = [None] * len(shape)
+            if len(shape) == 4:  # mamba1 (L,B,di,N)
+                spec[1] = _dp_or_none(shape[1], mesh)
+                if "model" in mesh.axis_names and shape[2] % _axis_size(mesh, "model") == 0:
+                    spec[2] = "model"
+            else:  # zamba2 (G,per,B,H,P,N)
+                spec[2] = _dp_or_none(shape[2], mesh)
+                if "model" in mesh.axis_names and shape[3] % _axis_size(mesh, "model") == 0:
+                    spec[3] = "model"
+            return P(*spec)
+        return P()
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        keys = [str(p.key) if hasattr(p, "key") else str(p.idx) for p in path]
+        if "cache" in keys:
+            return NamedSharding(mesh, cache_spec(keys[-1], leaf))
+        key = keys[-1]
+        shape = leaf.shape
+        if key in ("tokens", "targets", "loss_mask"):
+            return NamedSharding(mesh, P(_dp_or_none(shape[0], mesh), None))
+        if key in ("patches", "frames"):
+            return NamedSharding(mesh, P(_dp_or_none(shape[0], mesh), None, None))
+        if key in ("positions", "mrope_pos"):
+            return NamedSharding(mesh, P(None, _dp_or_none(shape[1], mesh), None))
+        if key == "token":
+            return NamedSharding(mesh, P(_dp_or_none(shape[0], mesh)))
+        if key in ("pos", "answer", "answer_pos"):
+            return NamedSharding(mesh, P(*([None] * len(shape))))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)

@@ -1,0 +1,166 @@
+"""jit'd public wrappers around the Pallas kernels, with backend dispatch.
+
+Backends (``REPRO_KERNEL_BACKEND`` env var or :func:`set_backend`):
+
+* ``jnp``              — pure-jnp oracle path (default; XLA fuses it. The
+                          only executable path on this CPU container for
+                          real workloads).
+* ``pallas``           — Mosaic-compiled kernels (TPU target).
+* ``pallas_interpret`` — kernel bodies interpreted in Python (CPU
+                          validation; used by the test sweeps).
+
+All wrappers accept arbitrary leading batch dims and handle tile padding.
+The Pallas paths carry a custom VJP that reproduces the paper's sparse
+backward: dval is a (k, d_out) reduction kernel, dx a k·d_out scatter-add.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.fused_linear import fused_linear_pallas
+from repro.kernels.sparse_delta import sparse_delta_dval_pallas, sparse_delta_pallas
+from repro.kernels.topk_select import topk_select_pallas
+
+_BACKENDS = ("jnp", "pallas", "pallas_interpret")
+_backend = os.environ.get("REPRO_KERNEL_BACKEND", "jnp")
+
+
+def set_backend(name: str) -> None:
+    global _backend
+    if name not in _BACKENDS:
+        raise ValueError(f"backend {name!r} not in {_BACKENDS}")
+    _backend = name
+
+
+def get_backend() -> str:
+    return _backend
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+# ---------------------------------------------------------------- delta apply
+
+
+@jax.custom_vjp
+def _delta_apply_pallas(x2d, idx, val, interpret):
+    bm = 128 if x2d.shape[0] >= 128 else 8
+    xp, m = _pad_to(x2d, 0, bm)
+    ip, n = _pad_to(idx, 1, 128)
+    vp, _ = _pad_to(val, 1, 128)
+    y = sparse_delta_pallas(xp, ip, vp, block_m=bm, interpret=interpret)
+    return y[:m, :n]
+
+
+def _delta_fwd(x2d, idx, val, interpret):
+    return _delta_apply_pallas(x2d, idx, val, interpret), (x2d, idx, val, interpret)
+
+
+def _delta_bwd(res, dy):
+    x2d, idx, val, interpret = res
+    bm = 128 if x2d.shape[0] >= 128 else 8
+    xp, _ = _pad_to(x2d, 0, bm)
+    dyp, _ = _pad_to(dy, 0, bm)
+    ip, n = _pad_to(idx, 1, 128)
+    dyp2, _ = _pad_to(dyp, 1, 128)
+    dval = sparse_delta_dval_pallas(xp, ip, dyp2, block_m=bm, interpret=interpret)
+    dval = dval[:, :n].astype(val.dtype)
+    dx = ref.sparse_delta_dx_ref(idx, val, dy, x2d.shape[1]).astype(x2d.dtype)
+    didx = np.zeros(idx.shape, dtype=jax.dtypes.float0)
+    return dx, didx, dval, None
+
+
+_delta_apply_pallas.defvjp(_delta_fwd, _delta_bwd)
+
+
+def delta_apply(x: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
+    """x (..., d_in) × Delta (k, d_out) -> (..., d_out)."""
+    if _backend == "jnp":
+        xg = x[..., idx]
+        return jnp.sum(xg * val.astype(x.dtype), axis=-2)
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    y = _delta_apply_pallas(x2d, idx, val, _backend == "pallas_interpret")
+    return y.reshape(*lead, idx.shape[-1])
+
+
+# --------------------------------------------------------------- fused linear
+
+
+@jax.custom_vjp
+def _fused_linear_pallas(x2d, w, idx, val, bias, interpret):
+    bm = 128 if x2d.shape[0] >= 128 else 8
+    xp, m = _pad_to(x2d, 0, bm)
+    y = fused_linear_pallas(xp, w, idx, val, bias, block_m=bm, interpret=interpret)
+    return y[:m]
+
+
+def _fused_fwd(x2d, w, idx, val, bias, interpret):
+    y = _fused_linear_pallas(x2d, w, idx, val, bias, interpret)
+    return y, (x2d, w, idx, val, bias, interpret)
+
+
+def _fused_bwd(res, dy):
+    x2d, w, idx, val, bias, interpret = res
+    # dx: dense transpose + sparse scatter; dw is produced for completeness
+    # but DCE'd when W is frozen (the NeuroAda training path).
+    dx = jnp.dot(dy, w.T) + ref.sparse_delta_dx_ref(idx, val, dy, x2d.shape[1]).astype(x2d.dtype)
+    dw = jnp.dot(x2d.T, dy).astype(w.dtype)
+    bm = 128 if x2d.shape[0] >= 128 else 8
+    xp, _ = _pad_to(x2d, 0, bm)
+    dyp, _ = _pad_to(dy, 0, bm)
+    ip, n = _pad_to(idx, 1, 128)
+    dyp2, _ = _pad_to(dyp, 1, 128)
+    dval = sparse_delta_dval_pallas(xp, ip, dyp2, block_m=bm, interpret=interpret)[
+        :, :n
+    ].astype(val.dtype)
+    dbias = None if bias is None else jnp.sum(dy, axis=0).astype(bias.dtype)
+    didx = np.zeros(idx.shape, dtype=jax.dtypes.float0)
+    return dx, dw, didx, dval, dbias, None
+
+
+_fused_linear_pallas.defvjp(_fused_fwd, _fused_bwd)
+
+
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    idx: jax.Array,
+    val: jax.Array,
+    bias: jax.Array | None = None,
+) -> jax.Array:
+    """y = x@W (+bias) + delta, fused on the Pallas backends."""
+    if _backend == "jnp":
+        y = jnp.dot(x, w)
+        y = y + delta_apply(x, idx, val)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    y = _fused_linear_pallas(x2d, w, idx, val, bias, _backend == "pallas_interpret")
+    return y.reshape(*lead, w.shape[-1])
+
+
+# ----------------------------------------------------------------- topk select
+
+
+def topk_select(w: jax.Array, k: int) -> jax.Array:
+    """Offline Phase-1 selection; (d_in, d_out) -> (k, d_out) int32."""
+    if _backend == "jnp":
+        return ref.topk_select_ref(w, k)
+    return topk_select_pallas(w, k, interpret=_backend == "pallas_interpret")

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the allclose sweeps in tests/kernels/ and the
+default execution path on backends without Mosaic (this CPU container).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_delta_ref(x: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
+    """yΔ[m, o] = Σ_j val[j, o] · x[m, idx[j, o]].
+
+    x: (M, d_in); idx/val: (k, d_out) -> (M, d_out).
+    """
+    xg = x[:, idx]  # (M, k, d_out)
+    return jnp.sum(xg * val.astype(x.dtype), axis=-2)
+
+
+def sparse_delta_dval_ref(x: jax.Array, idx: jax.Array, dy: jax.Array) -> jax.Array:
+    """dval[j, o] = Σ_m dy[m, o] · x[m, idx[j, o]]."""
+    xg = x[:, idx]  # (M, k, d_out)
+    return jnp.einsum("mko,mo->ko", xg.astype(jnp.float32), dy.astype(jnp.float32))
+
+
+def sparse_delta_dx_ref(idx: jax.Array, val: jax.Array, dy: jax.Array, d_in: int) -> jax.Array:
+    """dx[m, i] = Σ_{(j,o): idx[j,o]=i} dy[m,o]·val[j,o] — a k·d_out scatter-add."""
+    m = dy.shape[0]
+    upd = dy[:, None, :].astype(jnp.float32) * val[None].astype(jnp.float32)  # (M,k,d_out)
+    dx = jnp.zeros((m, d_in), jnp.float32)
+    return dx.at[:, idx].add(upd)
+
+
+def fused_linear_ref(
+    x: jax.Array,
+    w: jax.Array,
+    idx: jax.Array,
+    val: jax.Array,
+    bias: jax.Array | None = None,
+) -> jax.Array:
+    """y = x@W (+bias) + sparse delta, in float32 accumulation."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    y = y + sparse_delta_ref(x, idx, val).astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def topk_select_ref(w: jax.Array, k: int) -> jax.Array:
+    """Per-output-unit top-k |magnitude| indices; (d_in, d_out) -> (k, d_out)."""
+    _, idx = jax.lax.top_k(jnp.abs(w.astype(jnp.float32)).T, k)  # (d_out, k)
+    return idx.T.astype(jnp.int32)

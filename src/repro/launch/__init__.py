@@ -1,0 +1,5 @@
+# NOTE: launch.dryrun must be imported FIRST in a process that needs the
+# 512-device platform (it sets XLA_FLAGS before any jax import).
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh"]

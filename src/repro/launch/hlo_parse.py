@@ -1,0 +1,318 @@
+"""Structural HLO analysis for the roofline: collective bytes with
+while-loop trip multipliers.
+
+``collective_bytes(hlo_text)`` walks the computation graph: per-computation
+collective wire-bytes (ring model: all-reduce 2·s·(g-1)/g, all-gather /
+reduce-scatter / all-to-all s·(g-1)/g, collective-permute s), then
+multiplies computations reachable through ``while`` bodies by the loop trip
+count recovered from the paired condition computation's ``compare(…,
+constant(N)), direction=LT`` pattern (how lax.scan lowers). This is how
+layer-stacked scans contribute L× their body's collectives.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _bytes_of_type(typestr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list = field(default_factory=list)
+    coll_bytes: dict = None
+    whiles: list = None  # (cond_name, body_name)
+
+
+def _split_computations(text: str) -> tuple[dict[str, Computation], str]:
+    """Split HLO text into computations; returns (comps, entry_name).
+
+    A computation starts at column 0 (optionally ``ENTRY``) with
+    ``name (params…) -> type {`` — params/return may contain nested tuple
+    parens, so we only anchor on the leading name and the trailing ``{``.
+    Instruction lines are indented.
+    """
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            if line.rstrip().endswith("{") and "->" in line:
+                m = _COMP_NAME_RE.match(line.strip())
+                if m:
+                    cur = Computation(m.group(1))
+                    comps[cur.name] = cur
+                    if line.startswith("ENTRY"):
+                        entry = cur.name
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        elif cur is not None:
+            stripped = line.strip()
+            if stripped and stripped != "}":
+                cur.lines.append(stripped)
+    return comps, entry
+
+
+def _wire_bytes(op: str, size: int, group: int) -> float:
+    """Ring-model wire bytes given the HLO *result* size of the op."""
+    if group <= 1:
+        return 0.0
+    frac = (group - 1) / group
+    if op == "all-reduce":
+        return 2.0 * size * frac
+    if op == "collective-permute":
+        return float(size)
+    if op == "reduce-scatter":
+        return size * (group - 1)  # result is the scattered (small) shard
+    return size * frac  # all-gather / all-to-all: result is the large buffer
+
+
+_TRIP_CFG_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _analyze_comp(comp: Computation, total_devices: int):
+    comp.coll_bytes = {op: 0.0 for op in _COLLECTIVES}
+    comp.whiles = []
+    for line in comp.lines:
+        if " while(" in line:
+            m = _WHILE_RE.search(line)
+            if m:
+                trip = None
+                tm = _TRIP_CFG_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                comp.whiles.append((m.group(1), m.group(2), trip))
+            continue
+        for op in _COLLECTIVES:
+            # "= TYPE op(" — find the op token AFTER the "=" so instruction
+            # names like %all-gather.32 don't shadow the type span.
+            eq = line.find("= ")
+            if eq < 0:
+                continue
+            pos = line.find(f" {op}(", eq)
+            if pos < 0:
+                pos = line.find(f" {op}-start(", eq)
+            if pos < 0:
+                continue
+            typestr = line[eq + 2 : pos]
+            size = _bytes_of_type(typestr)
+            if op == "all-gather":
+                # result is the gathered (large) buffer; each device
+                # contributes size/g — ring wire bytes handled in _wire_bytes
+                pass
+            g = total_devices
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                g = len(gm.group(1).split(","))
+            else:
+                gm2 = _GROUPS_V2_RE.search(line)
+                if gm2:
+                    g = int(gm2.group(2))
+            comp.coll_bytes[op] += _wire_bytes(op, size, g)
+            break
+
+
+def _trip_count(cond: Computation | None) -> int:
+    if cond is None:
+        return 1
+    best = 1
+    for line in cond.lines:
+        if "compare" in line and "direction=LT" in line:
+            for line2 in cond.lines:
+                m = _TRIP_RE.search(line2)
+                if m:
+                    best = max(best, int(m.group(1)))
+    return best
+
+
+# ------------------------------------------------- structural flops/traffic
+
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PARAM_DECL_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\)|[\w\[\],\{\} ]+))")
+
+# ops that do no real HBM traffic of their own
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "after-all", "iota", "partition-id", "replica-id",
+}
+
+
+def _shape_dims(typestr: str) -> list[int]:
+    m = _SHAPE_RE.search(typestr)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def structural_costs(hlo_text: str, total_devices: int) -> dict:
+    """While-aware structural costs from scheduled HLO text:
+
+    * ``flops``   — 2·M·N·K over every dot (MXU work; elementwise VPU work
+      is not counted — T_compute is matmul time),
+    * ``traffic`` — Σ operand+result bytes over non-trivial instructions
+      (post-fusion, so each fusion ≈ one read of its inputs + one write),
+    * collectives as in :func:`collective_bytes`.
+
+    All three multiply while bodies by their known_trip_count. Values are
+    PER DEVICE (the module is the per-partition program).
+    """
+    comps, entry = _split_computations(hlo_text)
+    # global name -> result type map (instruction defs + computation params)
+    types: dict[str, str] = {}
+    for comp in comps.values():
+        for line in comp.lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                types[m.group(1)] = m.group(2)
+
+    per_comp: dict[str, dict] = {}
+    for name, comp in comps.items():
+        flops = 0.0
+        traffic = 0.0
+        whiles = []
+        for line in comp.lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            res_name, res_type, op = m.groups()
+            if op == "while":
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    tm = _TRIP_CFG_RE.search(line)
+                    whiles.append(
+                        (wm.group(1), wm.group(2), int(tm.group(1)) if tm else None)
+                    )
+                continue
+            if op in _NO_TRAFFIC:
+                continue
+            res_bytes = _bytes_of_type(res_type)
+            # operand bytes: names inside the first (...) arg list
+            paren = line.find(op + "(")
+            args_str = line[paren + len(op) + 1 :]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(args_str):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            opnames = _OPERAND_RE.findall(args_str[:end])
+            op_bytes = sum(_bytes_of_type(types.get(o, "")) for o in opnames)
+            traffic += res_bytes + op_bytes
+            if op == "dot":
+                cm = _CONTRACT_RE.search(line)
+                k = 1
+                if cm and opnames:
+                    lhs_dims = _shape_dims(types.get(opnames[0], ""))
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(lhs_dims):
+                            k *= lhs_dims[int(ci)]
+                res_elems = 1
+                for d in _shape_dims(res_type):
+                    res_elems *= d
+                flops += 2.0 * res_elems * k
+        per_comp[name] = {"flops": flops, "traffic": traffic, "whiles": whiles}
+
+    memo: dict[str, tuple[float, float]] = {}
+
+    def total_of(name: str, stack=()) -> tuple[float, float]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in per_comp:
+            return (0.0, 0.0)
+        c = per_comp[name]
+        f, t = c["flops"], c["traffic"]
+        for cond, body, trip_cfg in c["whiles"]:
+            trips = trip_cfg if trip_cfg else _trip_count(comps.get(cond))
+            bf, bt = total_of(body, stack + (name,))
+            f += trips * bf
+            t += trips * bt
+        memo[name] = (f, t)
+        return (f, t)
+
+    if not entry:
+        entry = list(comps)[-1] if comps else ""
+    flops, traffic = total_of(entry)
+    coll = collective_bytes(hlo_text, total_devices)
+    return {"flops": flops, "traffic": traffic, "collectives": coll}
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> dict:
+    """-> {op: per_device_wire_bytes, "total": …}.
+
+    The optimized module is the per-partition program, and the ring model
+    in :func:`_wire_bytes` gives bytes ONE participant sends — so every
+    figure here is already the per-chip wire-byte share. ``per_device`` is
+    kept as an alias of ``total`` for backward compatibility.
+    """
+    comps, entry_found = _split_computations(hlo_text)
+    for c in comps.values():
+        _analyze_comp(c, total_devices)
+
+    memo: dict[str, dict] = {}
+
+    def total_of(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return {op: 0.0 for op in _COLLECTIVES}
+        comp = comps[name]
+        out = dict(comp.coll_bytes)
+        for cond_name, body_name, trip_cfg in comp.whiles:
+            trips = trip_cfg if trip_cfg else _trip_count(comps.get(cond_name))
+            sub = total_of(body_name, stack + (name,))
+            for op in _COLLECTIVES:
+                out[op] += trips * sub[op]
+        memo[name] = out
+        return out
+
+    entry = entry_found
+    if not entry:
+        for name in comps:
+            if name.startswith("main") or ".main" in name:
+                entry = name
+    if not entry and comps:
+        entry = list(comps)[-1]
+    per_op = total_of(entry)
+    total = sum(per_op.values())
+    return dict(per_op, total=total, per_device=total, entry=entry)

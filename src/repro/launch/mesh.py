@@ -1,0 +1,31 @@
+"""Production meshes. A FUNCTION, not a module constant — importing this
+module never touches jax device state (device count is locked at first
+jax init, and only dryrun.py is allowed to fake 512 devices).
+
+Single pod: (data=16, model=16) = 256 chips (v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is a
+second data-parallel tier (grad all-reduce crosses DCI), proving the specs
+shard coherently across pods.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist (tests / CPU examples): 1-D data mesh."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",))
+
+
+# TPU v5e structural constants for the roofline (DESIGN.md §5).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per direction)

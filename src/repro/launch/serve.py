@@ -1,0 +1,53 @@
+"""Serving launcher: load (merged) params, serve batched requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      [--params merged.npz] --prompts "1,17,25;1,40,41" --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, PAPER_ARCH_IDS, get_config, reduced
+from repro.models import get_model
+from repro.serve.engine import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=ARCH_IDS + PAPER_ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--params", default="", help="npz from train --export")
+    ap.add_argument("--prompts", default="1,17,25;1,40,41,42")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = get_model(cfg)
+    if args.params:
+        from repro.checkpoint.manager import load_pytree
+
+        params = jax.tree.map(jax.numpy.asarray, load_pytree(args.params))
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+
+    engine = ServeEngine(
+        model, params, slots=args.slots, max_len=args.max_len,
+        temperature=args.temperature,
+    )
+    for p in args.prompts.split(";"):
+        engine.submit([int(t) for t in p.split(",") if t], max_new=args.max_new)
+    for req in engine.run_to_completion():
+        print(f"req{req.rid}: prompt={req.prompt} -> {req.out}")
+
+
+if __name__ == "__main__":
+    main()

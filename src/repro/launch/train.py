@@ -1,0 +1,100 @@
+"""Training launcher: the production entry point.
+
+Single-host CPU runs execute directly; on a TPU pod slice each host runs
+this same script (jax.distributed initializes from the TPU environment)
+and the data loader shards by host automatically. NeuroAda is the default
+PEFT; any method from peft/api.py is selectable.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+      --task reasoning --steps 200 --peft neuroada --k 1 \
+      --ckpt /tmp/run1 [--resume]
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import ARCH_IDS, PAPER_ARCH_IDS, PeftConfig, TrainConfig, get_config, reduced
+from repro.data.loader import DataLoader
+from repro.models import get_model
+from repro.peft import get_peft, stats
+from repro.train.trainer import Trainer
+
+log = logging.getLogger("repro.launch.train")
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=ARCH_IDS + PAPER_ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized family member (full configs need a pod)")
+    ap.add_argument("--peft", default="neuroada",
+                    choices=("neuroada", "lora", "bitfit", "masked", "full"))
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--strategy", default="magnitude")
+    ap.add_argument("--lora-rank", type=int, default=8)
+    ap.add_argument("--task", default="reasoning",
+                    choices=("lm", "reasoning", "arithmetic"))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=("none", "full", "dots"))
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--export", default="", help="save merged params here")
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    args = parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    peft = get_peft(PeftConfig(
+        method=args.peft, k=args.k, strategy=args.strategy,
+        lora_rank=args.lora_rank,
+    ))
+    tcfg = TrainConfig(
+        learning_rate=args.lr, steps=args.steps, seed=args.seed,
+        microbatches=args.microbatches, remat=args.remat,
+        checkpoint_dir=args.ckpt, checkpoint_every=100 if args.ckpt else 0,
+    )
+    trainer = Trainer(model, peft, tcfg, params)
+    st = stats(params, trainer.state.trainable)
+    log.info("arch=%s peft=%s trainable=%s/%s (%.4f%%)",
+             cfg.name, args.peft, f"{st['trainable']:,}", f"{st['total']:,}",
+             100 * st["fraction"])
+
+    start = trainer.try_resume() if args.resume else 0
+    hosts = jax.process_count()
+    data = DataLoader(
+        args.task, cfg.vocab_size, args.batch, args.seq, seed=args.seed,
+        host_id=jax.process_index(), host_count=hosts, start_step=start,
+    )
+    hist = trainer.run(data, steps=args.steps)
+    data.close()
+    log.info("done: loss %.4f -> %.4f; stragglers=%d skipped=%d",
+             hist[0]["loss"], hist[-1]["loss"],
+             len(trainer.monitor.flagged), trainer.nan_guard.skipped)
+    if args.export:
+        from repro.checkpoint.manager import save_pytree
+
+        save_pytree(args.export, trainer.merged_params(),
+                    {"arch": cfg.name, "peft": args.peft})
+        log.info("merged params exported to %s", args.export)
+    return hist
+
+
+if __name__ == "__main__":
+    main()

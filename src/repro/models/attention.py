@@ -1,0 +1,190 @@
+"""GQA attention: dense path, chunked online-softmax (flash) path, decode.
+
+The flash path is the memory-roofline workhorse for 32k prefill: a
+``lax.scan`` over KV chunks with running (max, denom, acc) keeps live
+activation memory at O(S·chunk) instead of O(S²). It is numerically the
+same softmax (tests compare against the dense path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_MASKED = -1e30
+
+
+def _grouped(q: jax.Array, num_kv: int) -> jax.Array:
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, hd)
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset=0,
+    kv_valid_len=None,
+) -> jax.Array:
+    """q (B,Sq,H,hd); k,v (B,Skv,Hkv,hd) -> (B,Sq,H,hd). f32 softmax."""
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    qg = _grouped(q, hkv)
+    scale = hd**-0.5
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    mask = None
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        mask = qpos[:, None] >= jnp.arange(skv)[None, :]  # (Sq,Skv)
+        mask = mask[None, None, None]
+    if kv_valid_len is not None:
+        vl = jnp.asarray(kv_valid_len)
+        vl = vl.reshape(-1, 1, 1, 1, 1) if vl.ndim else vl  # (B,1,1,1,1) or scalar
+        vmask = jnp.arange(skv)[None, None, None, None, :] < vl
+        mask = vmask if mask is None else (mask & vmask)
+    if mask is not None:
+        s = jnp.where(mask, s, _MASKED)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _flash_fwd_scan(qg, k, v, causal, q_offset, block):
+    """Online-softmax forward. qg (B,Hkv,G,Sq,hd) f32; k,v (B,Skv,Hkv,hd).
+
+    Returns out (B,Hkv,G,Sq,hd) f32 and logsumexp L (B,Hkv,G,Sq) f32.
+    """
+    b, hkv, g, sq, hd = qg.shape
+    skv = k.shape[1]
+    nc = skv // block
+    scale = hd**-0.5
+    kc = k.reshape(b, nc, block, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, block, hkv, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nc) * block
+    qpos = q_offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, start = xs
+        s = jnp.einsum("bkgqh,bskh->bkgqs", qg, kb.astype(jnp.float32)) * scale
+        if causal:
+            valid = qpos[:, None] >= (start + jnp.arange(block))[None, :]
+            s = jnp.where(valid[None, None, None], s, _MASKED)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        if causal:
+            p = jnp.where(valid[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), _MASKED, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, starts))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_core(qg, k, v, causal, q_offset, block):
+    out, _ = _flash_fwd_scan(qg, k, v, causal, q_offset, block)
+    return out
+
+
+def _flash_core_fwd(qg, k, v, causal, q_offset, block):
+    out, lse = _flash_fwd_scan(qg, k, v, causal, q_offset, block)
+    return out, (qg, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, q_offset, block, res, dout):
+    """FlashAttention-2 backward: recompute p per KV block; O(S·block) mem."""
+    qg, k, v, out, lse = res
+    b, hkv, g, sq, hd = qg.shape
+    skv = k.shape[1]
+    nc = skv // block
+    scale = hd**-0.5
+    dout = dout.astype(jnp.float32)
+    delta = jnp.sum(dout * out, axis=-1)  # (B,Hkv,G,Sq)
+    kc = k.reshape(b, nc, block, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, block, hkv, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nc) * block
+    qpos = q_offset + jnp.arange(sq)
+
+    def step(dq, xs):
+        kb, vb, start = xs
+        kbf = kb.astype(jnp.float32)
+        vbf = vb.astype(jnp.float32)
+        s = jnp.einsum("bkgqh,bskh->bkgqs", qg, kbf) * scale
+        if causal:
+            valid = qpos[:, None] >= (start + jnp.arange(block))[None, :]
+            s = jnp.where(valid[None, None, None], s, _MASKED)
+        p = jnp.exp(s - lse[..., None])  # (B,Hkv,G,Sq,block)
+        if causal:
+            p = jnp.where(valid[None, None, None], p, 0.0)
+        dv_b = jnp.einsum("bkgqs,bkgqh->bskh", p, dout)
+        dp = jnp.einsum("bkgqh,bskh->bkgqs", dout, vbf)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bkgqs,bskh->bkgqh", ds, kbf)
+        dk_b = jnp.einsum("bkgqs,bkgqh->bskh", ds, qg)
+        return dq, (dk_b, dv_b)
+
+    dq0 = jnp.zeros_like(qg)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kc, vc, starts))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, hd).astype(k.dtype)
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset=0,
+    block: int = 512,
+) -> jax.Array:
+    """Chunked online-softmax attention with a flash backward (custom VJP):
+    live memory is O(S·block) in both passes — never S²."""
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if skv % block:
+        raise ValueError(f"Skv={skv} must be a multiple of block={block}")
+    qg = _grouped(q, hkv).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+    out = _flash_core(qg, k, v, causal, q_offset, block)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cfg,
+    *,
+    causal: bool,
+    q_offset=0,
+    kv_valid_len=None,
+) -> jax.Array:
+    """Dispatch: decode/small -> dense; long sequences -> flash scan."""
+    skv = k.shape[1]
+    sq = q.shape[1]
+    if sq > 1 and kv_valid_len is None and skv >= cfg.flash_threshold:
+        return flash_attention(
+            q, k, v, causal=causal, q_offset=q_offset, block=cfg.flash_block
+        )
+    return dense_attention(
+        q, k, v, causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len
+    )

@@ -1,0 +1,239 @@
+"""seamless-m4t-large-v2 backbone: 24L encoder + 24L decoder w/ cross-attn.
+
+The speech frontend is a stub per the brief — inputs are precomputed frame
+embeddings (B, S_enc, d_model). Encoder is bidirectional; decoder is causal
+self-attention + cross-attention to the encoder output. Serving caches the
+decoder self KV and the per-layer cross K/V (computed once at prefill).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain, constrain_inner
+from repro.models.attention import attention
+from repro.models.layers import (
+    alinear,
+    apply_rope,
+    cache_update,
+    compute_dtype,
+    decode_positions,
+    init_linear,
+    init_norm,
+    rms_norm,
+    softmax_cross_entropy,
+)
+
+# Decode-mode encoder length (frames) — fixed context for serve shapes.
+DECODE_ENC_LEN = 4096
+
+
+def _lin_stack(key, L, i, o, dt):
+    w = (jax.random.normal(key, (L, i, o), jnp.float32) * i**-0.5).astype(dt)
+    return {"w": w}
+
+
+def init_params(cfg, rng):
+    dt = compute_dtype(cfg)
+    Le, Ld = cfg.encoder_layers, cfg.num_layers
+    D, F = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    V = cfg.padded_vocab
+    ks = jax.random.split(rng, 20)
+
+    enc = {
+        "attn_norm": jnp.ones((Le, D), dt),
+        "wq": _lin_stack(ks[0], Le, D, H * hd, dt),
+        "wk": _lin_stack(ks[1], Le, D, KV * hd, dt),
+        "wv": _lin_stack(ks[2], Le, D, KV * hd, dt),
+        "wo": _lin_stack(ks[3], Le, H * hd, D, dt),
+        "mlp_norm": jnp.ones((Le, D), dt),
+        "wgate": _lin_stack(ks[4], Le, D, F, dt),
+        "wup": _lin_stack(ks[5], Le, D, F, dt),
+        "wdown": _lin_stack(ks[6], Le, F, D, dt),
+    }
+    dec = {
+        "self_norm": jnp.ones((Ld, D), dt),
+        "self_wq": _lin_stack(ks[7], Ld, D, H * hd, dt),
+        "self_wk": _lin_stack(ks[8], Ld, D, KV * hd, dt),
+        "self_wv": _lin_stack(ks[9], Ld, D, KV * hd, dt),
+        "self_wo": _lin_stack(ks[10], Ld, H * hd, D, dt),
+        "cross_norm": jnp.ones((Ld, D), dt),
+        "cross_wq": _lin_stack(ks[11], Ld, D, H * hd, dt),
+        "cross_wk": _lin_stack(ks[12], Ld, D, KV * hd, dt),
+        "cross_wv": _lin_stack(ks[13], Ld, D, KV * hd, dt),
+        "cross_wo": _lin_stack(ks[14], Ld, H * hd, D, dt),
+        "mlp_norm": jnp.ones((Ld, D), dt),
+        "wgate": _lin_stack(ks[15], Ld, D, F, dt),
+        "wup": _lin_stack(ks[16], Ld, D, F, dt),
+        "wdown": _lin_stack(ks[17], Ld, F, D, dt),
+    }
+    return {
+        "embed": {"w": (jax.random.normal(ks[18], (V, D), jnp.float32) * 0.02).astype(dt)},
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_norm": init_norm(D, dt),
+        "final_norm": init_norm(D, dt),
+        "head": init_linear(ks[19], D, V, dt),
+    }
+
+
+def _a(adapters, key):
+    return adapters.get(key, {}) if isinstance(adapters, dict) else {}
+
+
+def _mha(cfg, p, a, prefix, xq, xkv, positions_q, positions_kv, *, causal):
+    b, sq, _ = xq.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = constrain_inner(alinear(p, a, prefix + "wq", xq).reshape(b, sq, H, hd))
+    k = constrain_inner(alinear(p, a, prefix + "wk", xkv).reshape(b, xkv.shape[1], KV, hd))
+    v = constrain_inner(alinear(p, a, prefix + "wv", xkv).reshape(b, xkv.shape[1], KV, hd))
+    if positions_q is not None:
+        q = apply_rope(q, positions_q, cfg.rope_theta)
+        k = apply_rope(k, positions_kv, cfg.rope_theta)
+    o = attention(q, k, v, cfg, causal=causal)
+    return alinear(p, a, prefix + "wo", o.reshape(b, sq, -1)), k, v
+
+
+def encode(cfg, params, adapters, frames):
+    dt = compute_dtype(cfg)
+    h = frames.astype(dt)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(hh, xs):
+        p, a = xs
+        hh = constrain(hh)
+        x = rms_norm(hh, p["attn_norm"], cfg.norm_eps)
+        o, _, _ = _mha(cfg, p, a, "", x, x, positions, positions, causal=False)
+        hh = hh + o
+        x = rms_norm(hh, p["mlp_norm"], cfg.norm_eps)
+        y = constrain_inner(jax.nn.silu(alinear(p, a, "wgate", x)) * alinear(p, a, "wup", x))
+        return hh + alinear(p, a, "wdown", y), None
+
+    h, _ = jax.lax.scan(body, h, (params["enc_blocks"], _a(adapters, "enc_blocks")))
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _decode_stack(cfg, params, adapters, h, enc_out, positions, *, collect_cache=False):
+    b = h.shape[0]
+    se = enc_out.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(se)[None, :], (b, se))
+
+    def body(hh, xs):
+        p, a = xs
+        hh = constrain(hh)
+        x = rms_norm(hh, p["self_norm"], cfg.norm_eps)
+        o, sk, sv = _mha(cfg, p, a, "self_", x, x, positions, positions, causal=True)
+        hh = hh + o
+        x = rms_norm(hh, p["cross_norm"], cfg.norm_eps)
+        o, ckx, cvx = _mha(
+            cfg, p, a, "cross_", x, enc_out, None, None, causal=False
+        )
+        hh = hh + o
+        x = rms_norm(hh, p["mlp_norm"], cfg.norm_eps)
+        y = constrain_inner(jax.nn.silu(alinear(p, a, "wgate", x)) * alinear(p, a, "wup", x))
+        hh = hh + alinear(p, a, "wdown", y)
+        ys = (sk, sv, ckx, cvx) if collect_cache else None
+        return hh, ys
+
+    return jax.lax.scan(body, h, (params["dec_blocks"], _a(adapters, "dec_blocks")))
+
+
+def forward_train(cfg, params, adapters, batch, *, remat="none"):
+    dt = compute_dtype(cfg)
+    enc_out = encode(cfg, params, adapters, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h, _ = _decode_stack(cfg, params, adapters, h, enc_out, positions)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return jnp.dot(h, params["head"]["w"]), jnp.float32(0.0)
+
+
+def loss_fn(cfg, params, adapters, batch, *, remat="none"):
+    logits, _ = forward_train(cfg, params, adapters, batch, remat=remat)
+    ce = softmax_cross_entropy(
+        logits[:, :-1], batch["targets"][:, 1:], batch.get("loss_mask"),
+        real_vocab=cfg.vocab_size,
+    )
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int = DECODE_ENC_LEN):
+    dt = compute_dtype(cfg)
+    Ld, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "self_k": jnp.zeros((Ld, batch, max_len, KV, hd), dt),
+        "self_v": jnp.zeros((Ld, batch, max_len, KV, hd), dt),
+        "cross_k": jnp.zeros((Ld, batch, enc_len, KV, hd), dt),
+        "cross_v": jnp.zeros((Ld, batch, enc_len, KV, hd), dt),
+    }
+
+
+def prefill(cfg, params, adapters, batch):
+    """Encode frames + teacher-forced decoder pass; returns caches."""
+    dt = compute_dtype(cfg)
+    enc_out = encode(cfg, params, adapters, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h, (sk, sv, ck, cv) = _decode_stack(
+        cfg, params, adapters, h, enc_out, positions, collect_cache=True
+    )
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(h, params["head"]["w"])[:, 0]
+    return logits, {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
+
+
+def decode_step(cfg, params, adapters, cache, batch):
+    dt = compute_dtype(cfg)
+    tok, pos = batch["token"], batch["pos"]
+    b = tok.shape[0]
+    h = jnp.take(params["embed"]["w"], tok[:, None], axis=0).astype(dt)
+    positions = decode_positions(pos, b)
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def body(hh, xs):
+        p, a, sk, sv, ckx, cvx = xs
+        x = rms_norm(hh, p["self_norm"], cfg.norm_eps)
+        q = alinear(p, a, "self_wq", x).reshape(b, 1, H, hd)
+        k = alinear(p, a, "self_wk", x).reshape(b, 1, KV, hd)
+        v = alinear(p, a, "self_wv", x).reshape(b, 1, KV, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        sk = cache_update(sk, k, pos)
+        sv = cache_update(sv, v, pos)
+        o = attention(q, sk, sv, cfg, causal=False, kv_valid_len=pos + 1)
+        hh = hh + alinear(p, a, "self_wo", o.reshape(b, 1, -1))
+        x = rms_norm(hh, p["cross_norm"], cfg.norm_eps)
+        q = alinear(p, a, "cross_wq", x).reshape(b, 1, H, hd)
+        o = attention(q, ckx, cvx, cfg, causal=False)
+        hh = hh + alinear(p, a, "cross_wo", o.reshape(b, 1, -1))
+        x = rms_norm(hh, p["mlp_norm"], cfg.norm_eps)
+        y = jax.nn.silu(alinear(p, a, "wgate", x)) * alinear(p, a, "wup", x)
+        return hh + alinear(p, a, "wdown", y), (sk, sv)
+
+    h, (sk, sv) = jax.lax.scan(
+        body,
+        h,
+        (
+            params["dec_blocks"],
+            _a(adapters, "dec_blocks"),
+            cache["self_k"],
+            cache["self_v"],
+            cache["cross_k"],
+            cache["cross_v"],
+        ),
+    )
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(h, params["head"]["w"])[:, 0]
+    return logits, {
+        "self_k": sk,
+        "self_v": sv,
+        "cross_k": cache["cross_k"],
+        "cross_v": cache["cross_v"],
+    }

@@ -1,0 +1,182 @@
+"""Shared building blocks: norms, RoPE/M-RoPE, adapter-aware linears, loss.
+
+Every projection in every architecture goes through :func:`alinear`, the
+single integration point for NeuroAda bypasses (and the fused Pallas path).
+Params are plain nested dicts; an adapter dict mirrors the param dict with
+``Delta`` leaves (or ``None``) at the same keys.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import Delta
+from repro.kernels import ops
+
+# ------------------------------------------------------------------ dtypes
+
+
+def compute_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------- init
+
+
+def init_linear(rng, d_in: int, d_out: int, dtype, *, bias: bool = False, scale=None):
+    scale = scale if scale is not None else d_in**-0.5
+    out = {"w": (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        out["b"] = jnp.zeros((d_out,), dtype)
+    return out
+
+
+def init_norm(d: int, dtype):
+    return jnp.ones((d,), dtype)
+
+
+# ------------------------------------------------------------------- norms
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# ------------------------------------------------- adapter-aware linear
+
+
+def ad_get(a, name: str):
+    """Fetch the adapter leaf for ``name`` from an adapter dict (or None).
+
+    Returns a ``Delta`` (NeuroAda) or a LoRA dict {"A","B"} or None.
+    """
+    if not isinstance(a, dict):
+        return None
+    d = a.get(name)
+    if isinstance(d, dict) and "w" in d:  # adapter nested beside the bias slot
+        d = d["w"]
+    if d is None:
+        return None
+    if isinstance(d, dict) and "A" in d:
+        return d  # LoRA leaf
+    if not isinstance(d, Delta):
+        d = Delta(*d)
+    return d
+
+
+def alinear(p: dict, a, name: str, x: jax.Array) -> jax.Array:
+    """y = x @ W (+b) (+ NeuroAda bypass | LoRA). p[name] = {"w": …, ["b"]}."""
+    leaf = p[name]
+    w = leaf["w"]
+    b = leaf.get("b")
+    d = ad_get(a, name)
+    if isinstance(d, Delta):
+        return ops.fused_linear(x, w, d.idx, d.val, b)
+    y = jnp.dot(x, w)
+    if isinstance(d, dict):  # LoRA: x @ A @ B scaled (scale is a constant)
+        y = y + jnp.dot(jnp.dot(x, d["A"]), d["B"]) * jax.lax.stop_gradient(d["scale"])
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------- decode utils
+
+
+def cache_update(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
+    """Write ``new`` (B,1,…) into ``cache`` (B,S,…) at sequence index pos.
+
+    pos is a scalar (aligned batch — dry-run serve_step) or (B,) per-slot
+    positions (serving engine continuous batching).
+    """
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        zeros = (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new, (0, pos) + zeros)
+    def one(c, n, p):
+        zeros = (0,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, n, (p,) + zeros)
+    return jax.vmap(one)(cache, new, pos)
+
+
+def decode_positions(pos, batch: int) -> jax.Array:
+    """(B,1) rope positions from scalar or per-slot pos."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos[None, None], (batch, 1)).astype(jnp.int32)
+    return pos[:, None].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B,S,H,hd), positions (B,S) int -> rotated x."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, theta: float, sections: tuple[int, ...]
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions3 (3,B,S); sections sum = hd/2.
+
+    Frequency pairs are partitioned into (t,h,w) sections; each section
+    rotates by its own position stream.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    # section id per frequency pair
+    sec = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=hd // 2)
+    pos = jnp.take(positions3, sec, axis=0)  # (hd/2, B, S) -> pick stream per pair
+    pos = jnp.moveaxis(pos, 0, -1)  # (B,S,hd/2)
+    ang = pos.astype(jnp.float32) * inv
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- loss
+
+
+def softmax_cross_entropy(
+    logits: jax.Array,
+    targets: jax.Array,
+    mask: jax.Array | None = None,
+    real_vocab: int | None = None,
+) -> jax.Array:
+    """Stable CE in f32, sharding-friendly over a vocab-parallel logit dim.
+
+    No gather/concat along V: pad masking is an iota compare, the gold
+    logit is an iota-select-reduce — both partition cleanly when V is
+    sharded on the ``model`` axis (reductions become tiny all-reduces
+    instead of a full logit all-gather).
+    """
+    lg = logits.astype(jnp.float32)
+    v = lg.shape[-1]
+    viota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    if real_vocab is not None and real_vocab < v:
+        lg = jnp.where(viota < real_vocab, lg, -1e30)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+    gold = jnp.sum(jnp.where(viota == targets[..., None], lg, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

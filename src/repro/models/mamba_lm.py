@@ -1,0 +1,104 @@
+"""falcon-mamba-7b: attention-free Mamba-1 LM.
+
+Decode state is O(1) per layer (conv window + (di, N) SSM state) — no KV
+cache grows with context, which is why this arch runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import ssm
+from repro.models.layers import compute_dtype, init_linear, init_norm, softmax_cross_entropy
+
+
+def init_params(cfg, rng):
+    dt = compute_dtype(cfg)
+    V, D = cfg.padded_vocab, cfg.d_model
+    k1, k2, k3 = jax.random.split(rng, 3)
+    params = {
+        "embed": {"w": (jax.random.normal(k1, (V, D), jnp.float32) * 0.02).astype(dt)},
+        "blocks": ssm.init_mamba1_block(cfg, k2, dt),
+        "final_norm": init_norm(D, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_linear(k3, D, V, dt)
+    return params
+
+
+def _head(cfg, params, h):
+    from repro.models.layers import rms_norm
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
+    return jnp.dot(h, w)
+
+
+def _a_blocks(adapters):
+    return adapters.get("blocks", {}) if isinstance(adapters, dict) else {}
+
+
+def forward_train(cfg, params, adapters, batch, *, remat="none"):
+    dt = compute_dtype(cfg)
+    h = jnp.take(params["embed"]["w"], batch["tokens"], axis=0).astype(dt)
+
+    def body(hh, xs):
+        p, a = xs
+        return ssm.mamba1_block(cfg, p, a, constrain(hh)), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, (params["blocks"], _a_blocks(adapters)))
+    return _head(cfg, params, h), jnp.float32(0.0)
+
+
+def loss_fn(cfg, params, adapters, batch, *, remat="none"):
+    logits, _ = forward_train(cfg, params, adapters, batch, remat=remat)
+    ce = softmax_cross_entropy(
+        logits[:, :-1], batch["targets"][:, 1:], batch.get("loss_mask"),
+        real_vocab=cfg.vocab_size,
+    )
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    # O(1) in max_len: recurrent state only.
+    L, di, n, cw = cfg.num_layers, cfg.resolved_d_inner, cfg.ssm_state, cfg.conv_width
+    dt = compute_dtype(cfg)
+    return {
+        "conv": jnp.zeros((L, batch, cw - 1, di), dt),
+        "ssm": jnp.zeros((L, batch, di, n), jnp.float32),
+    }
+
+
+def prefill(cfg, params, adapters, batch):
+    dt = compute_dtype(cfg)
+    h = jnp.take(params["embed"]["w"], batch["tokens"], axis=0).astype(dt)
+
+    def body(hh, xs):
+        p, a = xs
+        hh, (conv, state) = ssm.mamba1_block(cfg, p, a, constrain(hh), return_state=True)
+        return hh, (conv, state)
+
+    h, (conv, state) = jax.lax.scan(body, h, (params["blocks"], _a_blocks(adapters)))
+    logits = _head(cfg, params, h[:, -1:])[:, 0]
+    return logits, {"conv": conv, "ssm": state}
+
+
+def decode_step(cfg, params, adapters, cache, batch):
+    dt = compute_dtype(cfg)
+    tok = batch["token"]
+    h = jnp.take(params["embed"]["w"], tok[:, None], axis=0).astype(dt)
+
+    def body(hh, xs):
+        p, a, conv, state = xs
+        hh, conv, state = ssm.mamba1_decode(cfg, p, a, hh, conv, state)
+        return hh, (conv, state)
+
+    h, (conv, state) = jax.lax.scan(
+        body, h, (params["blocks"], _a_blocks(adapters), cache["conv"], cache["ssm"])
+    )
+    logits = _head(cfg, params, h)[:, 0]
+    return logits, {"conv": conv, "ssm": state}

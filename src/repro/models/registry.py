@@ -1,0 +1,97 @@
+"""Uniform model API over all families + ShapeDtypeStruct input specs.
+
+``input_specs(cfg, shape)`` is the dry-run contract: weak-type-correct,
+shardable stand-ins for every model input, *zero allocation* (decode caches
+come from ``jax.eval_shape`` over ``init_cache``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, mamba_lm, transformer, zamba2
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba_lm,
+    "hybrid": zamba2,
+    "encdec": encdec,
+}
+
+
+class Model:
+    """cfg-bound functional model: init/loss/prefill/decode_step/init_cache."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.mod = _FAMILY[cfg.family]
+
+    def init(self, rng):
+        return self.mod.init_params(self.cfg, rng)
+
+    def loss(self, params, adapters, batch, *, remat="none"):
+        return self.mod.loss_fn(self.cfg, params, adapters, batch, remat=remat)
+
+    def forward(self, params, adapters, batch, *, remat="none"):
+        return self.mod.forward_train(self.cfg, params, adapters, batch, remat=remat)
+
+    def prefill(self, params, adapters, batch):
+        return self.mod.prefill(self.cfg, params, adapters, batch)
+
+    def decode_step(self, params, adapters, cache, batch):
+        return self.mod.decode_step(self.cfg, params, adapters, cache, batch)
+
+    def init_cache(self, batch: int, max_len: int):
+        return self.mod.init_cache(self.cfg, batch, max_len)
+
+    # ---------------------------------------------------------------- specs
+
+    def vlm_split(self, seq_len: int) -> tuple[int, int]:
+        s_img = int(seq_len * self.cfg.image_frac)
+        return s_img, seq_len - s_img
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+
+        if shape.mode in ("train", "prefill"):
+            if cfg.family == "vlm":
+                s_img, s_txt = self.vlm_split(s)
+                specs = {
+                    "tokens": sds((b, s_txt), i32),
+                    "patches": sds((b, s_img, cfg.d_model), dt),
+                    "positions": sds((3, b, s), i32),
+                }
+                if shape.mode == "train":
+                    specs["targets"] = sds((b, s_txt), i32)
+                return specs
+            if cfg.family == "encdec":
+                specs = {
+                    "frames": sds((b, s, cfg.d_model), dt),
+                    "tokens": sds((b, s), i32),
+                }
+                if shape.mode == "train":
+                    specs["targets"] = sds((b, s), i32)
+                return specs
+            specs = {"tokens": sds((b, s), i32)}
+            if shape.mode == "train":
+                specs["targets"] = sds((b, s), i32)
+            return specs
+
+        # decode: one new token against a seq_len-sized cache
+        specs = {"token": sds((b,), i32), "pos": sds((), i32)}
+        if cfg.family == "vlm":
+            specs["mrope_pos"] = sds((3, b, 1), i32)
+        specs["cache"] = jax.eval_shape(lambda: self.init_cache(b, s))
+        return specs
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,300 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+TPU adaptation (DESIGN.md §2.1/§6): the CUDA selective-scan kernel becomes
+a *chunked* scan — ``lax.scan`` over sequence chunks carrying the recurrent
+state, with an associative scan (mamba1) or the SSD quadratic-in-chunk
+matmul form (mamba2) inside each chunk. Live memory is O(B·chunk·state)
+instead of O(B·S·state); the SSD intra-chunk term runs on the MXU.
+
+Both expose train (full-sequence) and decode (O(1) single-token) paths —
+this O(1) decode state is why only these families run ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain_inner
+from repro.models.layers import alinear, rms_norm
+
+# ----------------------------------------------------------- causal conv1d
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C), w (W,C), b (C,)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):  # width is tiny (4): unrolled taps
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array):
+    """Single-token conv. x_t (B,C); conv_state (B,W-1,C) past inputs."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(x_t.dtype)
+    return y, window[:, 1:]
+
+
+# ------------------------------------------------------------- mamba1 core
+
+
+def selective_scan(x, dt, a_mat, b_in, c_in, chunk: int):
+    """Mamba-1 recurrence h_t = exp(dt·A)h + dt·B_t·x_t ; y_t = C_t·h_t.
+
+    x, dt (B,S,di); a_mat (di,N); b_in, c_in (B,S,N). Returns y (B,S,di).
+    """
+    bsz, s, di = x.shape
+    n = a_mat.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    sp = s + pad
+    nc = sp // chunk
+    # Only the O(B·S·di) operands are chunked eagerly; the O(B·S·di·N)
+    # decay/contribution tensors are built INSIDE the chunk body so at most
+    # one chunk's worth is ever live (§Perf iteration 2: 128× traffic cut
+    # for falcon-mamba prefill).
+    dtx = (dt.astype(jnp.float32) * x.astype(jnp.float32))  # (B,S,di)
+    dtf = dt.astype(jnp.float32)
+    if pad:
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))  # dt 0 -> decay 1
+        dtx = jnp.pad(dtx, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+
+    def tm(t, tail):
+        return t.reshape(bsz, nc, chunk, *tail).transpose(
+            1, 2, 0, *range(3, 3 + len(tail))
+        )
+
+    dt_c = tm(dtf, (di,))
+    dtx_c = tm(dtx, (di,))
+    b_c = tm(b_in.astype(jnp.float32), (n,))
+    c_c = tm(c_in.astype(jnp.float32), (n,))
+    a_f = a_mat.astype(jnp.float32)
+
+    def op(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+
+    def chunk_step(h_prev, xs):
+        dtc, dxc, bb, cc = xs  # (chunk,B,di) ×2, (chunk,B,N) ×2
+        decay = jnp.exp(dtc[..., None] * a_f)  # (chunk,B,di,N)
+        contrib = dxc[..., None] * bb[:, :, None, :]
+        aa, acc = jax.lax.associative_scan(op, (decay, contrib), axis=0)
+        states = acc + aa * h_prev[None]
+        y_c = jnp.einsum("tbdn,tbn->tbd", states, cc)
+        return states[-1], y_c
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    h_last, y = jax.lax.scan(chunk_step, h0, (dt_c, dtx_c, b_c, c_c))
+    y = y.transpose(2, 0, 1, 3).reshape(bsz, sp, di)[:, :s]
+    return y.astype(x.dtype), h_last
+
+
+def init_mamba1_block(cfg, rng, dt):
+    D, di = cfg.d_model, cfg.resolved_d_inner
+    n, dtr, cw = cfg.ssm_state, cfg.resolved_dt_rank, cfg.conv_width
+    L = cfg.num_layers
+    ks = jax.random.split(rng, 8)
+
+    def lin(key, i, o, bias=False, stack=(L,)):
+        w = (jax.random.normal(key, (*stack, i, o), jnp.float32) * i**-0.5).astype(dt)
+        out = {"w": w}
+        if bias:
+            out["b"] = jnp.zeros((*stack, o), dt)
+        return out
+
+    return {
+        "norm": jnp.ones((L, D), dt),
+        "in_proj": lin(ks[0], D, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (L, cw, di), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((L, di), dt),
+        "x_proj": lin(ks[2], di, dtr + 2 * n),
+        "dt_proj": lin(ks[3], dtr, di, bias=True),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (L, di, n))
+        ),
+        "skip_D": jnp.ones((L, di), jnp.float32),
+        "out_proj": lin(ks[4], di, D),
+    }
+
+
+def mamba1_block(cfg, p, a, h, *, return_state: bool = False):
+    """Full-sequence mamba1 block with residual. h (B,S,D)."""
+    di, n, dtr = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    cw = cfg.conv_width
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    xz = constrain_inner(alinear(p, a, "in_proj", x))
+    xc_raw, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv(xc_raw, p["conv_w"], p["conv_b"]))
+    proj = alinear(p, a, "x_proj", xc)
+    dt_r = proj[..., :dtr]
+    b_in = proj[..., dtr : dtr + n]
+    c_in = proj[..., dtr + n :]
+    dt = jax.nn.softplus(alinear(p, a, "dt_proj", dt_r).astype(jnp.float32))
+    a_mat = -jnp.exp(p["A_log"])
+    y, h_last = selective_scan(xc, dt, a_mat, b_in, c_in, cfg.ssm_chunk)
+    y = y + xc * p["skip_D"].astype(xc.dtype)
+    y = y * jax.nn.silu(z)
+    out = h + alinear(p, a, "out_proj", y)
+    if return_state:
+        conv_state = xc_raw[:, -(cw - 1) :]  # last W-1 pre-conv inputs
+        return out, (conv_state, h_last)
+    return out
+
+
+def mamba1_decode(cfg, p, a, h, conv_state, ssm_state):
+    """Single token. h (B,1,D); conv_state (B,W-1,di); ssm_state (B,di,N)."""
+    di, n, dtr = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    xz = alinear(p, a, "in_proj", x)[:, 0]  # (B,2di)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = conv_step(xc, conv_state, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    proj = alinear(p, a, "x_proj", xc)
+    dt_r, b_in, c_in = proj[..., :dtr], proj[..., dtr : dtr + n], proj[..., dtr + n :]
+    dt = jax.nn.softplus(alinear(p, a, "dt_proj", dt_r).astype(jnp.float32))  # (B,di)
+    a_mat = -jnp.exp(p["A_log"])  # (di,N)
+    decay = jnp.exp(dt[..., None] * a_mat[None])  # (B,di,N)
+    ssm_state = decay * ssm_state + (dt * xc.astype(jnp.float32))[..., None] * b_in.astype(
+        jnp.float32
+    )[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", ssm_state, c_in.astype(jnp.float32))
+    y = (y + xc.astype(jnp.float32) * p["skip_D"]).astype(h.dtype)
+    y = y * jax.nn.silu(z)
+    out = alinear(p, a, "out_proj", y[:, None])
+    return h + out, conv_state, ssm_state
+
+
+# --------------------------------------------------------- mamba2 (SSD) core
+
+
+def ssd_scan(x, dt, a_head, b_in, c_in, chunk: int):
+    """Mamba-2 SSD: scalar decay per head; chunked matmul form.
+
+    x (B,S,H,P); dt (B,S,H); a_head (H,) negative; b_in,c_in (B,S,N).
+    Returns y (B,S,H,P).
+    """
+    bsz, s, hh, pp = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    sp = s + pad
+    nc = sp // chunk
+    dtf = dt.astype(jnp.float32)
+    la = dtf * a_head.astype(jnp.float32)  # (B,S,H) log-decay
+    dtx = dtf[..., None] * x.astype(jnp.float32)  # (B,S,H,P)
+    if pad:
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))  # log-decay 0 -> decay 1
+        dtx = jnp.pad(dtx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+
+    def tm(t, shape_tail):  # to time-major chunks
+        return t.reshape(bsz, nc, chunk, *shape_tail).transpose(1, 2, 0, *range(3, 3 + len(shape_tail)))
+
+    la_c = tm(la, (hh,))
+    dtx_c = tm(dtx, (hh, pp))
+    b_c = tm(b_in.astype(jnp.float32), (n,))
+    c_c = tm(c_in.astype(jnp.float32), (n,))
+
+    def chunk_step(h_prev, xs):
+        lac, dx, bb, cc = xs  # (T,B,H) (T,B,H,P) (T,B,N) (T,B,N)
+        cum = jnp.cumsum(lac, axis=0)  # (T,B,H)
+        # intra: M[t,s,b,h] = (C_t·B_s) exp(cum_t - cum_s) for t>=s
+        scores = jnp.einsum("tbn,sbn->tsb", cc, bb)
+        decay = jnp.exp(cum[:, None] - cum[None])  # (T,S,B,H)
+        tri = jnp.tril(jnp.ones((lac.shape[0], lac.shape[0]), jnp.float32))
+        m = scores[..., None] * decay * tri[:, :, None, None]
+        y_intra = jnp.einsum("tsbh,sbhp->tbhp", m, dx)
+        # inter: contribution of carried state
+        ecum = jnp.exp(cum)  # (T,B,H)
+        y_inter = jnp.einsum("tbn,tbh,bhpn->tbhp", cc, ecum, h_prev)
+        # state update
+        tail = jnp.exp(cum[-1][None] - cum)  # decay from s to chunk end… careful: want exp(cum_T - cum_s)
+        h_new = ecum[-1][..., None, None] * h_prev + jnp.einsum(
+            "sbh,sbn,sbhp->bhpn", tail, bb, dx
+        )
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((bsz, hh, pp, n), jnp.float32)
+    h_last, y = jax.lax.scan(chunk_step, h0, (la_c, dtx_c, b_c, c_c))
+    y = y.transpose(2, 0, 1, 3, 4).reshape(bsz, sp, hh, pp)[:, :s]
+    return y.astype(x.dtype), h_last
+
+
+def init_mamba2_block(cfg, rng, dt, stack: tuple[int, ...]):
+    D, di = cfg.d_model, cfg.resolved_d_inner
+    n, cw, hh = cfg.ssm_state, cfg.conv_width, cfg.ssm_heads
+    ks = jax.random.split(rng, 8)
+
+    def lin(key, i, o, bias=False):
+        w = (jax.random.normal(key, (*stack, i, o), jnp.float32) * i**-0.5).astype(dt)
+        out = {"w": w}
+        if bias:
+            out["b"] = jnp.zeros((*stack, o), dt)
+        return out
+
+    return {
+        "norm": jnp.ones((*stack, D), dt),
+        "in_proj": lin(ks[0], D, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (*stack, cw, di), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((*stack, di), dt),
+        "bc_proj": lin(ks[2], di, 2 * n),
+        "dt_proj": lin(ks[3], D, hh, bias=True),
+        "A_log": jnp.zeros((*stack, hh), jnp.float32),  # A = -exp(0) = -1 init
+        "skip_D": jnp.ones((*stack, hh), jnp.float32),
+        "gate_norm": jnp.ones((*stack, di), dt),
+        "out_proj": lin(ks[4], di, D),
+    }
+
+
+def mamba2_block(cfg, p, a, h, *, return_state: bool = False):
+    """Full-sequence mamba2 block with residual. h (B,S,D)."""
+    di, n, hh, pp = cfg.resolved_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    bsz, s, _ = h.shape
+    cw = cfg.conv_width
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    xz = constrain_inner(alinear(p, a, "in_proj", x))
+    xc_raw, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv(xc_raw, p["conv_w"], p["conv_b"]))
+    bc = alinear(p, a, "bc_proj", xc)
+    b_in, c_in = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(alinear(p, a, "dt_proj", x).astype(jnp.float32))  # (B,S,H)
+    a_head = -jnp.exp(p["A_log"])  # (H,)
+    xh = xc.reshape(bsz, s, hh, pp)
+    y, h_last = ssd_scan(xh, dt, a_head, b_in, c_in, cfg.ssm_chunk)
+    y = y + xh * p["skip_D"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = h + alinear(p, a, "out_proj", y)
+    if return_state:
+        conv_state = xc_raw[:, -(cw - 1) :]
+        return out, (conv_state, h_last)
+    return out
+
+
+def mamba2_decode(cfg, p, a, h, conv_state, ssm_state):
+    """Single token. ssm_state (B,H,P,N); conv_state (B,W-1,di)."""
+    di, n, hh, pp = cfg.resolved_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    xz = alinear(p, a, "in_proj", x)[:, 0]
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = conv_step(xc, conv_state, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    bc = alinear(p, a, "bc_proj", xc)
+    b_in, c_in = jnp.split(bc, 2, axis=-1)  # (B,N)
+    dt = jax.nn.softplus(alinear(p, a, "dt_proj", x[:, 0]).astype(jnp.float32))  # (B,H)
+    a_head = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a_head[None])  # (B,H)
+    xh = xc.reshape(-1, hh, pp).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, b_in.astype(jnp.float32))
+    ssm_state = decay[..., None, None] * ssm_state + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, c_in.astype(jnp.float32))
+    y = y + xh * p["skip_D"][None, :, None]
+    y = y.reshape(-1, di).astype(h.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return h + alinear(p, a, "out_proj", y[:, None]), conv_state, ssm_state

@@ -1,0 +1,262 @@
+"""Decoder-only transformer LM (dense / MoE / VLM variants).
+
+Layer stacks are ``lax.scan`` over stacked params (L, …) — HLO stays one
+block long regardless of depth (compile time, roofline parser). The same
+block function serves train, prefill, and decode; decode threads the KV
+cache through scan ``xs``/``ys``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain, constrain_inner
+from repro.models import moe as moe_lib
+from repro.models.attention import attention
+from repro.models.layers import (
+    alinear,
+    apply_mrope,
+    apply_rope,
+    cache_update,
+    compute_dtype,
+    decode_positions,
+    init_linear,
+    init_norm,
+    rms_norm,
+    softmax_cross_entropy,
+)
+
+# ------------------------------------------------------------------ params
+
+
+def init_params(cfg, rng):
+    dt = compute_dtype(cfg)
+    L, D, F = cfg.num_layers, cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    V = cfg.padded_vocab
+    keys = jax.random.split(rng, 16)
+
+    def lin(key, shape_in, shape_out, bias=False, stack=(L,)):
+        # stacked init: one draw for all layers
+        w = (
+            jax.random.normal(key, (*stack, shape_in, shape_out), jnp.float32)
+            * shape_in**-0.5
+        ).astype(dt)
+        out = {"w": w}
+        if bias:
+            out["b"] = jnp.zeros((*stack, shape_out), dt)
+        return out
+
+    blocks = {
+        "attn_norm": jnp.ones((L, D), dt),
+        "wq": lin(keys[0], D, H * hd, bias=cfg.qkv_bias),
+        "wk": lin(keys[1], D, KV * hd, bias=cfg.qkv_bias),
+        "wv": lin(keys[2], D, KV * hd, bias=cfg.qkv_bias),
+        "wo": lin(keys[3], H * hd, D),
+        "mlp_norm": jnp.ones((L, D), dt),
+    }
+    if cfg.qk_norm:
+        blocks["q_norm"] = jnp.ones((L, hd), dt)
+        blocks["k_norm"] = jnp.ones((L, hd), dt)
+    if cfg.num_experts:
+        E = cfg.num_experts
+        blocks["router"] = {"w": (
+            jax.random.normal(keys[4], (L, D, E), jnp.float32) * D**-0.5
+        ).astype(dt)}
+        blocks["wgate"] = lin(keys[5], D, F, stack=(L, E))
+        blocks["wup"] = lin(keys[6], D, F, stack=(L, E))
+        blocks["wdown"] = lin(keys[7], F, D, stack=(L, E))
+    else:
+        blocks["wgate"] = lin(keys[5], D, F)
+        blocks["wup"] = lin(keys[6], D, F)
+        blocks["wdown"] = lin(keys[7], F, D)
+
+    params = {
+        "embed": {"w": (jax.random.normal(keys[8], (V, D), jnp.float32) * 0.02).astype(dt)},
+        "blocks": blocks,
+        "final_norm": init_norm(D, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_linear(keys[9], D, V, dt)
+    return params
+
+
+# ------------------------------------------------------------------- block
+
+
+def _mlp(cfg, p, a, x):
+    if cfg.num_experts:
+        return moe_lib.moe_ffn(cfg, p, a, x)
+    h = jax.nn.silu(alinear(p, a, "wgate", x)) * alinear(p, a, "wup", x)
+    h = constrain_inner(h)  # Megatron TP layout for the hidden
+    return alinear(p, a, "wdown", h), jnp.float32(0.0)
+
+
+def _qkv(cfg, p, a, x, positions, mrope_pos):
+    b, s, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = constrain_inner(alinear(p, a, "wq", x).reshape(b, s, H, hd))
+    k = constrain_inner(alinear(p, a, "wk", x).reshape(b, s, KV, hd))
+    v = constrain_inner(alinear(p, a, "wv", x).reshape(b, s, KV, hd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections and mrope_pos is not None:
+        q = apply_mrope(q, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _block_train(cfg, h, p, a, positions, mrope_pos):
+    h = constrain(h)  # sequence-parallel residual layout
+    x = rms_norm(h, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, a, x, positions, mrope_pos)
+    o = attention(q, k, v, cfg, causal=True)
+    h = h + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
+    x = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    y, aux = _mlp(cfg, p, a, x)
+    return h + y, aux
+
+
+def _block_decode(cfg, h, p, a, ck, cv, pos, positions, mrope_pos):
+    """One-token step. ck/cv (B,Smax,KV,hd); pos scalar or (B,) write index."""
+    x = rms_norm(h, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, a, x, positions, mrope_pos)
+    ck = cache_update(ck, k, pos)
+    cv = cache_update(cv, v, pos)
+    o = attention(q, ck, cv, cfg, causal=False, kv_valid_len=pos + 1)
+    h = h + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
+    x = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    y, _ = _mlp(cfg, p, a, x)
+    return h + y, ck, cv
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _split_blocks(params, adapters):
+    a_blocks = adapters.get("blocks", {}) if isinstance(adapters, dict) else {}
+    return params["blocks"], a_blocks
+
+
+def _embed_inputs(cfg, params, batch):
+    dt = compute_dtype(cfg)
+    tokens = batch["tokens"]
+    emb = jnp.take(params["embed"]["w"], tokens, axis=0).astype(dt)
+    if cfg.family == "vlm" and "patches" in batch:
+        h = jnp.concatenate([batch["patches"].astype(dt), emb], axis=1)
+        positions = None
+        mrope_pos = batch["positions"]  # (3,B,S_total)
+    else:
+        h = emb
+        b, s = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        mrope_pos = None
+    return h, positions, mrope_pos
+
+
+def forward_train(cfg, params, adapters, batch, *, remat="none"):
+    h, positions, mrope_pos = _embed_inputs(cfg, params, batch)
+    blocks, a_blocks = _split_blocks(params, adapters)
+
+    def body(carry, xs):
+        hh, aux = carry
+        p, a = xs
+        hh, aux_l = _block_train(cfg, hh, p, a, positions, mrope_pos)
+        return (hh, aux + aux_l), None
+
+    if remat != "none":
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), (blocks, a_blocks))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head_w = (
+        params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
+    )
+    logits = jnp.dot(h, head_w)
+    return logits, aux / cfg.num_layers
+
+
+def loss_fn(cfg, params, adapters, batch, *, remat="none"):
+    logits, aux = forward_train(cfg, params, adapters, batch, remat=remat)
+    if cfg.family == "vlm" and "patches" in batch:
+        # only text positions carry loss
+        n_img = batch["patches"].shape[1]
+        logits = logits[:, n_img:]
+    ce = softmax_cross_entropy(
+        logits[:, :-1], batch["targets"][:, 1:], batch.get("loss_mask", None),
+        real_vocab=cfg.vocab_size,
+    )
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------------- serve
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    dt = compute_dtype(cfg)
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, KV, hd), dt),
+        "v": jnp.zeros((L, batch, max_len, KV, hd), dt),
+    }
+
+
+def prefill(cfg, params, adapters, batch):
+    """Full forward over the prompt; returns (last-token logits, cache)."""
+    h, positions, mrope_pos = _embed_inputs(cfg, params, batch)
+    blocks, a_blocks = _split_blocks(params, adapters)
+
+    def body(hh, xs):
+        p, a = xs
+        hh = constrain(hh)
+        x = rms_norm(hh, p["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, p, a, x, positions, mrope_pos)
+        o = attention(q, k, v, cfg, causal=True)
+        hh = hh + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
+        x = rms_norm(hh, p["mlp_norm"], cfg.norm_eps)
+        y, _ = _mlp(cfg, p, a, x)
+        return hh + y, (k, v)
+
+    h, (ck, cv) = jax.lax.scan(body, h, (blocks, a_blocks))
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    head_w = params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
+    logits = jnp.dot(h, head_w)[:, 0]
+    return logits, {"k": ck, "v": cv}
+
+
+def decode_step(cfg, params, adapters, cache, batch):
+    """One new token per sequence against a (L,B,Smax,…) KV cache.
+
+    batch: {"token": (B,) int32, "pos": () int32 — current write index}.
+    """
+    dt = compute_dtype(cfg)
+    tok = batch["token"]
+    pos = batch["pos"]
+    b = tok.shape[0]
+    h = jnp.take(params["embed"]["w"], tok[:, None], axis=0).astype(dt)
+    positions = decode_positions(pos, b)
+    mrope_pos = batch.get("mrope_pos")  # (3,B,1) for VLM decode
+    blocks, a_blocks = _split_blocks(params, adapters)
+
+    def body(hh, xs):
+        p, a, ck, cv = xs
+        hh, ck, cv = _block_decode(cfg, hh, p, a, ck, cv, pos, positions, mrope_pos)
+        return hh, (ck, cv)
+
+    h, (ck, cv) = jax.lax.scan(body, h, (blocks, a_blocks, cache["k"], cache["v"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head_w = params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
+    logits = jnp.dot(h, head_w)[:, 0]
+    return logits, {"k": ck, "v": cv}

@@ -1,0 +1,227 @@
+"""zamba2-2.7b hybrid: Mamba-2 trunk + a weight-tied shared attention block.
+
+54 mamba2 layers in ``attn_every``-sized groups; before each group the
+*shared* transformer block (attention + MLP, one set of weights) runs on the
+current hidden state. NeuroAda deltas on the shared block are likewise tied
+across its 9 application sites. Simplification vs. the released model
+(concat-residual/LoRA-specialised shared block) is documented in
+DESIGN.md §6.
+
+Decode: mamba states are O(1); the shared block keeps one KV cache per
+application site ((G, B, S, KV, hd)) — memory grows with context only
+through those G=9 caches, still far below a 54-layer dense KV cache, and
+the mamba trunk is why this arch runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain, constrain_inner
+from repro.models import ssm
+from repro.models.attention import attention
+from repro.models.layers import (
+    alinear,
+    apply_rope,
+    cache_update,
+    compute_dtype,
+    decode_positions,
+    init_linear,
+    init_norm,
+    rms_norm,
+    softmax_cross_entropy,
+)
+
+
+def _groups(cfg) -> tuple[int, int]:
+    per = cfg.attn_every
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return cfg.num_layers // per, per
+
+
+def init_params(cfg, rng):
+    dt = compute_dtype(cfg)
+    g, per = _groups(cfg)
+    D, F = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    V = cfg.padded_vocab
+    ks = jax.random.split(rng, 12)
+
+    shared = {
+        "attn_norm": jnp.ones((D,), dt),
+        "wq": init_linear(ks[0], D, H * hd, dt),
+        "wk": init_linear(ks[1], D, KV * hd, dt),
+        "wv": init_linear(ks[2], D, KV * hd, dt),
+        "wo": init_linear(ks[3], H * hd, D, dt),
+        "mlp_norm": jnp.ones((D,), dt),
+        "wgate": init_linear(ks[4], D, F, dt),
+        "wup": init_linear(ks[5], D, F, dt),
+        "wdown": init_linear(ks[6], F, D, dt),
+    }
+    return {
+        "embed": {"w": (jax.random.normal(ks[7], (V, D), jnp.float32) * 0.02).astype(dt)},
+        "shared": shared,
+        "blocks": ssm.init_mamba2_block(cfg, ks[8], dt, stack=(g, per)),
+        "final_norm": init_norm(D, dt),
+        "head": init_linear(ks[9], D, V, dt),
+    }
+
+
+def _shared_block(cfg, p, a, h, positions, *, ck=None, cv=None, pos=None):
+    """The weight-tied attention+MLP block; optionally KV-cached (decode)."""
+    x = rms_norm(h, p["attn_norm"], cfg.norm_eps)
+    b, s, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = constrain_inner(alinear(p, a, "wq", x).reshape(b, s, H, hd))
+    k = constrain_inner(alinear(p, a, "wk", x).reshape(b, s, KV, hd))
+    v = constrain_inner(alinear(p, a, "wv", x).reshape(b, s, KV, hd))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if ck is not None:
+        ck = cache_update(ck, k, pos)
+        cv = cache_update(cv, v, pos)
+        o = attention(q, ck, cv, cfg, causal=False, kv_valid_len=pos + 1)
+    else:
+        o = attention(q, k, v, cfg, causal=True)
+    h = h + alinear(p, a, "wo", o.reshape(b, s, -1))
+    x = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    y = jax.nn.silu(alinear(p, a, "wgate", x)) * alinear(p, a, "wup", x)
+    y = constrain_inner(y)
+    out = h + alinear(p, a, "wdown", y)
+    if ck is not None:
+        return out, ck, cv
+    return out
+
+
+def _a(adapters, key):
+    return adapters.get(key, {}) if isinstance(adapters, dict) else {}
+
+
+def _head_out(cfg, params, h):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return jnp.dot(h, params["head"]["w"])
+
+
+def forward_train(cfg, params, adapters, batch, *, remat="none"):
+    dt = compute_dtype(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    sh_p, sh_a = params["shared"], _a(adapters, "shared")
+
+    def group(hh, xs):
+        gp, ga = xs  # mamba2 params stacked (per, …)
+        hh = _shared_block(cfg, sh_p, sh_a, constrain(hh), positions)
+
+        def inner(hh2, xs2):
+            p, a = xs2
+            return ssm.mamba2_block(cfg, p, a, hh2), None
+
+        hh, _ = jax.lax.scan(inner, hh, (gp, ga))
+        return hh, None
+
+    if remat != "none":
+        group = jax.checkpoint(group)
+    h, _ = jax.lax.scan(group, h, (params["blocks"], _a(adapters, "blocks")))
+    return _head_out(cfg, params, h), jnp.float32(0.0)
+
+
+def loss_fn(cfg, params, adapters, batch, *, remat="none"):
+    logits, _ = forward_train(cfg, params, adapters, batch, remat=remat)
+    ce = softmax_cross_entropy(
+        logits[:, :-1], batch["targets"][:, 1:], batch.get("loss_mask"),
+        real_vocab=cfg.vocab_size,
+    )
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    dt = compute_dtype(cfg)
+    g, per = _groups(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    di, n, hh, pp, cw = (
+        cfg.resolved_d_inner,
+        cfg.ssm_state,
+        cfg.ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.conv_width,
+    )
+    return {
+        "shared_k": jnp.zeros((g, batch, max_len, KV, hd), dt),
+        "shared_v": jnp.zeros((g, batch, max_len, KV, hd), dt),
+        "conv": jnp.zeros((g, per, batch, cw - 1, di), dt),
+        "ssm": jnp.zeros((g, per, batch, hh, pp, n), jnp.float32),
+    }
+
+
+def prefill(cfg, params, adapters, batch):
+    dt = compute_dtype(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    sh_p, sh_a = params["shared"], _a(adapters, "shared")
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def group_kv(hh, xs):
+        gp, ga = xs
+        hh = constrain(hh)
+        x = rms_norm(hh, sh_p["attn_norm"], cfg.norm_eps)
+        k = alinear(sh_p, sh_a, "wk", x).reshape(b, s, KV, hd)
+        v = alinear(sh_p, sh_a, "wv", x).reshape(b, s, KV, hd)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        hh = _shared_block(cfg, sh_p, sh_a, hh, positions)
+
+        def inner(hh2, xs2):
+            p, a = xs2
+            hh2, (conv, state) = ssm.mamba2_block(cfg, p, a, hh2, return_state=True)
+            return hh2, (conv, state)
+
+        hh, (conv, state) = jax.lax.scan(inner, hh, (gp, ga))
+        return hh, (k, v, conv, state)
+
+    h, (ck, cv, conv, state) = jax.lax.scan(
+        group_kv, h, (params["blocks"], _a(adapters, "blocks"))
+    )
+    logits = _head_out(cfg, params, h[:, -1:])[:, 0]
+    return logits, {"shared_k": ck, "shared_v": cv, "conv": conv, "ssm": state}
+
+
+def decode_step(cfg, params, adapters, cache, batch):
+    dt = compute_dtype(cfg)
+    tok, pos = batch["token"], batch["pos"]
+    b = tok.shape[0]
+    h = jnp.take(params["embed"]["w"], tok[:, None], axis=0).astype(dt)
+    positions = decode_positions(pos, b)
+    sh_p, sh_a = params["shared"], _a(adapters, "shared")
+
+    def group(hh, xs):
+        gp, ga, ck, cv, conv, state = xs
+        hh, ck, cv = _shared_block(
+            cfg, sh_p, sh_a, hh, positions, ck=ck, cv=cv, pos=pos
+        )
+
+        def inner(hh2, xs2):
+            p, a, cs, st = xs2
+            hh2, cs, st = ssm.mamba2_decode(cfg, p, a, hh2, cs, st)
+            return hh2, (cs, st)
+
+        hh, (conv, state) = jax.lax.scan(inner, hh, (gp, ga, conv, state))
+        return hh, (ck, cv, conv, state)
+
+    h, (ck, cv, conv, state) = jax.lax.scan(
+        group,
+        h,
+        (
+            params["blocks"],
+            _a(adapters, "blocks"),
+            cache["shared_k"],
+            cache["shared_v"],
+            cache["conv"],
+            cache["ssm"],
+        ),
+    )
+    logits = _head_out(cfg, params, h)[:, 0]
+    return logits, {"shared_k": ck, "shared_v": cv, "conv": conv, "ssm": state}

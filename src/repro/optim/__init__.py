@@ -1,0 +1,19 @@
+from repro.optim.adamw import (
+    AdamW,
+    AdamWState,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import get_schedule
+
+__all__ = [
+    "AdamW",
+    "AdamWState",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "get_schedule",
+    "global_norm",
+]

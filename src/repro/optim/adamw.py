@@ -1,0 +1,90 @@
+"""AdamW over arbitrary pytrees (None-leaf aware), FP32 moments.
+
+The paper's optimizer-memory claim (Eq. 5–6) is structural here: the
+trainable pytree for NeuroAda contains only (…, k, d_out) delta values, so
+``mu``/``nu`` are k/d_in the size of dense states — no masking tricks.
+Moments are always f32 even for bf16 params (paper §3.3), parameters are
+updated in their own dtype (BF16 deltas, no FP32 master copy).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+def _map(f, *trees):
+    return jax.tree.map(
+        lambda *xs: None if xs[0] is None else f(*xs),
+        *trees,
+        is_leaf=lambda x: x is None,
+    )
+
+
+class AdamW(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def adamw(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> AdamW:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32), _map(zeros, params), _map(zeros, params))
+
+    def update(grads, state: AdamWState, params) -> tuple[object, AdamWState]:
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        mu = _map(lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32), grads, state.mu)
+        nu = _map(
+            lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            grads,
+            state.nu,
+        )
+        bc1 = 1 - b1**stepf
+        bc2 = 1 - b2**stepf
+        lr_t = lr_fn(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = _map(upd, params, mu, nu)
+        return updates, AdamWState(step, mu, nu)
+
+    return AdamW(init, update)
+
+
+def apply_updates(params, updates):
+    return _map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [l for l in jax.tree.leaves(tree) if l is not None]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return _map(lambda g: g * scale.astype(g.dtype), grads), norm

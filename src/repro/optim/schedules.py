@@ -1,0 +1,47 @@
+"""LR schedules. The paper uses linear warmup + linear decay (Tables 5–7)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_linear_decay(peak: float, total_steps: int, warmup_ratio: float = 0.06):
+    warmup = max(int(total_steps * warmup_ratio), 1)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        up = step / warmup
+        down = jnp.maximum(total_steps - step, 0.0) / max(total_steps - warmup, 1)
+        return peak * jnp.minimum(up, down).clip(0.0, 1.0)
+
+    return fn
+
+
+def cosine(peak: float, total_steps: int, warmup_ratio: float = 0.06, floor: float = 0.0):
+    warmup = max(int(total_steps * warmup_ratio), 1)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        up = step / warmup
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak * jnp.where(step < warmup, up, cos)
+
+    return fn
+
+
+def constant(peak: float):
+    def fn(step):
+        return jnp.full((), peak, jnp.float32)
+
+    return fn
+
+
+def get_schedule(name: str, peak: float, total_steps: int, warmup_ratio: float):
+    if name == "linear":
+        return linear_warmup_linear_decay(peak, total_steps, warmup_ratio)
+    if name == "cosine":
+        return cosine(peak, total_steps, warmup_ratio)
+    if name == "constant":
+        return constant(peak)
+    raise ValueError(f"unknown schedule {name!r}")

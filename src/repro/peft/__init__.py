@@ -1,0 +1,3 @@
+from repro.peft.api import Peft, count_params, get_peft, stats
+
+__all__ = ["Peft", "count_params", "get_peft", "stats"]

@@ -1,0 +1,222 @@
+"""Unified PEFT interface: NeuroAda + every baseline the paper compares.
+
+A ``Peft`` bundles pure functions so the trainer is method-agnostic:
+
+* ``init(params, rng) -> (trainable, aux)`` — ``trainable`` is the ONLY
+  differentiated pytree; ``aux`` holds non-trainable companions (NeuroAda
+  indices, mask trees) and is threaded through jit as a regular argument.
+* ``model_inputs(params, trainable, aux) -> (eff_params, adapters)``
+* ``post_grad(grads, aux) -> grads``     — e.g. mask for mask-based tuning
+* ``merge(params, trainable, aux) -> params`` — export (Alg. 1 phase 3)
+
+Memory characteristics fall out structurally: NeuroAda/LoRA/BitFit trainable
+trees are tiny, so their AdamW states are tiny; ``masked`` deliberately
+reproduces the paper's Fig. 2 strawman (dense grads + dense moments +
+binary mask) for the Fig. 4/5 benchmarks.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PeftConfig
+from repro.core import adapt
+from repro.core.adapt import (
+    DEFAULT_EXCLUDE,
+    init_adapters,
+    merge_adapters,
+    path_str,
+    zip_adapters,
+)
+
+
+class Peft(NamedTuple):
+    method: str
+    init: Callable  # (params, rng) -> (trainable, aux)
+    model_inputs: Callable  # (params, trainable, aux) -> (eff_params, adapters)
+    post_grad: Callable  # (grads, aux) -> grads
+    merge: Callable  # (params, trainable, aux) -> params
+
+
+def count_params(tree) -> int:
+    return sum(int(jnp.size(l)) for l in jax.tree.leaves(tree) if l is not None)
+
+
+def stats(params, trainable) -> dict:
+    t, p = count_params(trainable), count_params(params)
+    return {"trainable": t, "total": p, "fraction": t / max(p, 1)}
+
+
+# ------------------------------------------------------------------ NeuroAda
+
+
+def neuroada(pcfg: PeftConfig, *, grads=None, exclude=DEFAULT_EXCLUDE) -> Peft:
+    dtype = jnp.dtype(pcfg.delta_dtype)
+
+    def init(params, rng):
+        indices, values = init_adapters(
+            params, pcfg.k, strategy=pcfg.strategy, rng=rng, grads=grads,
+            dtype=dtype, exclude=exclude,
+        )
+        return values, indices
+
+    def model_inputs(params, values, indices):
+        return params, zip_adapters(indices, values)
+
+    def merge(params, values, indices):
+        return merge_adapters(params, indices, values)
+
+    return Peft("neuroada", init, model_inputs, lambda g, aux: g, merge)
+
+
+# ---------------------------------------------------------------------- LoRA
+
+
+def lora(pcfg: PeftConfig, exclude=DEFAULT_EXCLUDE) -> Peft:
+    r, alpha = pcfg.lora_rank, pcfg.lora_alpha
+
+    def init(params, rng):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        rngs = jax.random.split(rng, max(len(flat), 1))
+
+        def one(path, leaf, key):
+            name = path_str(path)
+            if not adapt.is_adaptable(name, leaf, exclude):
+                return None
+            d_in, d_out = leaf.shape[-2], leaf.shape[-1]
+            stack = leaf.shape[:-2]
+            a = (
+                jax.random.normal(key, (*stack, d_in, r), jnp.float32) * d_in**-0.5
+            ).astype(leaf.dtype)
+            b = jnp.zeros((*stack, r, d_out), leaf.dtype)
+            # scale is stack-shaped so lax.scan over layers can slice it;
+            # it is a constant (stop_gradient at use site in alinear).
+            return {"A": a, "B": b, "scale": jnp.full(stack, alpha / r, leaf.dtype)}
+
+        leaves = [one(p, l, k) for (p, l), k in zip(flat, rngs)]
+        return jax.tree_util.tree_unflatten(treedef, leaves), None
+
+    def model_inputs(params, trainable, aux):
+        return params, trainable
+
+    def _is_lora(x):
+        return x is None or (isinstance(x, dict) and "A" in x)
+
+    def merge(params, trainable, aux):
+        def one(w, ad):
+            if ad is None:
+                return w
+            dense = jnp.einsum(
+                "...ir,...ro->...io",
+                ad["A"].astype(jnp.float32),
+                ad["B"].astype(jnp.float32),
+            ) * ad["scale"].astype(jnp.float32)[..., None, None]
+            return (w.astype(jnp.float32) + dense).astype(w.dtype)
+
+        return jax.tree.map(one, params, trainable, is_leaf=_is_lora)
+
+    return Peft("lora", init, model_inputs, lambda g, aux: g, merge)
+
+
+# -------------------------------------------------------------------- BitFit
+
+
+_BITFIT_PAT = (r".*/b$", r".*norm.*", r".*_norm$")
+
+
+def bitfit(pcfg: PeftConfig) -> Peft:
+    """Train biases + norm scales only (Ben Zaken et al., 2022)."""
+
+    def is_bitfit(name, leaf):
+        return any(re.fullmatch(p, name) for p in _BITFIT_PAT) and leaf.ndim <= 2
+
+    def init(params, rng):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        # copies, not aliases: the trainable tree is donated by the trainer
+        leaves = [jnp.copy(l) if is_bitfit(path_str(p), l) else None for p, l in flat]
+        return jax.tree_util.tree_unflatten(treedef, leaves), None
+
+    def model_inputs(params, trainable, aux):
+        eff = jax.tree.map(
+            lambda p, t: p if t is None else t,
+            params,
+            trainable,
+            is_leaf=lambda x: x is None,
+        )
+        return eff, None
+
+    def merge(params, trainable, aux):
+        return model_inputs(params, trainable, aux)[0]
+
+    return Peft("bitfit", init, model_inputs, lambda g, aux: g, merge)
+
+
+# ------------------------------------------------- mask-based sparse tuning
+
+
+def masked_sparse(pcfg: PeftConfig, exclude=DEFAULT_EXCLUDE) -> Peft:
+    """The paper's Fig. 2 baseline: same top-k selection, but dense grads,
+    dense optimizer states, and a binary mask zeroing unselected updates."""
+
+    def init(params, rng):
+        indices, _ = init_adapters(
+            params, pcfg.k, strategy=pcfg.strategy, rng=rng, exclude=exclude
+        )
+
+        def mask_of(w, idx):
+            if idx is None:
+                return jnp.zeros(w.shape, jnp.bool_)
+            m = jnp.zeros(w.shape, jnp.bool_)
+            return jnp.put_along_axis(
+                m, idx, jnp.ones(idx.shape, jnp.bool_), axis=-2, inplace=False
+            )
+
+        mask = jax.tree.map(mask_of, params, indices, is_leaf=lambda x: x is None)
+        trainable = jax.tree.map(jnp.copy, params)  # dense copy — the point
+        return trainable, mask
+
+    def model_inputs(params, trainable, aux):
+        return trainable, None
+
+    def post_grad(grads, mask):
+        return jax.tree.map(lambda g, m: g * m.astype(g.dtype), grads, mask)
+
+    def merge(params, trainable, aux):
+        return trainable
+
+    return Peft("masked", init, model_inputs, post_grad, merge)
+
+
+# ------------------------------------------------------------------- full FT
+
+
+def full_ft(pcfg: PeftConfig) -> Peft:
+    def init(params, rng):
+        return jax.tree.map(jnp.copy, params), None
+
+    def model_inputs(params, trainable, aux):
+        return trainable, None
+
+    return Peft("full", init, model_inputs, lambda g, aux: g, lambda p, t, a: t)
+
+
+# ------------------------------------------------------------------ registry
+
+
+def get_peft(pcfg: PeftConfig, **kw) -> Peft:
+    m = pcfg.method
+    if m == "neuroada":
+        return neuroada(pcfg, **kw)
+    if m == "lora":
+        return lora(pcfg)
+    if m == "bitfit":
+        return bitfit(pcfg)
+    if m == "masked":
+        return masked_sparse(pcfg)
+    if m in ("full", "none"):
+        return full_ft(pcfg)
+    raise ValueError(f"unknown peft method {m!r}")

@@ -1,0 +1,3 @@
+from repro.train.trainer import Trainer, TrainState, make_train_step
+
+__all__ = ["TrainState", "Trainer", "make_train_step"]

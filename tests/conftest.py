@@ -1,0 +1,10 @@
+# Tests run on the single real CPU device (the 512-device fake platform is
+# dryrun.py-only). Keep jax x64 off; seed hypothesis deterministically.
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")

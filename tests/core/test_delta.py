@@ -1,0 +1,85 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Delta,
+    delta_matmul,
+    init_delta,
+    merge,
+    scatter_to_dense,
+    topk_indices,
+    init_adapters,
+    merge_adapters,
+    zip_adapters,
+    count_trainable,
+    count_total,
+)
+
+RNG = np.random.default_rng(1)
+
+
+def _delta(d_in=24, d_out=12, k=3):
+    w = jnp.asarray(RNG.normal(size=(d_in, d_out)), jnp.float32)
+    idx = topk_indices(w, k)
+    val = jnp.asarray(RNG.normal(size=(k, d_out)), jnp.float32)
+    return w, Delta(idx, val)
+
+
+def test_zero_init_is_identity():
+    w, d = _delta()
+    d0 = init_delta(d.idx)
+    x = jnp.asarray(RNG.normal(size=(5, 24)), jnp.float32)
+    assert np.allclose(delta_matmul(x, d0), 0.0)
+    assert np.allclose(merge(w, d0), w)
+
+
+def test_delta_equals_dense_scatter():
+    w, d = _delta()
+    x = jnp.asarray(RNG.normal(size=(5, 24)), jnp.float32)
+    dense = scatter_to_dense(d, 24)
+    np.testing.assert_allclose(delta_matmul(x, d), x @ dense, atol=1e-5)
+
+
+def test_merge_equals_forward_sum():
+    w, d = _delta()
+    x = jnp.asarray(RNG.normal(size=(5, 24)), jnp.float32)
+    np.testing.assert_allclose(
+        x @ merge(w, d), x @ w + delta_matmul(x, d), atol=1e-5
+    )
+
+
+def test_grads_flow_only_to_values():
+    w, d = _delta()
+    x = jnp.asarray(RNG.normal(size=(5, 24)), jnp.float32)
+
+    def loss(val):
+        return jnp.sum(jnp.tanh(x @ w + delta_matmul(x, Delta(d.idx, val))))
+
+    g = jax.grad(loss)(d.val)
+    assert g.shape == d.val.shape and np.any(np.asarray(g) != 0)
+
+
+def test_adapter_tree_roundtrip():
+    params = {
+        "blocks": {
+            "wq": {"w": jnp.asarray(RNG.normal(size=(4, 16, 8)), jnp.float32)},
+            "attn_norm": jnp.ones((4, 16)),
+        },
+        "embed": {"w": jnp.asarray(RNG.normal(size=(32, 16)), jnp.float32)},
+    }
+    ind, vals = init_adapters(params, 2)
+    assert ind["blocks"]["wq"]["w"].shape == (4, 2, 8)
+    assert ind["blocks"]["attn_norm"] is None
+    assert ind["embed"]["w"] is None  # excluded
+    assert count_trainable(vals) == 4 * 2 * 8
+    assert count_total(params) > 0
+    # zero-init merge is identity
+    merged = merge_adapters(params, ind, vals)
+    np.testing.assert_allclose(
+        np.asarray(merged["blocks"]["wq"]["w"], np.float32),
+        np.asarray(params["blocks"]["wq"]["w"], np.float32),
+    )
+    ad = zip_adapters(ind, vals)
+    assert isinstance(ad["blocks"]["wq"]["w"], Delta)
+    assert ad["embed"]["w"] is None

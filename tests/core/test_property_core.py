@@ -1,0 +1,78 @@
+"""Hypothesis property tests on NeuroAda's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import Delta, delta_matmul, merge, scatter_to_dense, topk_indices
+
+dims = st.tuples(
+    st.integers(2, 24),  # d_in
+    st.integers(1, 12),  # d_out
+    st.integers(1, 32),  # batch
+    st.integers(0, 2**31 - 1),  # seed
+)
+
+
+@given(dims, st.integers(1, 6))
+def test_merge_equivalence(d, k):
+    d_in, d_out, b, seed = d
+    k = min(k, d_in)
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(d_in, d_out)), jnp.float32)
+    idx = topk_indices(w, k)
+    val = jnp.asarray(r.normal(size=(k, d_out)), jnp.float32)
+    delta = Delta(idx, val)
+    x = jnp.asarray(r.normal(size=(b, d_in)), jnp.float32)
+    lhs = x @ merge(w, delta)
+    rhs = x @ w + delta_matmul(x, delta)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-4)
+
+
+@given(dims, st.integers(1, 6))
+def test_scatter_preserves_l0(d, k):
+    """‖Δ‖₀ ≤ k·d_out exactly (Eq. 1): compact form == sparse dense form."""
+    d_in, d_out, _, seed = d
+    k = min(k, d_in)
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(d_in, d_out)), jnp.float32)
+    idx = topk_indices(w, k)
+    val = jnp.asarray(r.normal(size=(k, d_out)) + 3.0, jnp.float32)  # nonzero
+    dense = np.asarray(scatter_to_dense(Delta(idx, val), d_in))
+    assert np.count_nonzero(dense) == k * d_out
+
+
+@given(dims)
+def test_every_neuron_covered(d):
+    """Paper's core claim: k>=1 gives every neuron a trainable input."""
+    d_in, d_out, _, seed = d
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(d_in, d_out)), jnp.float32)
+    idx = np.asarray(topk_indices(w, 1))
+    assert idx.shape == (1, d_out)
+    assert np.all((0 <= idx) & (idx < d_in))
+
+
+@given(dims, st.integers(1, 4))
+def test_grad_sparsity(d, k):
+    """dL/dΔ touches only selected coordinates — scatter grads land only at
+    idx positions when mapped to dense space."""
+    d_in, d_out, b, seed = d
+    k = min(k, d_in)
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(d_in, d_out)), jnp.float32)
+    idx = topk_indices(w, k)
+    x = jnp.asarray(r.normal(size=(b, d_in)), jnp.float32)
+
+    def dense_loss(dense_delta):
+        return jnp.sum(jnp.sin(x @ (w + dense_delta)))
+
+    def sparse_loss(val):
+        return jnp.sum(jnp.sin(x @ w + delta_matmul(x, Delta(idx, val))))
+
+    val0 = jnp.zeros((k, d_out), jnp.float32)
+    g_sparse = jax.grad(sparse_loss)(val0)
+    g_dense = jax.grad(dense_loss)(jnp.zeros((d_in, d_out)))
+    picked = jnp.take_along_axis(g_dense, idx, axis=0)
+    np.testing.assert_allclose(np.asarray(g_sparse), np.asarray(picked), atol=1e-4)

@@ -1,0 +1,84 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topk_indices, k_for_budget
+
+RNG = np.random.default_rng(0)
+
+
+def test_top1_matches_argmax():
+    w = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32)
+    idx = topk_indices(w, 1)
+    assert idx.shape == (1, 32)
+    np.testing.assert_array_equal(
+        np.asarray(idx[0]), np.argmax(np.abs(np.asarray(w)), axis=0)
+    )
+
+
+@pytest.mark.parametrize("k", [1, 3, 7])
+def test_topk_indices_unique_and_sorted_by_magnitude(k):
+    w = jnp.asarray(RNG.normal(size=(40, 16)), jnp.float32)
+    idx = np.asarray(topk_indices(w, k))
+    aw = np.abs(np.asarray(w))
+    for col in range(16):
+        sel = idx[:, col]
+        assert len(set(sel.tolist())) == k  # unique
+        mags = aw[sel, col]
+        assert np.all(np.diff(mags) <= 1e-7)  # descending
+        # every selected >= every unselected
+        unsel = np.setdiff1d(np.arange(40), sel)
+        assert mags.min() >= aw[unsel, col].max() - 1e-7
+
+
+def test_stacked_leading_dims():
+    w = jnp.asarray(RNG.normal(size=(3, 5, 20, 8)), jnp.float32)
+    idx = topk_indices(w, 2)
+    assert idx.shape == (3, 5, 2, 8)
+    # spot check one slice
+    ref = topk_indices(w[1, 2], 2)
+    np.testing.assert_array_equal(np.asarray(idx[1, 2]), np.asarray(ref))
+
+
+def test_reverse_picks_smallest():
+    w = jnp.asarray(RNG.normal(size=(30, 4)), jnp.float32)
+    idx = np.asarray(topk_indices(w, 1, strategy="reverse"))
+    np.testing.assert_array_equal(idx[0], np.argmin(np.abs(np.asarray(w)), axis=0))
+
+
+def test_gradient_strategy_uses_grad():
+    w = jnp.asarray(RNG.normal(size=(30, 4)), jnp.float32)
+    g = jnp.zeros_like(w).at[7].set(100.0)
+    idx = np.asarray(topk_indices(w, 1, strategy="gradient", grad=g))
+    assert np.all(idx[0] == 7)
+
+
+def test_random_strategy_unique_and_seeded():
+    w = jnp.ones((50, 8))
+    i1 = topk_indices(w, 5, strategy="random", rng=jax.random.PRNGKey(0))
+    i2 = topk_indices(w, 5, strategy="random", rng=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    for col in range(8):
+        assert len(set(np.asarray(i1)[:, col].tolist())) == 5
+
+
+def test_k_for_budget():
+    shapes = {"a": (100, 50), "b": (100, 50)}
+    total = 2 * 100 * 50
+    k = k_for_budget(total, shapes, 0.01)
+    assert k == 1
+    k = k_for_budget(total, shapes, 0.5)
+    assert k == 50
+
+
+def test_bad_inputs():
+    w = jnp.ones((8, 4))
+    with pytest.raises(ValueError):
+        topk_indices(w, 0)
+    with pytest.raises(ValueError):
+        topk_indices(w, 9)
+    with pytest.raises(ValueError):
+        topk_indices(w, 1, strategy="nope")
+    with pytest.raises(ValueError):
+        topk_indices(w, 1, strategy="gradient")

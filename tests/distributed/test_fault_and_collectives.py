@@ -1,0 +1,57 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.distributed.collectives import (
+    collective_bytes_saved,
+    dequantize,
+    ef_int8,
+    quantize,
+)
+from repro.distributed.fault import NanGuard, StragglerMonitor
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
+    q, s = quantize(x)
+    assert q.dtype == jnp.int8
+    err = jnp.max(jnp.abs(dequantize(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-6
+
+
+def test_ef_int8_error_feedback_converges():
+    """With error feedback, the accumulated transmitted sum tracks the true
+    gradient sum (the EF guarantee)."""
+    init, apply = ef_int8()
+    g = {"w": jnp.full((16,), 0.001, jnp.float32)}
+    state = init(g)
+    sent = jnp.zeros((16,))
+    for _ in range(50):
+        out, state = apply(g, state)
+        sent = sent + out["w"]
+    np.testing.assert_allclose(np.asarray(sent), 0.05, rtol=0.05)
+
+
+def test_collective_bytes_saved_matches_paper_ratio():
+    assert collective_bytes_saved(1, 5120) == 5120  # paper's 5120× (Eq. 6)
+
+
+def test_straggler_monitor_flags_outlier():
+    rng = np.random.default_rng(0)
+    mon = StragglerMonitor(alpha=0.3, threshold_sigma=2.0)
+    for i in range(15):
+        assert mon.observe(i, 0.01 + rng.uniform(0, 1e-4)) is False
+    assert mon.observe(99, 0.5) is True
+    assert mon.flagged and mon.flagged[-1][0] == 99
+
+
+def test_nan_guard_trips():
+    g = NanGuard(max_skipped=2)
+    g.record(True)
+    g.record(True)
+    with pytest.raises(RuntimeError):
+        g.record(True)
+    g2 = NanGuard(max_skipped=2)
+    for _ in range(10):
+        g2.record(False)  # healthy steps never trip

@@ -1,0 +1,59 @@
+"""Pallas flash-attention kernel sweeps vs the dense oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import (
+    flash_attention_fwd_pallas,
+    flash_attention_gqa_pallas,
+)
+from repro.models.attention import dense_attention
+
+RNG = np.random.default_rng(11)
+
+CASES = [
+    # (B, S, H, Hkv, hd, causal)
+    (2, 128, 4, 2, 16, True),
+    (2, 128, 4, 2, 16, False),
+    (1, 256, 8, 8, 32, True),
+    (2, 128, 8, 2, 64, True),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_gqa_matches_dense(case, dt):
+    b, s, h, hkv, hd, causal = case
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)), dt)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, hd)), dt)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, hd)), dt)
+    want = dense_attention(q, k, v, causal=causal)
+    got = flash_attention_gqa_pallas(
+        q, k, v, causal=causal, block_q=64, block_k=64, interpret=True
+    )
+    atol = 1e-4 if dt == jnp.float32 else 0.05
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 64), (64, 32), (128, 128)])
+def test_flash_block_shape_invariance(bq, bk):
+    b, s, hd = 3, 128, 16
+    q = jnp.asarray(RNG.normal(size=(b, s, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, hd)), jnp.float32)
+    ref = flash_attention_fwd_pallas(
+        q, k, v, causal=True, block_q=128, block_k=128, interpret=True
+    )
+    got = flash_attention_fwd_pallas(
+        q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_flash_rejects_ragged():
+    q = jnp.zeros((1, 100, 16))
+    with pytest.raises(ValueError):
+        flash_attention_fwd_pallas(q, q, q, block_q=64, block_k=64, interpret=True)

@@ -1,0 +1,60 @@
+"""Dry-run building blocks that don't need the 512-device platform."""
+
+import pytest
+
+from repro.configs import SHAPES
+
+
+def _auto_microbatches(shape, dp, fsdp=False):
+    # import inside: repro.launch.dryrun sets XLA_FLAGS at import, which is
+    # harmless here (jax already initialized with 1 device in-process).
+    from repro.launch.dryrun import auto_microbatches
+
+    return auto_microbatches(shape, dp, fsdp=fsdp)
+
+
+def test_auto_microbatches_divides_batch():
+    s = SHAPES["train_4k"]  # B=256, S=4096
+    for dp in (1, 16, 32):
+        m = _auto_microbatches(s, dp)
+        assert s.global_batch % m == 0
+        assert (s.global_batch // m) % dp == 0
+
+
+def test_auto_microbatches_targets_tokens():
+    from repro.launch.dryrun import MICROBATCH_TOKENS
+
+    s = SHAPES["train_4k"]
+    m = _auto_microbatches(s, 16)
+    tokens_per_dev_per_mb = s.global_batch * s.seq_len // 16 // m
+    assert tokens_per_dev_per_mb >= MICROBATCH_TOKENS
+    assert tokens_per_dev_per_mb // 2 < MICROBATCH_TOKENS  # maximal split
+
+
+def test_apply_variant():
+    from repro.launch.dryrun import apply_variant
+    from repro.configs import get_config
+
+    cfg = get_config("zamba2-2.7b")
+    assert apply_variant(cfg, "chunk512").ssm_chunk == 512
+    assert apply_variant(cfg, "chunk1024").ssm_chunk == 1024
+    assert apply_variant(cfg, "flash256").flash_block == 256
+    with pytest.raises(ValueError):
+        apply_variant(cfg, "nope")
+
+
+def test_activation_context_is_noop_when_clear():
+    import jax.numpy as jnp
+
+    from repro.distributed.context import (
+        clear_activation_sharding,
+        constrain,
+        constrain_inner,
+        constrain_moe,
+    )
+
+    clear_activation_sharding()
+    x = jnp.ones((2, 8, 4))
+    assert constrain(x) is x
+    assert constrain_inner(x) is x
+    assert constrain_moe(x) is x

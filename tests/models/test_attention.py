@@ -1,0 +1,64 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import dense_attention, flash_attention
+
+RNG = np.random.default_rng(3)
+
+
+def _qkv(b=2, sq=64, skv=64, h=4, hkv=2, hd=16):
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, skv, hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, skv, hkv, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("block", [8, 16, 64])
+def test_flash_matches_dense(causal, block):
+    q, k, v = _qkv()
+    o1 = dense_attention(q, k, v, causal=causal)
+    o2 = flash_attention(q, k, v, causal=causal, block=block)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_grads_match_dense(causal):
+    q, k, v = _qkv(sq=32, skv=32)
+
+    def f(fn):
+        def loss(q, k, v):
+            return jnp.sum(jnp.sin(fn(q, k, v)))
+        return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    g1 = f(lambda q, k, v: dense_attention(q, k, v, causal=causal))
+    g2 = f(lambda q, k, v: flash_attention(q, k, v, causal=causal, block=8))
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_decode_valid_len_masks_tail():
+    """Garbage beyond kv_valid_len must not affect the output."""
+    q, k, v = _qkv(sq=1, skv=32)
+    o1 = dense_attention(q, k, v, causal=False, kv_valid_len=10)
+    k2 = k.at[:, 10:].set(1e4)
+    v2 = v.at[:, 10:].set(-1e4)
+    o2 = dense_attention(q, k2, v2, causal=False, kv_valid_len=10)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_per_example_valid_len():
+    q, k, v = _qkv(sq=1, skv=16)
+    vl = jnp.asarray([4, 16])
+    o = dense_attention(q, k, v, causal=False, kv_valid_len=vl)
+    o0 = dense_attention(q[:1], k[:1], v[:1], causal=False, kv_valid_len=4)
+    np.testing.assert_allclose(np.asarray(o[0]), np.asarray(o0[0]), atol=1e-5)
+
+
+def test_q_offset_matches_suffix_of_full():
+    q, k, v = _qkv(sq=64, skv=64)
+    full = dense_attention(q, k, v, causal=True)
+    tail = dense_attention(q[:, 48:], k, v, causal=True, q_offset=48)
+    np.testing.assert_allclose(np.asarray(full[:, 48:]), np.asarray(tail), atol=1e-5)

@@ -1,0 +1,68 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, apply_updates, clip_by_global_norm, get_schedule
+
+
+def test_adamw_decreases_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.asarray([5.0, -3.0]), "skip": None}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.tree.map(
+            lambda p: None if p is None else 2 * p, params, is_leaf=lambda x: x is None
+        )
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+    assert params["skip"] is None
+
+
+def test_moments_are_f32_for_bf16_params():
+    opt = adamw(0.1)
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.float32
+    assert state.nu["w"].dtype == jnp.float32
+    updates, _ = opt.update({"w": jnp.ones((4,), jnp.bfloat16)}, state, params)
+    assert updates["w"].dtype == jnp.bfloat16  # no FP32 master weights
+
+
+def test_sparse_state_size_matches_paper_eq6():
+    """AdamW state for NeuroAda is 2·d_out·k f32 — by construction."""
+    d_out, k = 64, 2
+    opt = adamw(1e-3)
+    trainable = {"delta": jnp.zeros((k, d_out), jnp.bfloat16)}
+    state = opt.init(trainable)
+    n = sum(x.size for x in jax.tree.leaves((state.mu, state.nu)))
+    assert n == 2 * d_out * k
+
+
+def test_weight_decay():
+    opt = adamw(0.1, weight_decay=0.5)
+    params = {"w": jnp.asarray([10.0])}
+    state = opt.init(params)
+    updates, _ = opt.update({"w": jnp.asarray([0.0])}, state, params)
+    assert float(updates["w"][0]) < 0  # pure decay pulls toward 0
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-5
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8], atol=1e-5)
+    same, _ = clip_by_global_norm(grads, 10.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), [3.0, 4.0], atol=1e-5)
+
+
+def test_schedules():
+    for name in ("linear", "cosine", "constant"):
+        fn = get_schedule(name, 1e-3, 100, 0.1)
+        v0 = float(fn(jnp.int32(0)))
+        vp = float(fn(jnp.int32(10)))
+        ve = float(fn(jnp.int32(100)))
+        assert vp >= v0
+        assert vp <= 1e-3 + 1e-9
+        if name != "constant":
+            assert ve <= vp

@@ -1,0 +1,94 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PeftConfig, get_config, reduced
+from repro.core.adapt import path_str
+from repro.models import get_model
+from repro.peft import count_params, get_peft, stats
+
+CFG = reduced(get_config("qwen2-1.5b"))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    m = get_model(CFG)
+    params = m.init(jax.random.PRNGKey(0))
+    return m, params
+
+
+def test_neuroada_budget_scales_with_k(setup):
+    m, params = setup
+    fracs = []
+    for k in (1, 4):
+        peft = get_peft(PeftConfig(method="neuroada", k=k))
+        tr, aux = peft.init(params, jax.random.PRNGKey(1))
+        fracs.append(stats(params, tr)["fraction"])
+    assert abs(fracs[1] / fracs[0] - 4.0) < 1e-6
+
+
+def test_neuroada_deltas_bf16_zero_init(setup):
+    m, params = setup
+    peft = get_peft(PeftConfig(method="neuroada", k=1))
+    tr, aux = peft.init(params, jax.random.PRNGKey(1))
+    for leaf in jax.tree.leaves(tr):
+        assert leaf.dtype == jnp.bfloat16
+        assert np.all(np.asarray(leaf, np.float32) == 0)
+
+
+def test_lora_zero_at_init(setup):
+    m, params = setup
+    peft = get_peft(PeftConfig(method="lora", lora_rank=4))
+    tr, aux = peft.init(params, jax.random.PRNGKey(1))
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+    eff, ad = peft.model_inputs(params, tr, aux)
+    lg1, _ = m.forward(eff, ad, batch)
+    lg0, _ = m.forward(params, None, batch)
+    np.testing.assert_allclose(
+        np.asarray(lg1, np.float32), np.asarray(lg0, np.float32), atol=1e-5
+    )
+    merged = peft.merge(params, tr, aux)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_bitfit_selects_only_bias_norm(setup):
+    m, params = setup
+    peft = get_peft(PeftConfig(method="bitfit"))
+    tr, _ = peft.init(params, jax.random.PRNGKey(1))
+    flat = jax.tree_util.tree_flatten_with_path(tr, is_leaf=lambda x: x is None)[0]
+    for path, leaf in flat:
+        name = path_str(path)
+        if leaf is not None:
+            assert name.endswith("/b") or "norm" in name, name
+    assert count_params(tr) > 0
+
+
+def test_masked_fraction_of_selected(setup):
+    m, params = setup
+    peft = get_peft(PeftConfig(method="masked", k=1))
+    tr, mask = peft.init(params, jax.random.PRNGKey(1))
+    # grads masked to selection
+    g = jax.tree.map(jnp.ones_like, tr)
+    mg = peft.post_grad(g, mask)
+    total_sel = sum(
+        int(np.asarray(m_, bool).sum()) for m_ in jax.tree.leaves(mask)
+    )
+    nz = sum(int((np.asarray(x) != 0).sum()) for x in jax.tree.leaves(mg))
+    assert nz == total_sel
+
+
+def test_neuroada_matches_masked_selection_positions(setup):
+    """Same strategy/k ⇒ NeuroAda indices == mask positions (the paper's
+    'same selection, different mechanism' comparison)."""
+    m, params = setup
+    pcfg = PeftConfig(method="neuroada", k=1)
+    na = get_peft(pcfg)
+    _, indices = na.init(params, jax.random.PRNGKey(1))
+    mk = get_peft(PeftConfig(method="masked", k=1))
+    _, mask = mk.init(params, jax.random.PRNGKey(1))
+    idx = indices["blocks"]["wq"]["w"]  # (L,1,d_out)
+    msk = np.asarray(mask["blocks"]["wq"]["w"])  # (L,d_in,d_out)
+    sel = np.argmax(msk, axis=-2)  # first True per column
+    np.testing.assert_array_equal(np.asarray(idx)[:, 0, :], sel)

@@ -1,0 +1,68 @@
+"""The 40-cell (arch × shape) matrix contract + config invariants."""
+
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, all_cells, get_config, reduced
+from repro.models import get_model
+
+
+def test_matrix_is_40_cells_with_8_documented_skips():
+    cells = all_cells()
+    assert len(cells) == 40
+    skipped = [c for c in cells if not c[2]]
+    assert len(skipped) == 8
+    for arch, shape, ok, why in skipped:
+        assert shape == "long_500k"
+        assert "sub-quadratic" in why
+    runnable_long = [c for c in cells if c[1] == "long_500k" and c[2]]
+    assert {c[0] for c in runnable_long} == {"zamba2-2.7b", "falcon-mamba-7b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_configs_match_assignment(arch):
+    cfg = get_config(arch)
+    expect = {
+        "zamba2-2.7b": (54, 2560, 10240, 32000),
+        "qwen3-32b": (64, 5120, 25600, 151936),
+        "llama3-405b": (126, 16384, 53248, 128256),
+        "qwen2-1.5b": (28, 1536, 8960, 151936),
+        "qwen2.5-3b": (36, 2048, 11008, 151936),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 6400, 32064),
+        "olmoe-1b-7b": (16, 2048, 1024, 50304),
+        "seamless-m4t-large-v2": (24, 1024, 8192, 256206),
+        "qwen2-vl-2b": (28, 1536, 8960, 151936),
+        "falcon-mamba-7b": (64, 4096, 0, 65024),
+    }[arch]
+    assert (cfg.num_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == expect
+    # padded vocab always 128-aligned (TP-16 divisible)
+    assert cfg.padded_vocab % 128 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_are_abstract(arch, shape):
+    """input_specs never allocates: every leaf is a ShapeDtypeStruct."""
+    from repro.configs import cell_is_runnable
+
+    cfg = get_config(arch)
+    ok, _ = cell_is_runnable(cfg, SHAPES[shape])
+    if not ok:
+        pytest.skip("documented skip")
+    specs = get_model(cfg).input_specs(SHAPES[shape])
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+    # batch dims match the shape config
+    b = SHAPES[shape].global_batch
+    if SHAPES[shape].mode == "decode":
+        assert specs["token"].shape == (b,)
+    else:
+        assert specs["tokens"].shape[0] == b
+
+
+def test_reduced_configs_are_small():
+    for arch in ARCH_IDS:
+        cfg = reduced(get_config(arch))
+        assert cfg.d_model <= 64 and cfg.num_layers <= 2
+        assert cfg.vocab_size <= 512
