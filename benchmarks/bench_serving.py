@@ -1,0 +1,89 @@
+"""Serving micro-bench: decode throughput/latency vs slots × tenants.
+
+Compares merged serving (Alg. 1 phase 3 — the zero-overhead single-tenant
+path) against unmerged multi-tenant serving (per-slot batched delta apply)
+on the reduced dense arch. Emits the ``name,us_per_call,derived`` CSV
+schema of benchmarks.run so the perf trajectory picks it up. Times are CPU
+wall — the structural claim (one jitted call, no per-slot host traffic)
+holds on any backend."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_model
+from repro.core.adapt import init_adapters, merge_adapters
+from repro.serve import AdapterStore, ServeEngine
+
+
+def _adapter(params, seed, k=2, scale=0.05):
+    idx, val = init_adapters(params, k, rng=jax.random.PRNGKey(seed))
+    val = jax.tree.map(
+        lambda i, v: None
+        if v is None
+        else scale
+        * jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(seed), v.size), v.shape
+        ),
+        idx,
+        val,
+        is_leaf=lambda x: x is None,
+    )
+    return idx, val
+
+
+def _run_engine(m, params, *, slots, store, n_tenants, steps):
+    eng = ServeEngine(m, params, slots=slots, max_len=128, adapter_store=store)
+    for i in range(slots):
+        aid = 1 + i % n_tenants if n_tenants else 0
+        eng.submit([1, 3 + i, 7, 2 + i], max_new=steps + 1, adapter_id=aid)
+    eng.step()  # admission + compile of both prefill and decode
+    t0 = time.perf_counter()
+    n = 0
+    while eng.step():
+        n += 1
+    wall = time.perf_counter() - t0
+    return wall / max(n, 1) * 1e6, slots * n / wall
+
+
+def run(*, steps: int = 24) -> list[str]:
+    out = []
+    cfg, m, params = bench_model("qwen2-1.5b")
+    adapters = [_adapter(params, seed) for seed in (1, 2, 3, 4)]
+
+    for slots in (1, 4, 8):
+        # merged single-tenant reference: delta folded into the weights
+        merged = merge_adapters(params, *adapters[0])
+        us, tok_s = _run_engine(
+            m, merged, slots=slots, store=None, n_tenants=0, steps=steps
+        )
+        out.append(
+            f"serve.decode.slots{slots}.merged,{us:.0f},tok_s={tok_s:.1f} tenants=0"
+        )
+        for n_tenants in (1, 4):
+            store = AdapterStore()
+            for ad in adapters[:n_tenants]:
+                store.register(*ad)
+            us, tok_s = _run_engine(
+                m, params, slots=slots, store=store, n_tenants=n_tenants, steps=steps
+            )
+            out.append(
+                f"serve.decode.slots{slots}.unmerged{n_tenants},{us:.0f},"
+                f"tok_s={tok_s:.1f} tenants={n_tenants}"
+            )
+
+    # prefill bucketing: cost of admitting a mixed-length batch
+    eng = ServeEngine(m, params, slots=4, max_len=128)
+    for plen in (3, 9, 17, 30):
+        eng.submit(list(np.arange(1, plen + 1)), max_new=2)
+    t0 = time.perf_counter()
+    eng.run_to_completion()
+    out.append(f"serve.prefill.bucketed_admit4,{(time.perf_counter() - t0) * 1e6:.0f},")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -23,6 +23,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_kernels,
+        bench_serving,
         fig4_budget_parity,
         fig5_memory_time,
         fig6_neuron_proportion,
@@ -33,6 +34,7 @@ def main() -> None:
     suites = [
         ("table1", table1_memory.run, {}),
         ("kernels", bench_kernels.run, {}),
+        ("serving", bench_serving.run, {}),
         ("fig5", fig5_memory_time.run, {"steps": min(steps, 40)}),
         ("fig6", fig6_neuron_proportion.run, {"steps": steps + 80}),
         ("fig7", fig7_selection_strategies.run, {"steps": steps + 80}),

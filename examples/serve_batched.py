@@ -1,5 +1,5 @@
-"""Batched serving: slot-based continuous batching over a merged NeuroAda
-model — staggered request arrival, per-slot positions, greedy decoding.
+"""Batched serving: slot-based continuous batching, multi-tenant adapters —
+staggered request arrival, per-slot positions, per-slot NeuroAda deltas.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -9,8 +9,9 @@ import time
 import jax
 
 from repro.configs import get_config, reduced
+from repro.core.adapt import init_adapters
 from repro.models import get_model
-from repro.serve.engine import ServeEngine
+from repro.serve import AdapterStore, ServeEngine
 
 
 def main():
@@ -18,7 +19,19 @@ def main():
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    engine = ServeEngine(model, params, slots=4, max_len=128)
+    # two tenants: unmerged (indices, values) deltas over one frozen base
+    # (random values stand in for training — see launch/train.py
+    # --export-adapter for the real artifact)
+    store = AdapterStore()
+    for seed in (1, 2):
+        idx, val = init_adapters(params, 2, rng=jax.random.PRNGKey(seed))
+        val = jax.tree.map(
+            lambda i, v: None if v is None else 0.05 * jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(seed), v.size), v.shape),
+            idx, val, is_leaf=lambda x: x is None)
+        store.register(idx, val, name=f"tenant{seed}")
+
+    engine = ServeEngine(model, params, slots=4, max_len=128, adapter_store=store)
     prompts = [
         [1, 10, 11, 12],
         [1, 20, 21],
@@ -28,16 +41,17 @@ def main():
         [1, 60, 61],
     ]
     t0 = time.perf_counter()
-    reqs = []
     for i, p in enumerate(prompts):
-        engine.submit(p, max_new=16)
+        # tenants interleave: base model, tenant1, tenant2, base, …
+        engine.submit(p, max_new=16, adapter_id=i % 3)
     reqs = engine.run_to_completion()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out) for r in reqs)
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s on CPU)")
     for r in reqs:
-        print(f"  req{r.rid} prompt={r.prompt} -> {r.out}")
+        tenant = "base" if r.adapter_id == 0 else store.names[r.adapter_id - 1]
+        print(f"  req{r.rid} [{tenant}] prompt={r.prompt} -> {r.out}")
 
 
 if __name__ == "__main__":

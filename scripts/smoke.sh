@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# CI smoke entrypoint: tier-1 suite + a reduced-config end-to-end serve.
+#
+# The serve leg exports two synthetic tenants' unmerged adapters and drives
+# launch/serve.py in multi-tenant mode, so serving regressions (engine,
+# batched kernel path, adapter I/O, CLI) fail fast even when no unit test
+# covers the exact wiring.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== serving e2e (reduced, multi-tenant) =="
+tmpdir=$(mktemp -d)
+trap 'rm -rf "$tmpdir"' EXIT
+python - "$tmpdir" <<'EOF'
+import sys
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core.adapt import init_adapters
+from repro.models import get_model
+from repro.peft import export_adapter
+
+tmpdir = sys.argv[1]
+cfg = reduced(get_config("qwen2-1.5b"))
+params = get_model(cfg).init(jax.random.PRNGKey(0))
+for seed in (1, 2):
+    idx, val = init_adapters(params, 2, rng=jax.random.PRNGKey(seed))
+    val = jax.tree.map(
+        lambda i, v: None if v is None else 0.05 * jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(seed), v.size), v.shape),
+        idx, val, is_leaf=lambda x: x is None)
+    export_adapter(f"{tmpdir}/tenant{seed}.npz", idx, val, {"arch": cfg.name})
+print("exported 2 tenant adapters")
+EOF
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,17,25;1,40,41,42" --max-new 8 \
+    | tee "$tmpdir/serve.out"
+grep -q "tenant1" "$tmpdir/serve.out"
+grep -q "tenant2" "$tmpdir/serve.out"
+
+echo "== smoke OK =="

@@ -28,6 +28,20 @@ class Delta(NamedTuple):
     val: jax.Array  # (..., k, d_out) compute dtype — zero-init trainables
 
 
+class BatchedDelta(NamedTuple):
+    """N stacked adapters for one matrix + a per-row adapter selection.
+
+    Multi-tenant serving leaf: ``idx``/``val`` stack N tenants' deltas along
+    a leading axis and ``aid`` names, for every batch row of the activation,
+    which tenant's delta applies. The contraction is the same k-term lane
+    gather as :class:`Delta`, with one extra per-row gather over N.
+    """
+
+    idx: jax.Array  # (N, ..., k, d_out) int32
+    val: jax.Array  # (N, ..., k, d_out) compute dtype
+    aid: jax.Array  # (B,) int32 in [0, N) — adapter id per batch row
+
+
 def init_delta(idx: jax.Array, dtype=jnp.float32) -> Delta:
     return Delta(idx=idx, val=jnp.zeros(idx.shape, dtype=dtype))
 

@@ -2,6 +2,8 @@
 
 sparse_delta / fused_linear — the paper's "fused scatter-add" bypass path
 (footnote 2), TPU-adapted as lane gathers (DESIGN.md §2.2);
+sparse_delta_batched — the multi-tenant serving variant: N stacked adapters
+selected per batch row (DESIGN.md §7);
 topk_select — Alg. 1 Phase 1 offline selection;
 flash_attention — fused online-softmax attention (added from the §Perf
 memory-term analysis).
@@ -16,7 +18,11 @@ from repro.kernels.flash_attention import (
     flash_attention_gqa_pallas,
 )
 from repro.kernels.fused_linear import fused_linear_pallas
-from repro.kernels.sparse_delta import sparse_delta_dval_pallas, sparse_delta_pallas
+from repro.kernels.sparse_delta import (
+    sparse_delta_batched_pallas,
+    sparse_delta_dval_pallas,
+    sparse_delta_pallas,
+)
 from repro.kernels.topk_select import topk_select_pallas
 
 __all__ = [
@@ -25,6 +31,7 @@ __all__ = [
     "fused_linear_pallas",
     "ops",
     "ref",
+    "sparse_delta_batched_pallas",
     "sparse_delta_dval_pallas",
     "sparse_delta_pallas",
     "topk_select_pallas",

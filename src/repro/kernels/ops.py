@@ -25,7 +25,11 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.fused_linear import fused_linear_pallas
-from repro.kernels.sparse_delta import sparse_delta_dval_pallas, sparse_delta_pallas
+from repro.kernels.sparse_delta import (
+    sparse_delta_batched_pallas,
+    sparse_delta_dval_pallas,
+    sparse_delta_pallas,
+)
 from repro.kernels.topk_select import topk_select_pallas
 
 _BACKENDS = ("jnp", "pallas", "pallas_interpret")
@@ -96,6 +100,39 @@ def delta_apply(x: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
     x2d = x.reshape(-1, x.shape[-1])
     y = _delta_apply_pallas(x2d, idx, val, _backend == "pallas_interpret")
     return y.reshape(*lead, idx.shape[-1])
+
+
+def delta_apply_batched(
+    x: jax.Array, idx: jax.Array, val: jax.Array, aid: jax.Array
+) -> jax.Array:
+    """Multi-tenant bypass apply: per-row adapter selection from a stack.
+
+    x (..., d_in) × stacks (N, k, d_out) selected by ``aid`` -> (..., d_out).
+    ``aid`` int32 must broadcast (left-aligned) against ``x.shape[:-1]`` —
+    the serving engine passes (B,) ids against (B, S, d_in) activations.
+    Inference-only on the Pallas backends (no custom VJP; training uses the
+    single-tenant paths).
+    """
+    lead = x.shape[:-1]
+    if aid.ndim < len(lead):
+        aid = aid.reshape(aid.shape + (1,) * (len(lead) - aid.ndim))
+    aid = jnp.broadcast_to(aid, lead).astype(jnp.int32)
+    if _backend == "jnp":
+        idx_m = jnp.take(idx, aid, axis=0)  # (..., k, d_out)
+        val_m = jnp.take(val, aid, axis=0)
+        xg = jnp.take_along_axis(x[..., None, :], idx_m, axis=-1)
+        return jnp.sum(xg * val_m.astype(x.dtype), axis=-2)
+    x2d = x.reshape(-1, x.shape[-1])
+    aid1 = aid.reshape(-1)
+    bm = 128 if x2d.shape[0] >= 128 else 8
+    xp, m = _pad_to(x2d, 0, bm)
+    ap, _ = _pad_to(aid1, 0, bm)
+    ip, n = _pad_to(idx, 2, 128)
+    vp, _ = _pad_to(val, 2, 128)
+    y = sparse_delta_batched_pallas(
+        xp, ip, vp, ap, block_m=bm, interpret=_backend == "pallas_interpret"
+    )
+    return y[:m, :n].reshape(*lead, idx.shape[-1])
 
 
 # --------------------------------------------------------------- fused linear

@@ -33,6 +33,19 @@ def sparse_delta_dx_ref(idx: jax.Array, val: jax.Array, dy: jax.Array, d_in: int
     return dx.at[:, idx].add(upd)
 
 
+def sparse_delta_batched_ref(
+    x: jax.Array, idx: jax.Array, val: jax.Array, aid: jax.Array
+) -> jax.Array:
+    """Multi-tenant bypass: yΔ[m, o] = Σ_j val[aid[m], j, o] · x[m, idx[aid[m], j, o]].
+
+    x: (M, d_in); idx/val: (N, k, d_out) adapter stacks; aid: (M,) int32.
+    """
+    idx_m = jnp.take(idx, aid, axis=0)  # (M, k, d_out)
+    val_m = jnp.take(val, aid, axis=0)
+    xg = jnp.take_along_axis(x[:, None, :], idx_m, axis=-1)  # (M, k, d_out)
+    return jnp.sum(xg * val_m.astype(x.dtype), axis=-2)
+
+
 def fused_linear_ref(
     x: jax.Array,
     w: jax.Array,

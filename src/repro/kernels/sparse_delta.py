@@ -80,6 +80,60 @@ def sparse_delta_pallas(
     )(x, idx, val)
 
 
+def _delta_batched_kernel(x_ref, idx_ref, val_ref, aid_ref, y_ref, *, k: int, n: int):
+    """Per-slot adapter selection: row m applies adapter aid[m]'s k bypasses.
+
+    N and k are static and small (tenant count × bypass count), so the
+    double loop unrolls into N·k lane gathers with a per-row select — no
+    per-sublane dynamic gather, which Mosaic handles poorly.
+    """
+    x = x_ref[...]  # (bm, d_in)
+    idx = idx_ref[...]  # (n, k, bn) int32
+    val = val_ref[...]  # (n, k, bn)
+    aid = aid_ref[...]  # (bm, 1) int32
+    acc = jnp.zeros(y_ref.shape, jnp.float32)
+    for a in range(n):
+        contrib = jnp.zeros(y_ref.shape, jnp.float32)
+        for j in range(k):
+            xg = jnp.take(x, idx[a, j], axis=1)  # lane gather -> (bm, bn)
+            contrib = contrib + xg.astype(jnp.float32) * val[a, j].astype(jnp.float32)
+        acc = acc + jnp.where(aid == a, contrib, 0.0)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+def sparse_delta_batched_pallas(
+    x: jax.Array,
+    idx: jax.Array,
+    val: jax.Array,
+    aid: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x (M, d_in) · Delta-stack (N, k, d_out) selected by aid (M,) -> (M, d_out)."""
+    m, d_in = x.shape
+    n_ad, k, d_out = idx.shape
+    bm = min(block_m, m)
+    bn = min(block_n, d_out)
+    if m % bm or d_out % bn:
+        raise ValueError(f"M={m}, d_out={d_out} must tile by ({bm}, {bn})")
+    grid = (m // bm, d_out // bn)
+    return pl.pallas_call(
+        functools.partial(_delta_batched_kernel, k=k, n=n_ad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_ad, k, bn), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((n_ad, k, bn), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), x.dtype),
+        interpret=interpret,
+    )(x, idx, val, aid[:, None])
+
+
 def sparse_delta_dval_pallas(
     x: jax.Array,
     idx: jax.Array,

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 _NEG = float("-inf")
 
 
@@ -79,7 +81,7 @@ def topk_select_pallas(
             pltpu.VMEM((k, bn), jnp.float32),
             pltpu.VMEM((k, bn), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -1,7 +1,15 @@
-"""Serving launcher: load (merged) params, serve batched requests.
+"""Serving launcher: one base model, N tenants, batched multi-tenant decode.
+
+Single-tenant (merged params, zero runtime overhead):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       [--params merged.npz] --prompts "1,17,25;1,40,41" --max-new 16
+
+Multi-tenant (unmerged adapters from ``train --export-adapter``; requests
+cycle through the tenants unless ``--adapter-ids`` pins them):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --adapters a.npz,b.npz --prompts "1,17,25;1,40,41" [--adapter-ids 1,2]
 """
 
 from __future__ import annotations
@@ -12,7 +20,7 @@ import jax
 
 from repro.configs import ARCH_IDS, PAPER_ARCH_IDS, get_config, reduced
 from repro.models import get_model
-from repro.serve.engine import ServeEngine
+from repro.serve import AdapterStore, ServeEngine
 
 
 def main(argv=None):
@@ -21,11 +29,18 @@ def main(argv=None):
                     choices=ARCH_IDS + PAPER_ARCH_IDS)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--params", default="", help="npz from train --export")
+    ap.add_argument("--adapters", default="",
+                    help="comma-separated npz files from train --export-adapter; "
+                         "each becomes a tenant (adapter id 1..N, 0 = base)")
+    ap.add_argument("--adapter-ids", default="",
+                    help="comma-separated adapter id per prompt "
+                         "(default: cycle 1..N over tenants, 0 when none)")
     ap.add_argument("--prompts", default="1,17,25;1,40,41,42")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -39,14 +54,35 @@ def main(argv=None):
     else:
         params = model.init(jax.random.PRNGKey(0))
 
+    store = None
+    if args.adapters:
+        from repro.peft import load_adapter
+
+        store = AdapterStore()
+        for path in args.adapters.split(","):
+            aid = store.register(*load_adapter(path), name=path)
+            print(f"tenant {aid}: {path}")
+
     engine = ServeEngine(
         model, params, slots=args.slots, max_len=args.max_len,
-        temperature=args.temperature,
+        temperature=args.temperature, top_k=args.top_k, adapter_store=store,
     )
-    for p in args.prompts.split(";"):
-        engine.submit([int(t) for t in p.split(",") if t], max_new=args.max_new)
+    prompts = [p for p in args.prompts.split(";") if p]
+    n_tenants = store.num_adapters if store is not None else 0
+    if args.adapter_ids:
+        ids = [int(t) for t in args.adapter_ids.split(",")]
+        if len(ids) != len(prompts):
+            raise SystemExit(
+                f"--adapter-ids has {len(ids)} entries for {len(prompts)} prompts"
+            )
+    else:
+        ids = [1 + i % n_tenants if n_tenants else 0 for i in range(len(prompts))]
+    for p, aid in zip(prompts, ids):
+        engine.submit([int(t) for t in p.split(",") if t],
+                      max_new=args.max_new, adapter_id=aid)
     for req in engine.run_to_completion():
-        print(f"req{req.rid}: prompt={req.prompt} -> {req.out}")
+        tenant = "base" if req.adapter_id == 0 else f"tenant{req.adapter_id}"
+        print(f"req{req.rid} [{tenant}]: prompt={req.prompt} -> {req.out}")
 
 
 if __name__ == "__main__":

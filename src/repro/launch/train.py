@@ -49,6 +49,9 @@ def parse_args(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--export", default="", help="save merged params here")
+    ap.add_argument("--export-adapter", default="",
+                    help="save the UNMERGED (indices, values) adapter here "
+                         "for multi-tenant serving (neuroada only)")
     return ap.parse_args(argv)
 
 
@@ -93,6 +96,15 @@ def main(argv=None):
         save_pytree(args.export, trainer.merged_params(),
                     {"arch": cfg.name, "peft": args.peft})
         log.info("merged params exported to %s", args.export)
+    if args.export_adapter:
+        if args.peft != "neuroada":
+            raise SystemExit("--export-adapter requires --peft neuroada")
+        from repro.peft import export_adapter
+
+        # neuroada: aux is the indices tree, trainable the values tree
+        export_adapter(args.export_adapter, trainer.aux, trainer.state.trainable,
+                       {"arch": cfg.name, "peft": args.peft})
+        log.info("unmerged adapter exported to %s", args.export_adapter)
     return hist
 
 

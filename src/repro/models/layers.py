@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.delta import Delta
+from repro.core.delta import BatchedDelta, Delta
 from repro.kernels import ops
 
 # ------------------------------------------------------------------ dtypes
@@ -51,7 +51,8 @@ def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
 def ad_get(a, name: str):
     """Fetch the adapter leaf for ``name`` from an adapter dict (or None).
 
-    Returns a ``Delta`` (NeuroAda) or a LoRA dict {"A","B"} or None.
+    Returns a ``Delta`` (NeuroAda), a ``BatchedDelta`` (multi-tenant
+    serving), a LoRA dict {"A","B"}, or None.
     """
     if not isinstance(a, dict):
         return None
@@ -62,7 +63,7 @@ def ad_get(a, name: str):
         return None
     if isinstance(d, dict) and "A" in d:
         return d  # LoRA leaf
-    if not isinstance(d, Delta):
+    if not isinstance(d, (Delta, BatchedDelta)):
         d = Delta(*d)
     return d
 
@@ -73,6 +74,11 @@ def alinear(p: dict, a, name: str, x: jax.Array) -> jax.Array:
     w = leaf["w"]
     b = leaf.get("b")
     d = ad_get(a, name)
+    if isinstance(d, BatchedDelta):
+        y = jnp.dot(x, w) + ops.delta_apply_batched(x, d.idx, d.val, d.aid)
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return y
     if isinstance(d, Delta):
         return ops.fused_linear(x, w, d.idx, d.val, b)
     y = jnp.dot(x, w)

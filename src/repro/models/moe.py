@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.delta import BatchedDelta
 from repro.distributed.context import constrain_moe
 from repro.kernels import ops
 from repro.models.layers import ad_get
@@ -25,16 +26,6 @@ from repro.models.layers import ad_get
 def capacity(cfg, tokens: int) -> int:
     c = int(-(-tokens * cfg.experts_per_token * cfg.capacity_factor // cfg.num_experts))
     return max(c, cfg.experts_per_token)
-
-
-def _expert_linear(p, a, name, eh):
-    """eh (E, C, Din) @ w (E, Din, Dout) + vmapped NeuroAda delta."""
-    w = p[name]["w"]
-    y = jnp.einsum("ecd,edf->ecf", eh, w)
-    d = ad_get(a, name)
-    if d is not None:
-        y = y + jax.vmap(ops.delta_apply)(eh, d.idx, d.val)
-    return y
 
 
 def _route_group(cfg, xt, probs, c):
@@ -102,11 +93,12 @@ def moe_ffn(cfg, p, a, x, *, groups: int = 32):
     # expert-major layout is the dispatch all-to-all under GSPMD. The
     # explicit constraint keeps G data-sharded through the expert matmuls.
     eh = constrain_moe(eh)
-    h = jax.nn.silu(_expert_linear_g(p, a, "wgate", eh)) * _expert_linear_g(
-        p, a, "wup", eh
+    aid_buf = _dispatch_adapter_ids(a, route, b, s, g, e, c)
+    h = jax.nn.silu(_expert_linear_g(p, a, "wgate", eh, aid_buf)) * _expert_linear_g(
+        p, a, "wup", eh, aid_buf
     )
     h = constrain_moe(h)
-    out_e = constrain_moe(_expert_linear_g(p, a, "wdown", h))  # (G, E, C, D)
+    out_e = constrain_moe(_expert_linear_g(p, a, "wdown", h, aid_buf))  # (G, E, C, D)
 
     yt = jax.vmap(lambda oe, r: _combine_group(oe, r, tg, x.dtype))(out_e, route)
 
@@ -119,12 +111,50 @@ def moe_ffn(cfg, p, a, x, *, groups: int = 32):
     return yt.reshape(b, s, dm), aux
 
 
-def _expert_linear_g(p, a, name, eh):
+def _dispatch_adapter_ids(a, route, b, s, g, e, c):
+    """Scatter per-sequence adapter ids through the expert dispatch.
+
+    Multi-tenant serving (BatchedDelta leaves): expert-buffer row (e, c)
+    holds a token from some sequence; its delta must come from that
+    sequence's tenant. Empty buffer rows keep aid 0 — harmless, their
+    activations are zero so the delta contributes zero. Router gating stays
+    base-model (tenant-agnostic) by policy — see DESIGN.md §7.
+    """
+    d0 = next(
+        (
+            d
+            for d in (ad_get(a, nm) for nm in ("wgate", "wup", "wdown"))
+            if isinstance(d, BatchedDelta)
+        ),
+        None,
+    )
+    if d0 is None:
+        return None
+    tg = b * s // g
+    aid_t = jnp.broadcast_to(d0.aid[:, None], (b, s)).reshape(g, tg)
+
+    def one(aid_g, tok_of, dest):
+        buf = jnp.zeros((e * c,), jnp.int32)
+        buf = buf.at[dest].set(jnp.take(aid_g, tok_of), mode="drop")
+        return buf.reshape(e, c)
+
+    tok_of, dest, _, _ = route
+    return jax.vmap(one)(aid_t, tok_of, dest)
+
+
+def _expert_linear_g(p, a, name, eh, aid_buf=None):
     """eh (G, E, C, Din) @ w (E, Din, Dout) + vmapped NeuroAda delta."""
     w = p[name]["w"]
     y = jnp.einsum("gecd,edf->gecf", eh, w)
     d = ad_get(a, name)
-    if d is not None:
+    if isinstance(d, BatchedDelta):
+        yd = jax.vmap(  # over G; inner vmap over E slices the (N, E, k, F) stacks
+            lambda ehg, aidg: jax.vmap(
+                ops.delta_apply_batched, in_axes=(0, 1, 1, 0)
+            )(ehg, d.idx, d.val, aidg)
+        )(eh, aid_buf)
+        y = y + yd
+    elif d is not None:
         yd = jax.vmap(  # over G
             lambda ehg: jax.vmap(ops.delta_apply)(ehg, d.idx, d.val)
         )(eh)

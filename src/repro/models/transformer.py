@@ -11,10 +11,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.delta import BatchedDelta, Delta
 from repro.distributed.context import constrain, constrain_inner
+from repro.kernels import ops
 from repro.models import moe as moe_lib
 from repro.models.attention import attention
 from repro.models.layers import (
+    ad_get,
     alinear,
     apply_mrope,
     apply_rope,
@@ -143,6 +146,24 @@ def _split_blocks(params, adapters):
     return params["blocks"], a_blocks
 
 
+def _head_logits(cfg, params, adapters, h):
+    """Output projection + NeuroAda bypass on an untied head.
+
+    The head matrix is adaptable like any linear (it is outside the layer
+    scan, so its delta has no leading L axis); tied-embedding models have
+    no head param and thus no head delta. LoRA head leaves are ignored —
+    LoRA adapts block projections only.
+    """
+    head_w = params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
+    logits = jnp.dot(h, head_w)
+    d = ad_get(adapters, "head") if isinstance(adapters, dict) else None
+    if isinstance(d, BatchedDelta):
+        logits = logits + ops.delta_apply_batched(h, d.idx, d.val, d.aid)
+    elif isinstance(d, Delta):
+        logits = logits + ops.delta_apply(h, d.idx, d.val)
+    return logits
+
+
 def _embed_inputs(cfg, params, batch):
     dt = compute_dtype(cfg)
     tokens = batch["tokens"]
@@ -180,10 +201,7 @@ def forward_train(cfg, params, adapters, batch, *, remat="none"):
         body = jax.checkpoint(body, policy=policy)
     (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), (blocks, a_blocks))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    head_w = (
-        params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
-    )
-    logits = jnp.dot(h, head_w)
+    logits = _head_logits(cfg, params, adapters, h)
     return logits, aux / cfg.num_layers
 
 
@@ -214,7 +232,14 @@ def init_cache(cfg, batch: int, max_len: int):
 
 
 def prefill(cfg, params, adapters, batch):
-    """Full forward over the prompt; returns (last-token logits, cache)."""
+    """Full forward over the prompt; returns (last-token logits, cache).
+
+    ``batch["last_pos"]`` (B,) optionally names the final *real* token per
+    sequence for right-padded (bucketed) prompts: logits are gathered there
+    instead of at -1. Right pads are exact under causal attention — real
+    positions never attend to them — and their garbage cache rows are
+    overwritten by decode before ``kv_valid_len`` reaches them.
+    """
     h, positions, mrope_pos = _embed_inputs(cfg, params, batch)
     blocks, a_blocks = _split_blocks(params, adapters)
 
@@ -230,9 +255,10 @@ def prefill(cfg, params, adapters, batch):
         return hh + y, (k, v)
 
     h, (ck, cv) = jax.lax.scan(body, h, (blocks, a_blocks))
-    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
-    head_w = params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
-    logits = jnp.dot(h, head_w)[:, 0]
+    last = batch.get("last_pos")
+    hs = h[:, -1:] if last is None else jnp.take_along_axis(h, last[:, None, None], axis=1)
+    h = rms_norm(hs, params["final_norm"], cfg.norm_eps)
+    logits = _head_logits(cfg, params, adapters, h)[:, 0]
     return logits, {"k": ck, "v": cv}
 
 
@@ -257,6 +283,5 @@ def decode_step(cfg, params, adapters, cache, batch):
 
     h, (ck, cv) = jax.lax.scan(body, h, (blocks, a_blocks, cache["k"], cache["v"]))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    head_w = params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
-    logits = jnp.dot(h, head_w)[:, 0]
+    logits = _head_logits(cfg, params, adapters, h)[:, 0]
     return logits, {"k": ck, "v": cv}

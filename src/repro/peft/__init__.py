@@ -1,3 +1,17 @@
-from repro.peft.api import Peft, count_params, get_peft, stats
+from repro.peft.api import (
+    Peft,
+    count_params,
+    export_adapter,
+    get_peft,
+    load_adapter,
+    stats,
+)
 
-__all__ = ["Peft", "count_params", "get_peft", "stats"]
+__all__ = [
+    "Peft",
+    "count_params",
+    "export_adapter",
+    "get_peft",
+    "load_adapter",
+    "stats",
+]

@@ -42,6 +42,29 @@ class Peft(NamedTuple):
     merge: Callable  # (params, trainable, aux) -> params
 
 
+def export_adapter(path: str, indices, values, metadata: dict | None = None) -> None:
+    """Save an UNMERGED NeuroAda adapter — the multi-tenant serving artifact.
+
+    Unlike ``merge`` + checkpoint export (which bakes the delta into a full
+    copy of the base weights), this stores only the ``(k, d_out)`` index and
+    value trees, so N tenants ship N tiny files against one shared base
+    model and the engine applies them per-slot at decode time.
+    """
+    from repro.checkpoint.manager import save_pytree
+
+    save_pytree(path, {"indices": indices, "values": values}, metadata)
+
+
+def load_adapter(path: str):
+    """-> (indices, values) trees as saved by :func:`export_adapter`."""
+    from repro.checkpoint.manager import load_pytree
+
+    tree = load_pytree(path)
+    if not isinstance(tree, dict) or set(tree) != {"indices", "values"}:
+        raise ValueError(f"{path} is not an adapter export (expected indices+values)")
+    return tree["indices"], tree["values"]
+
+
 def count_params(tree) -> int:
     return sum(int(jnp.size(l)) for l in jax.tree.leaves(tree) if l is not None)
 

@@ -1,3 +1,23 @@
-from repro.serve.engine import Request, ServeEngine
+"""Multi-tenant, adapter-aware serving subsystem.
 
-__all__ = ["Request", "ServeEngine"]
+engine    — thin orchestration (the public ``ServeEngine``);
+scheduler — FIFO admission + slot assignment;
+kv_cache  — shared slot cache: splice/evict/positions;
+sampler   — greedy/temperature/top-k fused into the jitted step;
+adapters  — tenant registry of unmerged NeuroAda deltas.
+"""
+
+from repro.serve.adapters import AdapterStore
+from repro.serve.engine import ServeEngine
+from repro.serve.kv_cache import KVCache
+from repro.serve.sampler import Sampler
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = [
+    "AdapterStore",
+    "KVCache",
+    "Request",
+    "Sampler",
+    "Scheduler",
+    "ServeEngine",
+]

@@ -1,0 +1,136 @@
+"""Multi-tenant adapter registry: N unmerged NeuroAda deltas, one base model.
+
+Each tenant registers the ``(indices, values)`` trees produced by training
+(``peft.export_adapter`` / ``load_adapter``). The store stacks them into
+per-matrix adapter stacks — adapter id 0 is the implicit base model (zero
+values) — which the engine threads through one jitted decode call; each
+slot picks its tenant's delta via the batched kernel path
+(``ops.delta_apply_batched``).
+
+Leaves under ``blocks`` stack along axis 1 so the layer axis stays
+leading: the model's ``lax.scan`` over layers slices the stacks exactly
+like it slices params, yielding ``(N, k, d_out)`` per layer. Leaves
+outside the scan (an untied ``head/w``) stack along axis 0. The serving
+forward applies ``blocks`` and ``head`` deltas; registration warns if a
+delta elsewhere carries nonzero values (it would be silently dropped).
+"""
+
+from __future__ import annotations
+
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+log = logging.getLogger("repro.serve.adapters")
+
+# top-level subtrees the serving forward applies deltas from
+APPLIED_KEYS = ("blocks", "head")
+
+
+def _leaf_none(x):
+    return x is None
+
+
+class AdapterStore:
+    def __init__(self):
+        self._indices: list = []  # one (indices, values) tree pair per tenant
+        self._values: list = []
+        self.names: list[str] = []
+        self._stacked: tuple | None = None
+
+    @property
+    def num_adapters(self) -> int:
+        return len(self._indices)
+
+    def register(self, indices, values, name: str | None = None) -> int:
+        """Register one tenant's unmerged adapter trees; returns its
+        adapter id (1-based — id 0 is always the base model)."""
+        indices = jax.tree.map(
+            lambda x: None if x is None else jnp.asarray(x, jnp.int32),
+            indices, is_leaf=_leaf_none,
+        )
+        values = jax.tree.map(
+            lambda x: None if x is None else jnp.asarray(x),
+            values, is_leaf=_leaf_none,
+        )
+        if not isinstance(indices, dict) or "blocks" not in indices:
+            raise ValueError("adapter tree has no 'blocks' subtree")
+        label = name or f"adapter{len(self.names) + 1}"
+        istruct = jax.tree.structure(indices, is_leaf=_leaf_none)
+        vstruct = jax.tree.structure(values, is_leaf=_leaf_none)
+        if istruct != vstruct:
+            raise ValueError(
+                f"{label}: values tree does not mirror indices tree"
+            )
+        for i, v in zip(
+            jax.tree.leaves(indices, is_leaf=_leaf_none),
+            jax.tree.leaves(values, is_leaf=_leaf_none),
+        ):
+            if (i is None) != (v is None) or (
+                i is not None and i.shape != v.shape
+            ):
+                raise ValueError(f"{label}: values/indices leaf shape mismatch")
+        for key, sub in values.items():
+            if key in APPLIED_KEYS:
+                continue
+            nonzero = any(
+                bool(np.any(np.asarray(v, np.float32)))
+                for v in jax.tree.leaves(sub)
+                if v is not None
+            )
+            if nonzero:
+                log.warning(
+                    "adapter %s has nonzero deltas under %r — not applied "
+                    "at serve time (merge offline instead)",
+                    name or len(self.names), key,
+                )
+        if self._indices:
+            ref_struct = jax.tree.structure(self._indices[0], is_leaf=_leaf_none)
+            got = jax.tree.structure(indices, is_leaf=_leaf_none)
+            if ref_struct != got:
+                raise ValueError(
+                    f"adapter tree structure mismatch: {got} != {ref_struct}"
+                )
+            for a, b in zip(
+                jax.tree.leaves(self._indices[0], is_leaf=_leaf_none),
+                jax.tree.leaves(indices, is_leaf=_leaf_none),
+            ):
+                if (a is None) != (b is None) or (
+                    a is not None and a.shape != b.shape
+                ):
+                    raise ValueError("adapter leaf shape mismatch")
+        self._indices.append(indices)
+        self._values.append(values)
+        self.names.append(name or f"adapter{len(self.names) + 1}")
+        self._stacked = None
+        return len(self._indices)  # id 0 is the base model
+
+    def stacked(self):
+        """(idx_tree, val_tree) of adapter stacks, N = num_adapters + 1
+        (row 0 = base, zero values): ``blocks`` leaves are (L, N, k, d_out),
+        other leaves (N, k, d_out). None when nothing is registered."""
+        if not self._indices:
+            return None
+        if self._stacked is None:
+            base_idx = self._indices[0]
+            base_val = jax.tree.map(
+                lambda v: None if v is None else jnp.zeros_like(v),
+                self._values[0], is_leaf=_leaf_none,
+            )
+            idx_all = [base_idx, *self._indices]
+            val_all = [base_val, *self._values]
+
+            def stack_subtree(key, *ls):
+                axis = 1 if key == "blocks" else 0  # under scan: L stays leading
+                return jax.tree.map(
+                    lambda *xs: None if xs[0] is None else jnp.stack(xs, axis=axis),
+                    *ls, is_leaf=_leaf_none,
+                )
+
+            self._stacked = (
+                {k: stack_subtree(k, *(t[k] for t in idx_all)) for k in base_idx},
+                {k: stack_subtree(k, *(t[k] for t in val_all)) for k in base_val},
+            )
+        return self._stacked

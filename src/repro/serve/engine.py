@@ -1,28 +1,45 @@
-"""Batched serving engine: slot-based continuous batching (lite).
+"""Multi-tenant batched serving engine — thin orchestration layer.
 
-Fixed ``slots`` concurrent sequences share one (L, slots, max_len, …) KV
-cache. New requests prefill (B=1, bucketed lengths) and their cache rows
-are spliced into a free slot; every ``step()`` decodes all active slots in
-one jitted call with per-slot positions. Greedy or temperature sampling.
-Deltas are merged before serving (Alg. 1 phase 3) — zero runtime overhead.
+The subsystem splits along its natural seams:
+
+* :mod:`repro.serve.scheduler` — FIFO admission, slot assignment,
+  per-request adapter ids (host-side, no jax);
+* :mod:`repro.serve.kv_cache`  — the shared slot cache: splice on
+  admission, evict on completion, per-slot positions;
+* :mod:`repro.serve.sampler`   — greedy/temperature/top-k sampling fused
+  into the jitted step (one host transfer per step, never per slot);
+* :mod:`repro.serve.adapters`  — the tenant registry: N unmerged NeuroAda
+  ``(indices, values)`` trees stacked for the batched kernel path.
+
+One frozen base model serves every tenant: the decode step applies each
+slot's ``(k, d_out)`` delta in-flight via ``ops.delta_apply_batched``
+(jnp oracle or Pallas per-slot gather) instead of merging weights ahead
+of time. Prefill is bucketed — prompts pad to the next power-of-two
+length and concurrent admissions share one compiled call per
+(length-bucket, batch-bucket) — so admission cost is one compile per
+bucket, not one per prompt length.
 """
 
 from __future__ import annotations
-
-from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.delta import BatchedDelta
+from repro.serve.adapters import AdapterStore
+from repro.serve.kv_cache import KVCache
+from repro.serve.sampler import Sampler
+from repro.serve.scheduler import Request, Scheduler
 
-@dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new: int
-    out: list[int] = field(default_factory=list)
-    done: bool = False
+__all__ = ["Request", "ServeEngine"]
+
+
+def _next_pow2(n: int, lo: int = 1) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
 
 
 class ServeEngine:
@@ -35,7 +52,10 @@ class ServeEngine:
         max_len: int = 256,
         eos_id: int = 2,
         temperature: float = 0.0,
+        top_k: int = 0,
         rng=None,
+        adapter_store: AdapterStore | None = None,
+        min_prefill_bucket: int = 16,
     ):
         if model.cfg.family not in ("dense", "moe", "vlm"):
             # engine currently drives KV-cache LMs; SSM/hybrid/encdec decode
@@ -48,91 +68,175 @@ class ServeEngine:
         self.eos_id = eos_id
         self.temperature = temperature
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        self.cache = model.init_cache(slots, max_len)
-        self.pos = np.zeros((slots,), np.int32)
-        self.active: list[Request | None] = [None] * slots
-        self._queue: list[Request] = []
-        self._next_rid = 0
+        self.store = adapter_store
+        self.min_prefill_bucket = min_prefill_bucket
 
-        self._prefill = jax.jit(
-            lambda p, batch: model.prefill(p, None, batch)
-        )
-        self._decode = jax.jit(
-            lambda p, cache, batch: model.decode_step(p, None, cache, batch)
-        )
+        self.scheduler = Scheduler(slots)
+        self.kv = KVCache(model, slots, max_len)
+        self.sampler = Sampler(model.cfg.vocab_size, top_k=top_k)
+
+        L = model.cfg.num_layers
+
+        def batched_adapters(aidx, aval, aid):
+            # blocks leaves ride the layer scan: their aid copy carries a
+            # leading L axis so scan slices every xs leaf uniformly.
+            aid_l = jnp.broadcast_to(aid[None, :], (L, aid.shape[0]))
+            out = {}
+            for key, sub_i in aidx.items():
+                a = aid_l if key == "blocks" else aid
+                out[key] = jax.tree.map(
+                    lambda i, v, a=a: None if i is None else BatchedDelta(i, v, a),
+                    sub_i, aval[key], is_leaf=lambda x: x is None,
+                )
+            return out
+
+        def prefill_plain(p, tokens, last_pos, temps, key):
+            logits, cache = model.prefill(
+                p, None, {"tokens": tokens, "last_pos": last_pos}
+            )
+            return self.sampler(logits, temps, key), cache
+
+        def prefill_ad(p, aidx, aval, aid, tokens, last_pos, temps, key):
+            adapters = batched_adapters(aidx, aval, aid)
+            logits, cache = model.prefill(
+                p, adapters, {"tokens": tokens, "last_pos": last_pos}
+            )
+            return self.sampler(logits, temps, key), cache
+
+        def decode_plain(p, cache, tokens, pos, temps, key):
+            logits, cache = model.decode_step(
+                p, None, cache, {"token": tokens, "pos": pos}
+            )
+            return self.sampler(logits, temps, key), cache
+
+        def decode_ad(p, aidx, aval, aid, cache, tokens, pos, temps, key):
+            adapters = batched_adapters(aidx, aval, aid)
+            logits, cache = model.decode_step(
+                p, adapters, cache, {"token": tokens, "pos": pos}
+            )
+            return self.sampler(logits, temps, key), cache
+
+        self._prefill_plain = jax.jit(prefill_plain)
+        self._prefill_ad = jax.jit(prefill_ad)
+        self._decode_plain = jax.jit(decode_plain)
+        self._decode_ad = jax.jit(decode_ad)
 
     # ------------------------------------------------------------- intake
 
-    def submit(self, prompt: list[int], max_new: int = 32) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.append(Request(rid, list(prompt), max_new))
-        return rid
-
-    def _admit(self):
-        for slot in range(self.slots):
-            if self.active[slot] is not None or not self._queue:
-                continue
-            req = self._queue.pop(0)
-            plen = len(req.prompt)
-            toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
-            # exact-length prefill: the returned logits are the true
-            # next-token distribution at plen-1 (padded prefill would
-            # return pad-position logits).
-            logits, pcache = self._prefill(self.params, {"tokens": toks})
-            # splice this request's cache rows into the shared cache
-            for key in ("k", "v"):
-                c = self.cache[key]
-                upd = pcache[key]  # (L,1,plen,KV,hd)
-                c = jax.lax.dynamic_update_slice(
-                    c, upd.astype(c.dtype), (0, slot, 0, 0, 0)
-                )
-                self.cache[key] = c
-            first = self._sample(np.asarray(logits)[0])
-            req.out.append(int(first))
-            self.active[slot] = req
-            self.pos[slot] = plen
-
-    def _sample(self, logits: np.ndarray) -> int:
-        logits = logits[: self.model.cfg.vocab_size]
-        if self.temperature <= 0:
-            return int(np.argmax(logits))
-        self.rng, sub = jax.random.split(self.rng)
-        return int(
-            jax.random.categorical(sub, jnp.asarray(logits) / self.temperature)
+    def submit(
+        self,
+        prompt: list[int],
+        max_new: int = 32,
+        *,
+        adapter_id: int = 0,
+        temperature: float | None = None,
+    ) -> int:
+        if len(prompt) > self.max_len - 1:
+            raise ValueError(f"prompt length {len(prompt)} >= max_len {self.max_len}")
+        n_reg = self.store.num_adapters if self.store is not None else 0
+        if not 0 <= adapter_id <= n_reg:
+            raise ValueError(
+                f"adapter_id {adapter_id} not registered (have {n_reg} + base)"
+            )
+        temp = self.temperature if temperature is None else temperature
+        return self.scheduler.submit(
+            prompt, max_new, adapter_id=adapter_id, temperature=temp
         )
+
+    def _bucket(self, plen: int) -> int:
+        return min(_next_pow2(plen, self.min_prefill_bucket), self.max_len)
+
+    def _admit(self, key) -> None:
+        admitted = self.scheduler.admissible()
+        if not admitted:
+            return
+        stacked = self.store.stacked() if self.store is not None else None
+        buckets: dict[int, list[tuple[int, Request]]] = {}
+        for slot, req in admitted:
+            buckets.setdefault(self._bucket(len(req.prompt)), []).append((slot, req))
+        for i, (blen, group) in enumerate(sorted(buckets.items())):
+            bsz = _next_pow2(len(group))
+            tokens = np.zeros((bsz, blen), np.int32)
+            last_pos = np.zeros((bsz,), np.int32)
+            aid = np.zeros((bsz,), np.int32)
+            temps = np.zeros((bsz,), np.float32)
+            for row, (_, req) in enumerate(group):
+                plen = len(req.prompt)
+                tokens[row, :plen] = req.prompt
+                last_pos[row] = plen - 1
+                aid[row] = req.adapter_id
+                temps[row] = req.temperature
+            args = (
+                jnp.asarray(tokens), jnp.asarray(last_pos),
+                jnp.asarray(temps), jax.random.fold_in(key, i),
+            )
+            if stacked is None:
+                first, pcache = self._prefill_plain(self.params, *args)
+            else:
+                first, pcache = self._prefill_ad(
+                    self.params, *stacked, jnp.asarray(aid), *args
+                )
+            first_np = np.asarray(first)
+            for row, (slot, req) in enumerate(group):
+                self.kv.splice(slot, pcache, row, len(req.prompt))
+                req.out.append(int(first_np[row]))
+                self._maybe_finish(slot, req)
 
     # --------------------------------------------------------------- step
 
     def step(self) -> bool:
         """One decode step over all active slots. False when fully idle."""
-        self._admit()
-        if all(r is None for r in self.active):
+        self.rng, k_admit, k_samp = jax.random.split(self.rng, 3)
+        self._admit(k_admit)
+        # a request can finish AT admission (first token is EOS, max_new=1),
+        # freeing its slot with the queue still non-empty — keep admitting,
+        # or queued requests strand behind an idle engine
+        while not self.scheduler.has_active() and self.scheduler.has_queued():
+            self.rng, k_admit = jax.random.split(self.rng)
+            self._admit(k_admit)
+        if not self.scheduler.has_active():
             return False
         tokens = np.zeros((self.slots,), np.int32)
-        for s, req in enumerate(self.active):
+        aid = np.zeros((self.slots,), np.int32)
+        temps = np.zeros((self.slots,), np.float32)
+        for s, req in enumerate(self.scheduler.active):
             if req is not None:
                 tokens[s] = req.out[-1]
-        batch = {"token": jnp.asarray(tokens), "pos": jnp.asarray(self.pos)}
-        logits, self.cache = self._decode(self.params, self.cache, batch)
-        logits = np.asarray(logits, np.float32)
-        for s, req in enumerate(self.active):
+                aid[s] = req.adapter_id
+                temps[s] = req.temperature
+        stacked = self.store.stacked() if self.store is not None else None
+        args = (
+            self.kv.data, jnp.asarray(tokens), jnp.asarray(self.kv.pos),
+            jnp.asarray(temps), k_samp,
+        )
+        if stacked is None:
+            nxt, self.kv.data = self._decode_plain(self.params, *args)
+        else:
+            nxt, self.kv.data = self._decode_ad(
+                self.params, *stacked, jnp.asarray(aid), *args
+            )
+        nxt_np = np.asarray(nxt)  # ONE device->host transfer for all slots
+        for s, req in enumerate(self.scheduler.active):
             if req is None:
                 continue
-            self.pos[s] += 1
-            nxt = self._sample(logits[s])
-            req.out.append(nxt)
-            if (
-                nxt == self.eos_id
-                or len(req.out) >= req.max_new
-                or self.pos[s] >= self.max_len - 1
-            ):
-                req.done = True
-                self.active[s] = None
+            self.kv.advance(s)
+            req.out.append(int(nxt_np[s]))
+            self._maybe_finish(s, req)
         return True
 
+    def _maybe_finish(self, slot: int, req: Request) -> None:
+        if (
+            req.out[-1] == self.eos_id
+            or len(req.out) >= req.max_new
+            or self.kv.full(slot)
+        ):
+            self.scheduler.complete(slot)
+            self.kv.evict(slot)
+
     def run_to_completion(self) -> list[Request]:
-        reqs = list(self._queue)
+        """Drain everything in flight: queued AND already-admitted active
+        slots (the seed engine dropped the latter from its snapshot)."""
+        reqs = self.scheduler.in_flight()
         while self.step():
             pass
         return reqs

@@ -1,0 +1,43 @@
+"""Slot-based KV cache manager: splice-in on admission, per-slot positions.
+
+Owns the shared ``(L, slots, max_len, KV, hd)`` cache trees and the host
+mirror of per-slot write positions. Prefill produces a ``(L, B, S_bucket,
+KV, hd)`` cache for a whole admission bucket; :meth:`splice` copies one
+batch row into a slot. Rows past the true prompt length contain pad
+garbage — exact anyway, because decode overwrites position ``p`` before
+``kv_valid_len`` ever reaches it (see transformer.prefill).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+class KVCache:
+    def __init__(self, model, slots: int, max_len: int):
+        self.slots = slots
+        self.max_len = max_len
+        self.data = model.init_cache(slots, max_len)
+        self.pos = np.zeros((slots,), np.int32)
+
+    def splice(self, slot: int, pcache: dict, row: int, plen: int) -> None:
+        """Copy batch row ``row`` of a prefill cache into ``slot``."""
+        for key in ("k", "v"):
+            c = self.data[key]
+            upd = pcache[key][:, row : row + 1]  # (L, 1, S_bucket, KV, hd)
+            self.data[key] = jax.lax.dynamic_update_slice(
+                c, upd.astype(c.dtype), (0, slot, 0, 0, 0)
+            )
+        self.pos[slot] = plen
+
+    def evict(self, slot: int) -> None:
+        """Free a slot. Cache rows are left stale — the next splice
+        overwrites them, and decode never attends past ``pos``."""
+        self.pos[slot] = 0
+
+    def advance(self, slot: int) -> None:
+        self.pos[slot] += 1
+
+    def full(self, slot: int) -> bool:
+        return self.pos[slot] >= self.max_len - 1

@@ -1,0 +1,38 @@
+"""Token sampling fused into the jitted decode step.
+
+The seed engine pulled per-slot logits to the host and sampled in a Python
+loop — ``slots`` device→host round-trips per step. This sampler runs
+*inside* the jitted prefill/decode calls: one ``(B, V)`` logits tensor in,
+one ``(B,)`` token vector out, a single host transfer per step for the
+whole batch.
+
+Greedy vs. temperature is resolved per row from a traced ``(B,)``
+temperature vector (0 = greedy), so tenants with different sampling
+settings share one compiled step. ``top_k`` is a static engine-level
+setting (0 = off).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class Sampler:
+    def __init__(self, vocab_size: int, *, top_k: int = 0):
+        self.vocab_size = vocab_size
+        self.top_k = top_k
+
+    def __call__(
+        self, logits: jax.Array, temps: jax.Array, key: jax.Array
+    ) -> jax.Array:
+        """logits (B, V_padded), temps (B,), key -> sampled tokens (B,) int32."""
+        lg = logits[:, : self.vocab_size].astype(jnp.float32)
+        if self.top_k and self.top_k < self.vocab_size:
+            kth = jax.lax.top_k(lg, self.top_k)[0][:, -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        temps = temps.astype(jnp.float32)
+        scaled = lg / jnp.maximum(temps, 1e-6)[:, None]
+        sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+        return jnp.where(temps > 0.0, sampled, greedy)

@@ -1,0 +1,78 @@
+"""FIFO request admission and slot assignment for the serving engine.
+
+Host-side bookkeeping only — no jax. Requests queue in submit order; every
+admission round pops as many as there are free slots. Each request carries
+its tenant's ``adapter_id`` (0 = base model) and its own sampling
+temperature, both threaded into the jitted decode step as traced arrays.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    adapter_id: int = 0
+    temperature: float = 0.0
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Scheduler:
+    """FIFO admission over a fixed set of decode slots."""
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.active: list[Request | None] = [None] * slots
+        self._queue: deque[Request] = deque()
+        self._next_rid = 0
+
+    def submit(
+        self,
+        prompt: list[int],
+        max_new: int = 32,
+        *,
+        adapter_id: int = 0,
+        temperature: float = 0.0,
+    ) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(
+            Request(rid, list(prompt), max_new, adapter_id, temperature)
+        )
+        return rid
+
+    def admissible(self) -> list[tuple[int, Request]]:
+        """Pop queued requests into free slots (FIFO); returns (slot, req)."""
+        out = []
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self._queue:
+                continue
+            req = self._queue.popleft()
+            self.active[slot] = req
+            out.append((slot, req))
+        return out
+
+    def complete(self, slot: int) -> None:
+        req = self.active[slot]
+        if req is not None:
+            req.done = True
+        self.active[slot] = None
+
+    def has_active(self) -> bool:
+        return any(r is not None for r in self.active)
+
+    def has_queued(self) -> bool:
+        return bool(self._queue)
+
+    def in_flight(self) -> list[Request]:
+        """All unfinished requests — admitted slots AND the queue, in
+        submit (rid) order. Admitted-but-unfinished requests must be part
+        of this snapshot: ``run_to_completion`` returns it."""
+        reqs = [r for r in self.active if r is not None] + list(self._queue)
+        return sorted(reqs, key=lambda r: r.rid)

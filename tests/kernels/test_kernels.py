@@ -7,7 +7,11 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.fused_linear import fused_linear_pallas
-from repro.kernels.sparse_delta import sparse_delta_dval_pallas, sparse_delta_pallas
+from repro.kernels.sparse_delta import (
+    sparse_delta_batched_pallas,
+    sparse_delta_dval_pallas,
+    sparse_delta_pallas,
+)
 from repro.kernels.topk_select import topk_select_pallas
 
 RNG = np.random.default_rng(7)
@@ -41,6 +45,55 @@ def test_sparse_delta_fwd(shape, dt):
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
     )
+
+
+@pytest.mark.parametrize("n_ad", [1, 3])
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("dt", DTYPES)
+def test_sparse_delta_batched(shape, dt, n_ad):
+    m, d_in, d_out, k = shape
+    x = jnp.asarray(RNG.normal(size=(m, d_in)), dt)
+    idx = jnp.asarray(RNG.integers(0, d_in, size=(n_ad, k, d_out)), jnp.int32)
+    val = jnp.asarray(RNG.normal(size=(n_ad, k, d_out)), dt)
+    aid = jnp.asarray(RNG.integers(0, n_ad, size=(m,)), jnp.int32)
+    got = sparse_delta_batched_pallas(x, idx, val, aid, interpret=True)
+    want = ref.sparse_delta_batched_ref(x, idx, val, aid)
+    atol = 1e-4 if dt == jnp.float32 else 0.15
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+def test_batched_ref_matches_per_row_single():
+    """Row m with aid a must equal the single-adapter kernel on adapter a."""
+    m, d_in, d_out, k, n_ad = 8, 64, 96, 3, 4
+    x = jnp.asarray(RNG.normal(size=(m, d_in)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, d_in, size=(n_ad, k, d_out)), jnp.int32)
+    val = jnp.asarray(RNG.normal(size=(n_ad, k, d_out)), jnp.float32)
+    aid = np.asarray(RNG.integers(0, n_ad, size=(m,)))
+    want = np.stack(
+        [
+            np.asarray(ref.sparse_delta_ref(x[i : i + 1], idx[a], val[a]))[0]
+            for i, a in enumerate(aid)
+        ]
+    )
+    got = ref.sparse_delta_batched_ref(x, idx, val, jnp.asarray(aid, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+def test_ops_delta_apply_batched_backends_and_padding():
+    x = jnp.asarray(RNG.normal(size=(2, 5, 100)), jnp.float32)  # ragged dims
+    idx = jnp.asarray(RNG.integers(0, 100, size=(3, 2, 70)), jnp.int32)
+    val = jnp.asarray(RNG.normal(size=(3, 2, 70)), jnp.float32)
+    aid = jnp.asarray([2, 0], jnp.int32)  # (B,) ids against (B, S, d_in)
+    want = ops.delta_apply_batched(x, idx, val, aid)
+    assert want.shape == (2, 5, 70)
+    try:
+        ops.set_backend("pallas_interpret")
+        got = ops.delta_apply_batched(x, idx, val, aid)
+    finally:
+        ops.set_backend("jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
 
 
 @pytest.mark.parametrize("shape", SHAPES[:2])

@@ -66,3 +66,55 @@ def test_engine_queue_overflow_admits_later():
     reqs = eng.run_to_completion()
     assert len(reqs) == 3
     assert all(len(r.out) == 3 for r in reqs)
+
+
+def test_run_to_completion_returns_already_admitted():
+    """Regression: requests admitted by an earlier step() were dropped from
+    the result (the seed snapshotted only the queue)."""
+    cfg, m, params = _model()
+    eng = ServeEngine(m, params, slots=1, max_len=64)
+    rids = [eng.submit([1, 2, 3], max_new=3) for _ in range(3)]
+    eng.step()  # admits rid 0 into the only slot
+    reqs = eng.run_to_completion()
+    assert [r.rid for r in reqs] == rids
+    assert all(r.done and len(r.out) == 3 for r in reqs)
+
+
+def test_bucketed_prefill_matches_solo_across_lengths():
+    """Prompts spanning length buckets (16, 32) decode as if served alone."""
+    cfg, m, params = _model()
+    prompts = [[1, 5, 9], list(range(1, 21)), list(range(1, 18))]
+
+    solo = []
+    for p in prompts:
+        eng = ServeEngine(m, params, slots=1, max_len=64)
+        eng.submit(p, max_new=4)
+        solo.append(eng.run_to_completion()[0].out)
+
+    eng = ServeEngine(m, params, slots=4, max_len=64)
+    for p in prompts:
+        eng.submit(p, max_new=4)
+    reqs = eng.run_to_completion()
+    assert [r.out for r in reqs] == solo
+
+
+def test_queue_drains_when_requests_finish_at_admission():
+    """Regression: a request completing AT admission (max_new=1) freed its
+    slot but step() returned False with the queue non-empty, stranding
+    every queued request."""
+    cfg, m, params = _model()
+    eng = ServeEngine(m, params, slots=1, max_len=64)
+    for _ in range(3):
+        eng.submit([1, 2, 3], max_new=1)
+    reqs = eng.run_to_completion()
+    assert len(reqs) == 3
+    assert all(r.done and len(r.out) == 1 for r in reqs)
+
+
+def test_prompt_longer_than_max_len_rejected():
+    cfg, m, params = _model()
+    eng = ServeEngine(m, params, slots=1, max_len=32)
+    import pytest
+
+    with pytest.raises(ValueError):
+        eng.submit(list(range(40)), max_new=2)
