@@ -1,8 +1,11 @@
 """Paper Table 1: per-projection selection-state memory — binary mask vs
-NeuroAda's compact (BF16 value + int index) form, on the paper's models.
+NeuroAda's compact (BF16 value + int index) form, on the paper's models —
+plus the quantized-base extension: fp32 vs int8 vs NF4 base-weight bytes
+(the frozen base never trains, so packing it compounds the paper's win).
 
-Analytic (exact byte counts) + measured (actual array sizes from the two
-PEFT implementations on a reduced model)."""
+Analytic (exact byte counts; full configs via jax.eval_shape, no alloc) +
+measured (actual array sizes from the PEFT/quant implementations on a
+reduced model)."""
 
 from __future__ import annotations
 
@@ -10,8 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import PeftConfig, get_config, reduced
+from repro.core.adapt import adaptable_shapes
 from repro.models import get_model
-from repro.peft import get_peft
+from repro.peft import get_peft, quantize_base
 
 PAPER_MODELS = {
     "LLaMA-1 7B": 4096,
@@ -46,6 +50,49 @@ def measured_row(k: int = 1):
     return na_bytes, mask_bytes
 
 
+QUANT_BLOCK = 64
+
+
+def quant_base_rows(arch: str = "qwen2-1.5b", block: int = QUANT_BLOCK):
+    """Analytic fp32/int8/NF4 byte counts over the quantizable base weights
+    of the FULL config (shapes via eval_shape — nothing is allocated)."""
+    cfg = get_config(arch)
+    m = get_model(cfg)
+    shapes = adaptable_shapes(jax.eval_shape(m.init, jax.random.PRNGKey(0)))
+    n = sum(int(jnp.prod(jnp.asarray(s))) for s in shapes.values())
+    scale_elems = sum(
+        int(jnp.prod(jnp.asarray(s[:-2]))) * (-(-s[-2] // block)) * s[-1]
+        for s in shapes.values()
+    )
+    fp32 = 4 * n
+    int8 = n + 4 * scale_elems
+    nf4 = n // 2 + 4 * scale_elems
+    return cfg.name, n, fp32, int8, nf4
+
+
+def measured_quant_row(block: int = QUANT_BLOCK):
+    """Actual packed bytes on the reduced model, per scheme (quantizable
+    subset only, so the ratios compare scheme vs scheme)."""
+    from repro.quant import QuantizedTensor
+
+    cfg = reduced(get_config("qwen2-1.5b"))
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    fp32 = sum(
+        int(jnp.prod(jnp.asarray(s))) * 4 for s in adaptable_shapes(params).values()
+    )
+    out = {"fp32": fp32}
+    for qd in ("int8", "nf4"):
+        qp = quantize_base(params, qd, block=block)
+        out[qd] = sum(
+            l.nbytes
+            for l in jax.tree.leaves(
+                qp, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+            )
+            if isinstance(l, QuantizedTensor)
+        )
+    return out
+
+
 def run() -> list[str]:
     out = []
     for name, d, mask_mb, ours_mb, ratio in analytic_rows():
@@ -57,6 +104,19 @@ def run() -> list[str]:
     out.append(
         f"table1.measured_reduced_model,0,"
         f"neuroada_bytes={na_b} mask_bytes={mask_b} ratio={mask_b/na_b:.1f}x"
+    )
+    name, n, fp32, int8, nf4 = quant_base_rows()
+    out.append(
+        f"table1.quant_base.{name},0,params={n/1e6:.0f}M"
+        f" fp32={fp32/2**20:.0f}MB int8={int8/2**20:.0f}MB nf4={nf4/2**20:.0f}MB"
+        f" int8_saving={fp32/int8:.2f}x nf4_saving={fp32/nf4:.2f}x"
+    )
+    meas = measured_quant_row()
+    out.append(
+        f"table1.quant_base_measured_reduced,0,"
+        f"fp32={meas['fp32']} int8={meas['int8']} nf4={meas['nf4']}"
+        f" int8_saving={meas['fp32']/meas['int8']:.2f}x"
+        f" nf4_saving={meas['fp32']/meas['nf4']:.2f}x"
     )
     return out
 

@@ -4,8 +4,15 @@ Alg. 1 of the paper: (1) offline top-k magnitude selection, (2) sparse
 bypass training — only (k, d_out) deltas get gradients/optimizer state,
 (3) one-shot merge, then serve the merged model with zero overhead.
 
-  PYTHONPATH=src python examples/quickstart.py
+The frozen base optionally trains *quantized* (DESIGN.md §8) — pass
+``--base-dtype int8`` (or nf4) and the base drops to packed int8 while the
+bypass values train exactly as before (the CLI twin is
+``python -m repro.launch.train --base-dtype int8``).
+
+  PYTHONPATH=src python examples/quickstart.py [--base-dtype int8]
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -14,15 +21,24 @@ import numpy as np
 from repro.configs import PeftConfig, TrainConfig, get_config, reduced
 from repro.data.loader import DataLoader, peek_batch
 from repro.models import get_model
-from repro.peft import get_peft, stats
+from repro.peft import BASE_DTYPES, get_peft, quantize_base, stats
+from repro.quant import tree_bytes
 from repro.serve.engine import ServeEngine
 from repro.train.trainer import Trainer
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base-dtype", default="fp32", choices=BASE_DTYPES)
+    base_dtype = ap.parse_args().base_dtype
     cfg = reduced(get_config("qwen2-1.5b"))
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    if base_dtype != "fp32":
+        dense_bytes = tree_bytes(params)
+        params = quantize_base(params, base_dtype)
+        print(f"frozen base -> {base_dtype}: {dense_bytes/2**20:.2f} MB "
+              f"-> {tree_bytes(params)/2**20:.2f} MB")
 
     # --- Phase 1+2: select top-k per neuron, train zero-init bypasses ----
     peft = get_peft(PeftConfig(method="neuroada", k=2, strategy="magnitude"))

@@ -1,5 +1,7 @@
 """Batched serving: slot-based continuous batching, multi-tenant adapters —
-staggered request arrival, per-slot positions, per-slot NeuroAda deltas.
+staggered request arrival, per-slot positions, per-slot NeuroAda deltas,
+all off ONE int8-packed frozen base (DESIGN.md §8; the CLI twin is
+``python -m repro.launch.serve --base-dtype int8 --adapters …``).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -11,6 +13,8 @@ import jax
 from repro.configs import get_config, reduced
 from repro.core.adapt import init_adapters
 from repro.models import get_model
+from repro.peft import quantize_base
+from repro.quant import tree_bytes
 from repro.serve import AdapterStore, ServeEngine
 
 
@@ -18,11 +22,16 @@ def main():
     cfg = reduced(get_config("qwen2.5-3b")).replace(num_layers=4)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    # every tenant shares one quantized base: 4x less weight HBM per box
+    dense_bytes = tree_bytes(params)
+    params = quantize_base(params, "int8")
+    print(f"base weights: {dense_bytes/2**20:.2f} MB dense -> "
+          f"{tree_bytes(params)/2**20:.2f} MB int8")
 
     # two tenants: unmerged (indices, values) deltas over one frozen base
     # (random values stand in for training — see launch/train.py
     # --export-adapter for the real artifact)
-    store = AdapterStore()
+    store = AdapterStore(base_params=params)  # validates idx vs base shapes
     for seed in (1, 2):
         idx, val = init_adapters(params, 2, rng=jax.random.PRNGKey(seed))
         val = jax.tree.map(

@@ -45,4 +45,23 @@ python -m repro.launch.serve --arch qwen2-1.5b --reduced \
 grep -q "tenant1" "$tmpdir/serve.out"
 grep -q "tenant2" "$tmpdir/serve.out"
 
+echo "== quantized-base e2e (adapt -> 2 train steps -> export -> serve int8) =="
+# the frozen base lives in int8 through BOTH training and serving: only the
+# sparse (idx, val) bypass pairs train, and two tenants then share the one
+# packed base at decode time
+python -m repro.launch.train --arch qwen2-1.5b --reduced --peft neuroada \
+    --base-dtype int8 --k 2 --steps 2 --batch 8 --seq 16 \
+    --export-adapter "$tmpdir/qtenant1.npz" 2>&1 | tee "$tmpdir/qtrain.out"
+grep -q "base quantized to int8" "$tmpdir/qtrain.out"
+python -m repro.launch.train --arch qwen2-1.5b --reduced --peft neuroada \
+    --base-dtype int8 --k 2 --steps 2 --batch 8 --seq 16 --seed 1 \
+    --export-adapter "$tmpdir/qtenant2.npz" > /dev/null
+python -m repro.launch.serve --arch qwen2-1.5b --reduced --base-dtype int8 \
+    --adapters "$tmpdir/qtenant1.npz,$tmpdir/qtenant2.npz" \
+    --prompts "1,17,25;1,40,41,42" --max-new 8 \
+    | tee "$tmpdir/qserve.out"
+grep -q "base quantized to int8" "$tmpdir/qserve.out"
+grep -q "tenant1" "$tmpdir/qserve.out"
+grep -q "tenant2" "$tmpdir/qserve.out"
+
 echo "== smoke OK =="

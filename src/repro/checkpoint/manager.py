@@ -20,8 +20,11 @@ import threading
 import jax
 import numpy as np
 
+from repro.quant.qtensor import QuantizedTensor, is_param_leaf as _ckpt_leaf
+
 _SENTINEL_NONE = "__none__"
 _DTYPE_KEY = "__dtype__"  # sidecar entries for non-numpy-native dtypes (bf16)
+_QUANT_KEY = "__quant__"  # sidecar: (qdtype, block, dtype) per packed leaf
 
 
 def _path_part(p) -> str:
@@ -32,23 +35,35 @@ def _path_part(p) -> str:
     return str(p.idx)
 
 
+def _store(flat: dict, key: str, leaf) -> None:
+    arr = np.asarray(leaf)
+    if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+        # npz can't represent ml_dtypes natively: store the raw bits
+        # as uint16 plus a dtype sidecar (restored via .view()).
+        flat[f"{_DTYPE_KEY}/{key}"] = np.array(arr.dtype.name)
+        flat[key] = arr.view(np.uint16)
+    else:
+        flat[key] = arr
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(
-        tree, is_leaf=lambda x: x is None
+        tree, is_leaf=_ckpt_leaf
     )[0]:
         key = "/".join(_path_part(p) for p in path)
         if leaf is None:
             flat[key] = np.array(_SENTINEL_NONE)
-            continue
-        arr = np.asarray(leaf)
-        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
-            # npz can't represent ml_dtypes natively: store the raw bits
-            # as uint16 plus a dtype sidecar (restored via .view()).
-            flat[f"{_DTYPE_KEY}/{key}"] = np.array(arr.dtype.name)
-            flat[key] = arr.view(np.uint16)
+        elif isinstance(leaf, QuantizedTensor):
+            # packed form round-trips byte-exact: data + scales + a JSON
+            # sidecar carrying the static (qdtype, block, dtype) aux
+            flat[f"{_QUANT_KEY}/{key}"] = np.array(
+                json.dumps([leaf.qdtype, leaf.block, leaf.dtype_name])
+            )
+            _store(flat, f"{key}/data", leaf.data)
+            _store(flat, f"{key}/scales", leaf.scales)
         else:
-            flat[key] = arr
+            _store(flat, key, leaf)
     return flat
 
 
@@ -60,9 +75,14 @@ def _unflatten(flat: dict[str, np.ndarray]):
         for k, v in flat.items()
         if k.startswith(_DTYPE_KEY + "/")
     }
+    quant = {
+        k[len(_QUANT_KEY) + 1 :]: json.loads(str(v))
+        for k, v in flat.items()
+        if k.startswith(_QUANT_KEY + "/")
+    }
     tree: dict = {}
     for key, val in flat.items():
-        if key.startswith(_DTYPE_KEY + "/"):
+        if key.startswith((_DTYPE_KEY + "/", _QUANT_KEY + "/")):
             continue
         node = tree
         parts = key.split("/")
@@ -74,6 +94,15 @@ def _unflatten(flat: dict[str, np.ndarray]):
             node[parts[-1]] = val.view(np.dtype(dtypes[key]))
         else:
             node[parts[-1]] = val
+    for key, (qdtype, block, dtype_name) in quant.items():
+        node = tree
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node[p]
+        packed = node[parts[-1]]  # {"data": …, "scales": …} built above
+        node[parts[-1]] = QuantizedTensor(
+            packed["data"], packed["scales"], qdtype, int(block), dtype_name
+        )
     return tree
 
 
@@ -102,7 +131,7 @@ def restore_into(template, restored_dict):
     import jax.numpy as jnp
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(
-        template, is_leaf=lambda x: x is None
+        template, is_leaf=_ckpt_leaf
     )
     leaves = []
     for path, tmpl in flat:
@@ -111,7 +140,36 @@ def restore_into(template, restored_dict):
             node = node[_path_part(p)]
         if tmpl is None or node is None:
             leaves.append(None)
+        elif isinstance(tmpl, QuantizedTensor):
+            if not isinstance(node, QuantizedTensor):
+                raise ValueError(
+                    f"checkpoint leaf at {[_path_part(p) for p in path]} is "
+                    "dense but the template expects a packed QuantizedTensor"
+                )
+            if (node.qdtype, node.block) != (tmpl.qdtype, tmpl.block):
+                raise ValueError(
+                    f"checkpoint leaf at {[_path_part(p) for p in path]} is "
+                    f"packed as {node.qdtype}/block={node.block} but the "
+                    f"template expects {tmpl.qdtype}/block={tmpl.block} — "
+                    "restore with the same --base-dtype/--quant-block"
+                )
+            leaves.append(
+                QuantizedTensor(
+                    jnp.asarray(node.data).astype(tmpl.data.dtype),
+                    jnp.asarray(node.scales).astype(tmpl.scales.dtype),
+                    node.qdtype,
+                    node.block,
+                    node.dtype_name,
+                )
+            )
         else:
+            if isinstance(node, QuantizedTensor):
+                raise ValueError(
+                    f"checkpoint leaf at {[_path_part(p) for p in path]} is "
+                    "a packed QuantizedTensor but the template expects a "
+                    "dense array — restore with a quantized template (same "
+                    "--base-dtype as the run that wrote the checkpoint)"
+                )
             leaves.append(jnp.asarray(node).astype(tmpl.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

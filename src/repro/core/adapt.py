@@ -12,7 +12,6 @@ The trainer differentiates w.r.t. ``values`` alone, so AdamW states are
 
 from __future__ import annotations
 
-import re
 from typing import Any, Callable
 
 import jax
@@ -20,15 +19,28 @@ import jax.numpy as jnp
 
 from repro.core.delta import Delta, init_delta
 from repro.core.selection import topk_indices
+from repro.quant.qtensor import (
+    QuantizedTensor,
+    any_quantized,
+    dequantize,
+    dequantize_tree,
+    is_param_leaf,
+)
 
 # Matrices we never adapt by default: embeddings (rows are tokens, not
 # neurons), routers (tiny, load-balance-sensitive). Only ``…/w`` leaves of
 # linear sub-layers are candidates — biases, norms, conv kernels and SSM
-# state params are not row-neuron matrices. See DESIGN.md §3.
-DEFAULT_EXCLUDE = (
-    r".*embed.*",
-    r".*router.*",
-)
+# state params are not row-neuron matrices. See DESIGN.md §3. The same
+# policy decides which matrices quantize (DESIGN.md §8) — one shared
+# constant/predicate, owned by repro.quant (the leaf of the import DAG).
+from repro.quant.qtensor import DEFAULT_QUANT_EXCLUDE as DEFAULT_EXCLUDE
+from repro.quant.qtensor import is_linear_weight as _is_linear_weight
+
+
+# Param trees may carry QuantizedTensor nodes (int8/NF4 frozen base):
+# treat them as leaves everywhere so adapter trees stay structurally
+# aligned with params instead of descending into (data, scales).
+_leaf = is_param_leaf
 
 
 def path_str(path) -> str:
@@ -44,20 +56,16 @@ def path_str(path) -> str:
 
 
 def is_adaptable(name: str, leaf: Any, exclude=DEFAULT_EXCLUDE) -> bool:
-    if not name.endswith("/w"):
-        return False
-    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
-        return False
-    if not jnp.issubdtype(leaf.dtype, jnp.floating):
-        return False
-    return not any(re.fullmatch(pat, name) for pat in exclude)
+    # QuantizedTensor leaves pass too (logical shape/dtype duck-typing):
+    # bypasses train against a packed base exactly as against a dense one.
+    return _is_linear_weight(name, leaf, exclude)
 
 
 def adaptable_shapes(params, exclude=DEFAULT_EXCLUDE) -> dict[str, tuple[int, ...]]:
     out = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params, is_leaf=_leaf)[0]:
         name = path_str(path)
-        if is_adaptable(name, leaf, exclude):
+        if leaf is not None and is_adaptable(name, leaf, exclude):
             out[name] = tuple(leaf.shape)
     return out
 
@@ -79,24 +87,30 @@ def init_adapters(
     tree.map's None handling is NOT used; we keep explicit Nones so zips
     stay structurally aligned with params).
     """
-    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
-    n_ad = sum(is_adaptable(path_str(p), l, exclude) for p, l in leaves)
+    leaves = jax.tree_util.tree_flatten_with_path(params, is_leaf=_leaf)[0]
+    n_ad = sum(
+        l is not None and is_adaptable(path_str(p), l, exclude) for p, l in leaves
+    )
     rngs = iter(jax.random.split(rng, max(n_ad, 1))) if rng is not None else None
 
     def one(path, w):
         name = path_str(path)
-        if not is_adaptable(name, w, exclude):
+        if w is None or not is_adaptable(name, w, exclude):
             return None, None
         g = None
         if grads is not None:
             g = _tree_get(grads, path)
         r = next(rngs) if rngs is not None else None
         kk = min(k, w.shape[-2])
+        if isinstance(w, QuantizedTensor):
+            # Phase-1 selection reads magnitudes off the (transiently)
+            # dequantized base; the packed form stays the stored one.
+            w = dequantize(w)
         idx = topk_indices(w, kk, strategy=strategy, rng=r, grad=g)
         d = init_delta(idx, dtype=dtype)
         return d.idx, d.val
 
-    paths_leaves = jax.tree_util.tree_flatten_with_path(params)
+    paths_leaves = jax.tree_util.tree_flatten_with_path(params, is_leaf=_leaf)
     pairs = [one(p, l) for p, l in paths_leaves[0]]
     treedef = paths_leaves[1]
     indices = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
@@ -126,8 +140,16 @@ def zip_adapters(indices, values):
 
 
 def merge_adapters(params, indices, values):
-    """Alg. 1 phase 3: fold every Delta into its frozen matrix, in one pass."""
+    """Alg. 1 phase 3: fold every Delta into its frozen matrix, in one pass.
+
+    A quantized base dequantizes first — the merged export is a dense tree
+    in the compute dtype (re-quantize explicitly if the artifact should
+    stay packed; merging into int codes would round the deltas away).
+    """
     from repro.core.delta import merge
+
+    if any_quantized(params):
+        params = dequantize_tree(params)
 
     def one(w, i, v):
         if i is None:

@@ -16,6 +16,7 @@ backward: dval is a (k, d_out) reduction kernel, dx a k·d_out scatter-add.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -25,12 +26,14 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.fused_linear import fused_linear_pallas
+from repro.kernels.quant_linear import fused_linear_q_pallas
 from repro.kernels.sparse_delta import (
     sparse_delta_batched_pallas,
     sparse_delta_dval_pallas,
     sparse_delta_pallas,
 )
 from repro.kernels.topk_select import topk_select_pallas
+from repro.quant.qtensor import QuantizedTensor, dequantize
 
 _BACKENDS = ("jnp", "pallas", "pallas_interpret")
 _backend = os.environ.get("REPRO_KERNEL_BACKEND", "jnp")
@@ -45,6 +48,19 @@ def set_backend(name: str) -> None:
 
 def get_backend() -> str:
     return _backend
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped :func:`set_backend` — restores the previous backend even when
+    the body raises, so a failing test sweep can't leak the Pallas backend
+    into later tests."""
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
@@ -139,24 +155,28 @@ def delta_apply_batched(
 
 
 @jax.custom_vjp
-def _fused_linear_pallas(x2d, w, idx, val, bias, interpret):
+def _fused_linear_pallas(x2d, w, idx, val, bias, interpret, w_frozen):
     bm = 128 if x2d.shape[0] >= 128 else 8
     xp, m = _pad_to(x2d, 0, bm)
     y = fused_linear_pallas(xp, w, idx, val, bias, block_m=bm, interpret=interpret)
     return y[:m]
 
 
-def _fused_fwd(x2d, w, idx, val, bias, interpret):
-    y = _fused_linear_pallas(x2d, w, idx, val, bias, interpret)
-    return y, (x2d, w, idx, val, bias, interpret)
+def _fused_fwd(x2d, w, idx, val, bias, interpret, w_frozen):
+    y = _fused_linear_pallas(x2d, w, idx, val, bias, interpret, w_frozen)
+    return y, (x2d, w, idx, val, bias, interpret, w_frozen)
 
 
 def _fused_bwd(res, dy):
-    x2d, w, idx, val, bias, interpret = res
-    # dx: dense transpose + sparse scatter; dw is produced for completeness
-    # but DCE'd when W is frozen (the NeuroAda training path).
+    x2d, w, idx, val, bias, interpret, w_frozen = res
+    # dx: dense transpose + sparse scatter.
     dx = jnp.dot(dy, w.T) + ref.sparse_delta_dx_ref(idx, val, dy, x2d.shape[1]).astype(x2d.dtype)
-    dw = jnp.dot(x2d.T, dy).astype(w.dtype)
+    if w_frozen:
+        # NeuroAda path: W never trains — statically skip the dense
+        # x2d.T @ dy matmul instead of relying on DCE to remove it.
+        dw = jnp.zeros(w.shape, w.dtype)
+    else:
+        dw = jnp.dot(x2d.T, dy).astype(w.dtype)
     bm = 128 if x2d.shape[0] >= 128 else 8
     xp, _ = _pad_to(x2d, 0, bm)
     dyp, _ = _pad_to(dy, 0, bm)
@@ -167,7 +187,7 @@ def _fused_bwd(res, dy):
     ].astype(val.dtype)
     dbias = None if bias is None else jnp.sum(dy, axis=0).astype(bias.dtype)
     didx = np.zeros(idx.shape, dtype=jax.dtypes.float0)
-    return dx, dw, didx, dval, dbias, None
+    return dx, dw, didx, dval, dbias, None, None
 
 
 _fused_linear_pallas.defvjp(_fused_fwd, _fused_bwd)
@@ -179,18 +199,139 @@ def fused_linear(
     idx: jax.Array,
     val: jax.Array,
     bias: jax.Array | None = None,
+    *,
+    w_frozen: bool = False,
 ) -> jax.Array:
-    """y = x@W (+bias) + delta, fused on the Pallas backends."""
+    """y = x@W (+bias) + delta, fused on the Pallas backends.
+
+    ``w_frozen=True`` declares W non-trainable (the NeuroAda contract): the
+    backward statically skips the dense ``dw`` matmul and returns zeros for
+    it. Callers that differentiate W must leave it False.
+    """
     if _backend == "jnp":
-        y = jnp.dot(x, w)
+        # enforce the frozen contract uniformly across backends: the
+        # Pallas bwd returns zero dw, so the jnp path must too
+        y = jnp.dot(x, jax.lax.stop_gradient(w) if w_frozen else w)
         y = y + delta_apply(x, idx, val)
         if bias is not None:
             y = y + bias.astype(y.dtype)
         return y
     lead = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
-    y = _fused_linear_pallas(x2d, w, idx, val, bias, _backend == "pallas_interpret")
+    y = _fused_linear_pallas(
+        x2d, w, idx, val, bias, _backend == "pallas_interpret", w_frozen
+    )
     return y.reshape(*lead, w.shape[-1])
+
+
+# ------------------------------------------------- quantized-base linears
+
+
+def _q_meta(qw: QuantizedTensor):
+    return (qw.qdtype, qw.block)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_linear_q(meta, x2d, data, scales, idx, val, bias, interpret):
+    qdtype, block = meta
+    bm = 128 if x2d.shape[0] >= 128 else 8
+    xp, m = _pad_to(x2d, 0, bm)
+    bk = min(512, x2d.shape[1])
+    y = fused_linear_q_pallas(
+        xp, data, scales, idx, val, bias,
+        qdtype=qdtype, block=block, block_m=bm, block_k=bk, interpret=interpret,
+    )
+    return y[:m]
+
+
+def _fused_q_fwd(meta, x2d, data, scales, idx, val, bias, interpret):
+    y = _fused_linear_q(meta, x2d, data, scales, idx, val, bias, interpret)
+    return y, (x2d, data, scales, idx, val, bias, interpret)
+
+
+def _fused_q_bwd(meta, res, dy):
+    x2d, data, scales, idx, val, bias, interpret = res
+    qdtype, block = meta
+    # The quantized base is frozen *by construction* (int codes don't
+    # differentiate): mirror fused_linear's w_frozen guard — no dense dw,
+    # only dx (dense transpose vs the dequantized tile + sparse scatter)
+    # and the (k, d_out) dval reduction.
+    w = dequantize(QuantizedTensor(data, scales, qdtype, block, "float32"))
+    dx = jnp.dot(dy, w.T).astype(x2d.dtype) + ref.sparse_delta_dx_ref(
+        idx, val, dy, x2d.shape[1]
+    ).astype(x2d.dtype)
+    bm = 128 if x2d.shape[0] >= 128 else 8
+    xp, _ = _pad_to(x2d, 0, bm)
+    dyp, _ = _pad_to(dy, 0, bm)
+    ip, n = _pad_to(idx, 1, 128)
+    dyp2, _ = _pad_to(dyp, 1, 128)
+    dval = sparse_delta_dval_pallas(xp, ip, dyp2, block_m=bm, interpret=interpret)[
+        :, :n
+    ].astype(val.dtype)
+    dbias = None if bias is None else jnp.sum(dy, axis=0).astype(bias.dtype)
+    ddata = np.zeros(data.shape, dtype=jax.dtypes.float0)
+    didx = np.zeros(idx.shape, dtype=jax.dtypes.float0)
+    dscales = jnp.zeros(scales.shape, scales.dtype)  # frozen; DCE'd
+    return dx, ddata, dscales, didx, dval, dbias, None
+
+
+_fused_linear_q.defvjp(_fused_q_fwd, _fused_q_bwd)
+
+
+def fused_linear_q(
+    x: jax.Array,
+    qw: QuantizedTensor,
+    idx: jax.Array,
+    val: jax.Array,
+    bias: jax.Array | None = None,
+) -> jax.Array:
+    """y = x @ dequant(Wq) (+bias) + delta — the quantized-base fused path.
+
+    jnp backend: dequantize + dot (XLA fuses; autodiff reaches only
+    x/val/bias because the trainer never differentiates params). Pallas
+    backends: tile-wise dequant in VMEM with a custom VJP that produces
+    only ``dx``/``dval`` — training on a quantized base never materialises
+    a dense weight gradient.
+    """
+    if _backend == "jnp":
+        y = jnp.dot(x, dequantize(qw).astype(x.dtype))
+        y = y + delta_apply(x, idx, val)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    y = _fused_linear_q(
+        _q_meta(qw), x2d, qw.data, qw.scales, idx, val, bias,
+        _backend == "pallas_interpret",
+    )
+    return y.reshape(*lead, qw.shape[-1])
+
+
+def matmul_q(x: jax.Array, w) -> jax.Array:
+    """x @ W for a plain *or* quantized W (no bypass; serving base matmul).
+
+    With a QuantizedTensor on the Pallas backends this runs the fused
+    dequant×matmul kernel with a zero bypass; on jnp it dequantizes and
+    lets XLA fuse. Plain arrays pass straight to ``jnp.dot``.
+    """
+    if not isinstance(w, QuantizedTensor):
+        return jnp.dot(x, w)
+    if _backend == "jnp":
+        return jnp.dot(x, dequantize(w).astype(x.dtype))
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    n = w.shape[-1]
+    # a zero bypass rides the fused kernel through the custom-VJP wrapper,
+    # so the path stays differentiable (dx only) on the Pallas backends —
+    # e.g. LoRA or untied-head training on a quantized base
+    idx = jnp.zeros((1, n), jnp.int32)
+    val = jnp.zeros((1, n), x.dtype)
+    y = _fused_linear_q(
+        _q_meta(w), x2d, w.data, w.scales, idx, val, None,
+        _backend == "pallas_interpret",
+    )
+    return y.reshape(*lead, n)
 
 
 # ----------------------------------------------------------------- topk select

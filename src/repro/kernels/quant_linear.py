@@ -1,0 +1,139 @@
+"""Fused dequant × matmul + NeuroAda sparse-delta Pallas kernel.
+
+``y = dequant(Wq) @ x (+ bias) + Σ_j val[j,:]·x[:, idx[j,:]]`` in one pass:
+each K-tile of the packed base weight is dequantized *in VMEM* — int8 codes
+(or NF4 nibbles) × per-block scales — immediately before it feeds the MXU,
+so the dense fp weight never exists in HBM. The bypass entries whose source
+index falls inside the K-tile ride the same accumulator (masked lane
+gather), exactly like ``fused_linear.py``; the output tile is written once.
+
+HBM traffic per (bm, bn) output tile drops from ``bk·bn·4`` bytes of fp32
+weight to ``bk·bn`` (int8) or ``bk·bn/2 + scales`` (NF4) per K step — the
+whole point of serving N tenants off one quantized base.
+
+Grid: (M/bm parallel, N/bn parallel, K/bk sequential-accumulate). ``block``
+(scale granularity) must divide ``bk`` so each K-tile owns whole scale rows.
+
+NF4 codebook lookup inside the kernel is a 16-way select-accumulate over
+static code constants (VPU-friendly; no gather needed for a 16-entry table).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams as _CompilerParams
+from repro.quant.qtensor import NF4_CODES
+
+
+def _dequant_tile(data, scales, *, bk: int, block: int, qdtype: str) -> jax.Array:
+    """Packed (bk[, /2], bn) tile + (bk/block, bn) scales -> f32 (bk, bn)."""
+    if qdtype == "nf4":
+        lo = (data & 0xF).astype(jnp.int32)
+        hi = ((data >> 4) & 0xF).astype(jnp.int32)
+        codes = jnp.stack([lo, hi], axis=1).reshape(bk, data.shape[-1])
+        wt = jnp.zeros(codes.shape, jnp.float32)
+        for c, v in enumerate(NF4_CODES):  # 16 static selects on the VPU
+            wt = jnp.where(codes == c, jnp.float32(v), wt)
+    else:
+        wt = data.astype(jnp.float32)
+    s = jnp.repeat(scales.astype(jnp.float32), block, axis=0)  # (bk, bn)
+    return wt * s
+
+
+def _fused_q_kernel(
+    x_ref, data_ref, scales_ref, idx_ref, val_ref, b_ref, y_ref, acc_ref,
+    *, k: int, bk: int, block: int, qdtype: str, has_bias: bool,
+):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # (bm, bk)
+    wt = _dequant_tile(
+        data_ref[...], scales_ref[...], bk=bk, block=block, qdtype=qdtype
+    )
+    acc_ref[...] += jnp.dot(
+        x.astype(jnp.float32), wt, preferred_element_type=jnp.float32
+    )
+
+    # Bypass entries landing in this K tile (same scheme as fused_linear).
+    local = idx_ref[...] - kk * bk  # (k, bn)
+    val = val_ref[...]
+    in_tile = (local >= 0) & (local < bk)
+    for j in range(k):
+        safe = jnp.clip(local[j], 0, bk - 1)
+        xg = jnp.take(x, safe, axis=1).astype(jnp.float32)  # (bm, bn)
+        acc_ref[...] += jnp.where(
+            in_tile[j][None, :], xg * val[j].astype(jnp.float32), 0.0
+        )
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _flush():
+        out = acc_ref[...]
+        if has_bias:
+            out = out + b_ref[...].astype(jnp.float32)
+        y_ref[...] = out.astype(y_ref.dtype)
+
+
+def fused_linear_q_pallas(
+    x: jax.Array,
+    data: jax.Array,
+    scales: jax.Array,
+    idx: jax.Array,
+    val: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    qdtype: str = "int8",
+    block: int = 64,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """x (M,K) × packed base (K,N) + delta(idx,val (k,N)) [+ bias] -> (M,N).
+
+    ``data`` is int8 (K, N) or uint8 (K/2, N) NF4-packed; ``scales`` is
+    (K/block, N) float32. Output dtype follows ``x``.
+    """
+    m, kdim = x.shape
+    n = data.shape[-1]
+    k = idx.shape[0]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, kdim)
+    if bk % block:
+        raise ValueError(f"K tile {bk} must be a multiple of scale block {block}")
+    if m % bm or n % bn or kdim % bk:
+        raise ValueError(f"shapes {(m, kdim, n)} must tile by {(bm, bk, bn)}")
+    packed_rows = bk // 2 if qdtype == "nf4" else bk
+    grid = (m // bm, n // bn, kdim // bk)
+    has_bias = bias is not None
+    b = bias if has_bias else jnp.zeros((n,), x.dtype)
+    return pl.pallas_call(
+        functools.partial(
+            _fused_q_kernel, k=k, bk=bk, block=block, qdtype=qdtype,
+            has_bias=has_bias,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((packed_rows, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // block, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((k, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((k, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, data, scales, idx, val, b)

@@ -20,6 +20,7 @@ import jax
 
 from repro.configs import ARCH_IDS, PAPER_ARCH_IDS, get_config, reduced
 from repro.models import get_model
+from repro.peft import BASE_DTYPES
 from repro.serve import AdapterStore, ServeEngine
 
 
@@ -41,6 +42,11 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--base-dtype", default="fp32", choices=BASE_DTYPES,
+                    help="serve every tenant off one quantized frozen base")
+    ap.add_argument("--quant-block", type=int, default=64,
+                    help="scale-block rows; must match the --quant-block "
+                         "the adapters were trained against")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -54,11 +60,20 @@ def main(argv=None):
     else:
         params = model.init(jax.random.PRNGKey(0))
 
+    if args.base_dtype != "fp32":
+        from repro.peft import quantize_base
+        from repro.quant import tree_bytes
+
+        before = tree_bytes(params)
+        params = quantize_base(params, args.base_dtype, block=args.quant_block)
+        print(f"base quantized to {args.base_dtype}: "
+              f"{before / 2**20:.1f} MB -> {tree_bytes(params) / 2**20:.1f} MB")
+
     store = None
     if args.adapters:
         from repro.peft import load_adapter
 
-        store = AdapterStore()
+        store = AdapterStore(base_params=params)
         for path in args.adapters.split(","):
             aid = store.register(*load_adapter(path), name=path)
             print(f"tenant {aid}: {path}")

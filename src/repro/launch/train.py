@@ -20,7 +20,7 @@ import jax
 from repro.configs import ARCH_IDS, PAPER_ARCH_IDS, PeftConfig, TrainConfig, get_config, reduced
 from repro.data.loader import DataLoader
 from repro.models import get_model
-from repro.peft import get_peft, stats
+from repro.peft import BASE_DTYPES, get_peft, stats
 from repro.train.trainer import Trainer
 
 log = logging.getLogger("repro.launch.train")
@@ -34,6 +34,12 @@ def parse_args(argv=None):
                     help="CPU-sized family member (full configs need a pod)")
     ap.add_argument("--peft", default="neuroada",
                     choices=("neuroada", "lora", "bitfit", "masked", "full"))
+    ap.add_argument("--base-dtype", default="fp32", choices=BASE_DTYPES,
+                    help="quantize the frozen base (QLoRA-style) before "
+                         "adapting — only the sparse bypass values train, "
+                         "so int8/nf4 compound the paper's memory win")
+    ap.add_argument("--quant-block", type=int, default=64,
+                    help="rows per quantization scale block (d_in axis)")
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--strategy", default="magnitude")
     ap.add_argument("--lora-rank", type=int, default=8)
@@ -63,6 +69,20 @@ def main(argv=None):
         cfg = reduced(cfg)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    if args.base_dtype != "fp32":
+        if args.peft in ("masked", "full"):
+            raise SystemExit(
+                f"--base-dtype {args.base_dtype} requires a frozen base; "
+                f"--peft {args.peft} trains the dense weights"
+            )
+        from repro.peft import quantize_base
+        from repro.quant import tree_bytes
+
+        before = tree_bytes(params)
+        params = quantize_base(params, args.base_dtype, block=args.quant_block)
+        log.info("base quantized to %s: %.1f MB -> %.1f MB (%.2fx)",
+                 args.base_dtype, before / 2**20, tree_bytes(params) / 2**20,
+                 before / tree_bytes(params))
 
     peft = get_peft(PeftConfig(
         method=args.peft, k=args.k, strategy=args.strategy,

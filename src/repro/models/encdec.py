@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.context import constrain, constrain_inner
+from repro.kernels import ops
 from repro.models.attention import attention
 from repro.models.layers import (
     alinear,
@@ -150,7 +151,7 @@ def forward_train(cfg, params, adapters, batch, *, remat="none"):
     positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     h, _ = _decode_stack(cfg, params, adapters, h, enc_out, positions)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    return jnp.dot(h, params["head"]["w"]), jnp.float32(0.0)
+    return ops.matmul_q(h, params["head"]["w"]), jnp.float32(0.0)
 
 
 def loss_fn(cfg, params, adapters, batch, *, remat="none"):
@@ -185,7 +186,7 @@ def prefill(cfg, params, adapters, batch):
         cfg, params, adapters, h, enc_out, positions, collect_cache=True
     )
     h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
-    logits = jnp.dot(h, params["head"]["w"])[:, 0]
+    logits = ops.matmul_q(h, params["head"]["w"])[:, 0]
     return logits, {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
 
 
@@ -230,7 +231,7 @@ def decode_step(cfg, params, adapters, cache, batch):
         ),
     )
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    logits = jnp.dot(h, params["head"]["w"])[:, 0]
+    logits = ops.matmul_q(h, params["head"]["w"])[:, 0]
     return logits, {
         "self_k": sk,
         "self_v": sv,

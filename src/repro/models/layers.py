@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.delta import BatchedDelta, Delta
 from repro.kernels import ops
+from repro.quant.qtensor import QuantizedTensor
 
 # ------------------------------------------------------------------ dtypes
 
@@ -69,19 +70,29 @@ def ad_get(a, name: str):
 
 
 def alinear(p: dict, a, name: str, x: jax.Array) -> jax.Array:
-    """y = x @ W (+b) (+ NeuroAda bypass | LoRA). p[name] = {"w": …, ["b"]}."""
+    """y = x @ W (+b) (+ NeuroAda bypass | LoRA). p[name] = {"w": …, ["b"]}.
+
+    W may be a :class:`QuantizedTensor` (int8/NF4 frozen base): the matmul
+    then runs the fused dequant path (``ops.fused_linear_q`` for NeuroAda,
+    ``ops.matmul_q`` otherwise) and never materialises the dense weight.
+    """
     leaf = p[name]
     w = leaf["w"]
     b = leaf.get("b")
     d = ad_get(a, name)
     if isinstance(d, BatchedDelta):
-        y = jnp.dot(x, w) + ops.delta_apply_batched(x, d.idx, d.val, d.aid)
+        # multi-tenant serving: one (possibly quantized) base matmul plus
+        # every slot's tenant delta in-flight
+        y = ops.matmul_q(x, w) + ops.delta_apply_batched(x, d.idx, d.val, d.aid)
         if b is not None:
             y = y + b.astype(y.dtype)
         return y
     if isinstance(d, Delta):
-        return ops.fused_linear(x, w, d.idx, d.val, b)
-    y = jnp.dot(x, w)
+        if isinstance(w, QuantizedTensor):
+            return ops.fused_linear_q(x, w, d.idx, d.val, b)
+        # a Delta bypass implies the NeuroAda contract: W is frozen
+        return ops.fused_linear(x, w, d.idx, d.val, b, w_frozen=True)
+    y = ops.matmul_q(x, w)
     if isinstance(d, dict):  # LoRA: x @ A @ B scaled (scale is a constant)
         y = y + jnp.dot(jnp.dot(x, d["A"]), d["B"]) * jax.lax.stop_gradient(d["scale"])
     if b is not None:

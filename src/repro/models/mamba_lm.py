@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.context import constrain
+from repro.kernels import ops
 from repro.models import ssm
 from repro.models.layers import compute_dtype, init_linear, init_norm, softmax_cross_entropy
 
@@ -32,8 +33,9 @@ def _head(cfg, params, h):
     from repro.models.layers import rms_norm
 
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    w = params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
-    return jnp.dot(h, w)
+    if cfg.tie_embeddings:
+        return jnp.dot(h, params["embed"]["w"].T)
+    return ops.matmul_q(h, params["head"]["w"])  # untied head may be quantized
 
 
 def _a_blocks(adapters):

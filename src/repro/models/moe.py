@@ -21,6 +21,7 @@ from repro.core.delta import BatchedDelta
 from repro.distributed.context import constrain_moe
 from repro.kernels import ops
 from repro.models.layers import ad_get
+from repro.quant.qtensor import QuantizedTensor, dequantize
 
 
 def capacity(cfg, tokens: int) -> int:
@@ -145,6 +146,11 @@ def _dispatch_adapter_ids(a, route, b, s, g, e, c):
 def _expert_linear_g(p, a, name, eh, aid_buf=None):
     """eh (G, E, C, Din) @ w (E, Din, Dout) + vmapped NeuroAda delta."""
     w = p[name]["w"]
+    if isinstance(w, QuantizedTensor):
+        # expert stacks dequantize per call (the einsum contracts over E as
+        # well, so the tile-fused path doesn't apply); XLA fuses the
+        # dequant into the contraction and the dense copy stays transient
+        w = dequantize(w).astype(eh.dtype)
     y = jnp.einsum("gecd,edf->gecf", eh, w)
     d = ad_get(a, name)
     if isinstance(d, BatchedDelta):

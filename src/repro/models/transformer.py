@@ -154,8 +154,11 @@ def _head_logits(cfg, params, adapters, h):
     no head param and thus no head delta. LoRA head leaves are ignored —
     LoRA adapts block projections only.
     """
-    head_w = params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
-    logits = jnp.dot(h, head_w)
+    if cfg.tie_embeddings:
+        logits = jnp.dot(h, params["embed"]["w"].T)
+    else:
+        # untied head is adaptable and may be a quantized frozen matrix
+        logits = ops.matmul_q(h, params["head"]["w"])
     d = ad_get(adapters, "head") if isinstance(adapters, dict) else None
     if isinstance(d, BatchedDelta):
         logits = logits + ops.delta_apply_batched(h, d.idx, d.val, d.aid)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.context import constrain, constrain_inner
+from repro.kernels import ops
 from repro.models import ssm
 from repro.models.attention import attention
 from repro.models.layers import (
@@ -100,7 +101,7 @@ def _a(adapters, key):
 
 def _head_out(cfg, params, h):
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    return jnp.dot(h, params["head"]["w"])
+    return ops.matmul_q(h, params["head"]["w"])
 
 
 def forward_train(cfg, params, adapters, batch, *, remat="none"):

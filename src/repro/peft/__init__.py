@@ -1,17 +1,21 @@
 from repro.peft.api import (
+    BASE_DTYPES,
     Peft,
     count_params,
     export_adapter,
     get_peft,
     load_adapter,
+    quantize_base,
     stats,
 )
 
 __all__ = [
+    "BASE_DTYPES",
     "Peft",
     "count_params",
     "export_adapter",
     "get_peft",
     "load_adapter",
+    "quantize_base",
     "stats",
 ]

@@ -32,6 +32,42 @@ from repro.core.adapt import (
     path_str,
     zip_adapters,
 )
+from repro.quant.qtensor import (
+    QuantizedTensor,
+    is_param_leaf,
+    quantize_tree,
+    tree_bytes,
+)
+
+BASE_DTYPES = ("fp32", "int8", "nf4")  # "fp32" = leave the config dtype
+
+
+def quantize_base(
+    params,
+    qdtype: str = "int8",
+    *,
+    block: int = 64,
+    exclude=DEFAULT_EXCLUDE,
+):
+    """Drop the frozen base to int8/NF4 (QLoRA-style) before adapt/serve.
+
+    Only NeuroAda-adaptable matrices quantize (``…/w`` linears — the same
+    policy that decides which matrices get bypasses); embeddings, routers,
+    norms and biases stay in the compute dtype. ``qdtype="fp32"`` is a
+    no-op so launcher ``--base-dtype`` flags can pass through unchanged.
+
+    Quantizing the base is only sound for methods that freeze it
+    (neuroada / lora / bitfit); dense-trainable methods (masked, full)
+    copy ``params`` into their trainable tree and must keep it dense.
+    """
+    if qdtype in ("fp32", "none", ""):
+        return params
+    return quantize_tree(
+        params,
+        qdtype,
+        block,
+        predicate=lambda name, leaf: adapt.is_adaptable(name, leaf, exclude),
+    )
 
 
 class Peft(NamedTuple):
@@ -66,12 +102,23 @@ def load_adapter(path: str):
 
 
 def count_params(tree) -> int:
-    return sum(int(jnp.size(l)) for l in jax.tree.leaves(tree) if l is not None)
+    """Logical parameter count — a QuantizedTensor counts its dequantized
+    size, not its packed data+scales leaves."""
+    return sum(
+        int(l.size)
+        for l in jax.tree.leaves(tree, is_leaf=is_param_leaf)
+        if l is not None
+    )
 
 
 def stats(params, trainable) -> dict:
     t, p = count_params(trainable), count_params(params)
-    return {"trainable": t, "total": p, "fraction": t / max(p, 1)}
+    return {
+        "trainable": t,
+        "total": p,
+        "fraction": t / max(p, 1),
+        "base_bytes": tree_bytes(params),  # packed bytes for quantized leaves
+    }
 
 
 # ------------------------------------------------------------------ NeuroAda
@@ -103,12 +150,16 @@ def lora(pcfg: PeftConfig, exclude=DEFAULT_EXCLUDE) -> Peft:
     r, alpha = pcfg.lora_rank, pcfg.lora_alpha
 
     def init(params, rng):
-        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        # QuantizedTensor-aware flatten: on an int8/nf4 base (QLoRA) the
+        # packed node is the adaptable leaf, not its data/scales children
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=is_param_leaf
+        )
         rngs = jax.random.split(rng, max(len(flat), 1))
 
         def one(path, leaf, key):
             name = path_str(path)
-            if not adapt.is_adaptable(name, leaf, exclude):
+            if leaf is None or not adapt.is_adaptable(name, leaf, exclude):
                 return None
             d_in, d_out = leaf.shape[-2], leaf.shape[-1]
             stack = leaf.shape[:-2]
@@ -130,6 +181,11 @@ def lora(pcfg: PeftConfig, exclude=DEFAULT_EXCLUDE) -> Peft:
         return x is None or (isinstance(x, dict) and "A" in x)
 
     def merge(params, trainable, aux):
+        from repro.quant import any_quantized, dequantize_tree
+
+        if any_quantized(params):  # folding into int codes would round away
+            params = dequantize_tree(params)
+
         def one(w, ad):
             if ad is None:
                 return w

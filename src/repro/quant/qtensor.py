@@ -1,0 +1,274 @@
+"""Quantized frozen-base storage: blockwise int8 / NF4 weight compression.
+
+NeuroAda's strict frozen/bypass split means the entire base can live
+quantized with zero effect on what is trainable: only the sparse ``(idx,
+val)`` bypass pairs get gradients, so dropping the frozen matrices to int8
+(4x) or NF4 (~7x vs fp32) compounds the paper's memory win without touching
+the optimisation problem (QLoRA did the same for LoRA adapters).
+
+Layout (DESIGN.md §8): a weight ``W (..., d_in, d_out)`` is quantized
+*blockwise per output channel* — the ``d_in`` axis is cut into blocks of
+``block`` rows and each ``(block, 1)`` column slice gets one f32 absmax
+scale, so ``scales`` is ``(..., ceil(d_in/block), d_out)``:
+
+* ``int8``: symmetric, ``q = round(W / s)`` with ``s = absmax/127``,
+  stored as one int8 per weight.
+* ``nf4``:  4-bit NormalFloat (QLoRA's quantile codebook for N(0,1)
+  weights), ``s = absmax``; two codes pack into one uint8 along ``d_in``
+  (row ``2i`` in the low nibble, ``2i+1`` in the high nibble).
+
+:class:`QuantizedTensor` is a pytree node whose *children* are the packed
+``data`` and ``scales`` arrays and whose static aux is only ``(qdtype,
+block, dtype)`` — deliberately no shape: ``lax.scan`` over a stacked
+``(L, …)`` parameter tree then slices the packed leaves exactly like it
+slices dense params, yielding a per-layer QuantizedTensor for free.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# QLoRA Appendix E: 16 quantiles of N(0, 1) renormalised to [-1, 1], with an
+# exact zero so zero weights stay exactly zero.
+NF4_CODES = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ],
+    np.float32,
+)
+# decision boundaries: midpoints between adjacent codes (15 of them)
+NF4_BOUNDARIES = (NF4_CODES[1:] + NF4_CODES[:-1]) / 2.0
+
+QDTYPES = ("int8", "nf4")
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class QuantizedTensor(NamedTuple):
+    """Packed quantized weight + per-block scales, as one pytree node.
+
+    ``data``   — int8 ``(..., d_in, d_out)`` or uint8 ``(..., d_in/2, d_out)``
+    ``scales`` — float32 ``(..., ceil(d_in/block), d_out)``
+    ``qdtype`` / ``block`` / ``dtype`` — static aux: scheme, rows per scale
+    block, and the *logical* (dequantized) dtype name, e.g. "bfloat16".
+    """
+
+    data: jax.Array
+    scales: jax.Array
+    qdtype: str = "int8"
+    block: int = 64
+    dtype_name: str = "float32"
+
+    # --- pytree protocol: data/scales are children, the rest is static ---
+    def tree_flatten_with_keys(self):
+        return (
+            ((jax.tree_util.GetAttrKey("data"), self.data),
+             (jax.tree_util.GetAttrKey("scales"), self.scales)),
+            (self.qdtype, self.block, self.dtype_name),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    # --- logical-array duck typing (is_adaptable, shape checks) ----------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        s = tuple(self.data.shape)
+        if self.qdtype == "nf4":
+            return s[:-2] + (2 * s[-2],) + s[-1:]
+        return s
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_name)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def nbytes(self) -> int:
+        """Actual packed storage (data + scales)."""
+        return int(
+            self.data.size * self.data.dtype.itemsize
+            + self.scales.size * self.scales.dtype.itemsize
+        )
+
+
+def is_quantized(x) -> bool:
+    return isinstance(x, QuantizedTensor)
+
+
+def is_param_leaf(x) -> bool:
+    """The is_leaf predicate for flattening param trees that may carry
+    ``None`` placeholders or packed QuantizedTensor nodes — shared by
+    adapt/peft/checkpoint so no caller descends into (data, scales)."""
+    return x is None or isinstance(x, QuantizedTensor)
+
+
+_is_leaf = is_param_leaf
+
+
+def _blocked(w: jax.Array, block: int) -> tuple[jax.Array, int]:
+    """(..., d_in, d_out) -> (..., n_blocks, block, d_out) zero-padded."""
+    d_in = w.shape[-2]
+    n_blocks = -(-d_in // block)
+    pad = n_blocks * block - d_in
+    if pad:
+        widths = [(0, 0)] * w.ndim
+        widths[-2] = (0, pad)
+        w = jnp.pad(w, widths)
+    return w.reshape(*w.shape[:-2], n_blocks, block, w.shape[-1]), d_in
+
+
+def quantize(w: jax.Array, qdtype: str = "int8", block: int = 64) -> QuantizedTensor:
+    """Blockwise per-channel symmetric quantization along ``d_in`` (axis -2)."""
+    if qdtype not in QDTYPES:
+        raise ValueError(f"qdtype {qdtype!r} not in {QDTYPES}")
+    if block < 2 or block % 2:
+        raise ValueError(f"block must be even and >= 2, got {block}")
+    if w.ndim < 2:
+        raise ValueError(f"quantize wants a (..., d_in, d_out) matrix, got {w.shape}")
+    dtype_name = jnp.dtype(w.dtype).name
+    wf = w.astype(jnp.float32)
+    wb, d_in = _blocked(wf, block)  # (..., nb, block, d_out)
+    absmax = jnp.max(jnp.abs(wb), axis=-2)  # (..., nb, d_out)
+    if qdtype == "int8":
+        scales = absmax / 127.0
+        safe = jnp.where(scales > 0, scales, 1.0)
+        q = jnp.round(wb / safe[..., None, :])
+        q = jnp.clip(q, -127, 127).astype(jnp.int8)
+        data = q.reshape(*q.shape[:-3], -1, q.shape[-1])[..., :d_in, :]
+        return QuantizedTensor(data, scales, "int8", block, dtype_name)
+    # nf4: normalise each block into [-1, 1], bucket by codebook boundaries
+    if d_in % 2:
+        raise ValueError(f"nf4 packing needs an even d_in, got {d_in}")
+    scales = absmax
+    safe = jnp.where(scales > 0, scales, 1.0)
+    normed = wb / safe[..., None, :]
+    codes = jnp.zeros(normed.shape, jnp.uint8)
+    for b in NF4_BOUNDARIES:  # 15 static compares -> code in [0, 16)
+        codes = codes + (normed > b).astype(jnp.uint8)
+    codes = codes.reshape(*codes.shape[:-3], -1, codes.shape[-1])[..., :d_in, :]
+    lo = codes[..., 0::2, :]
+    hi = codes[..., 1::2, :]
+    data = (lo | (hi << 4)).astype(jnp.uint8)
+    return QuantizedTensor(data, scales, "nf4", block, dtype_name)
+
+
+def unpack_nf4(data: jax.Array) -> jax.Array:
+    """uint8 (..., d_in/2, d_out) -> int32 codes (..., d_in, d_out)."""
+    lo = (data & 0xF).astype(jnp.int32)
+    hi = ((data >> 4) & 0xF).astype(jnp.int32)
+    inter = jnp.stack([lo, hi], axis=-2)  # (..., d_in/2, 2, d_out)
+    return inter.reshape(*inter.shape[:-3], -1, inter.shape[-1])
+
+
+def dequantize(qt: QuantizedTensor) -> jax.Array:
+    """Reconstruct the logical (..., d_in, d_out) matrix in ``qt.dtype``."""
+    if qt.qdtype == "nf4":
+        wf = jnp.take(jnp.asarray(NF4_CODES), unpack_nf4(qt.data), axis=0)
+    else:
+        wf = jnp.asarray(qt.data).astype(jnp.float32)
+    d_in = wf.shape[-2]
+    s = jnp.repeat(jnp.asarray(qt.scales).astype(jnp.float32), qt.block, axis=-2)
+    return (wf * s[..., :d_in, :]).astype(qt.dtype)
+
+
+# ----------------------------------------------------------------- trees
+
+# The single source of the linear-weight policy: only ``…/w`` matrices;
+# embeddings gather rows and routers are tiny + load-balance-sensitive, so
+# both stay in the compute dtype. core.adapt re-exports the same exclude
+# tuple and predicate for adapter selection (an already-quantized leaf IS
+# still adaptable — the bypass trains against the packed base).
+DEFAULT_QUANT_EXCLUDE = (r".*embed.*", r".*router.*")
+
+
+def is_linear_weight(name: str, leaf, exclude=DEFAULT_QUANT_EXCLUDE) -> bool:
+    if not name.endswith("/w"):
+        return False
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if not jnp.issubdtype(jnp.dtype(leaf.dtype), jnp.floating):
+        return False
+    return not any(re.fullmatch(p, name) for p in exclude)
+
+
+def default_quantizable(name: str, leaf) -> bool:
+    return not isinstance(leaf, QuantizedTensor) and is_linear_weight(name, leaf)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def quantize_tree(tree, qdtype: str = "int8", block: int = 64, predicate=None):
+    """Quantize every matching leaf of a param pytree in one pass.
+
+    ``predicate(name, leaf) -> bool`` selects leaves (default: the frozen
+    linear-weight policy above). Already-quantized leaves pass through.
+    """
+    predicate = predicate or default_quantizable
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_leaf)
+    out = []
+    for path, leaf in flat:
+        if (
+            leaf is not None
+            and not isinstance(leaf, QuantizedTensor)  # idempotent re-entry
+            and predicate(_path_str(path), leaf)
+        ):
+            out.append(quantize(leaf, qdtype, block))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def dequantize_tree(tree):
+    """Inverse of :func:`quantize_tree`: QuantizedTensor leaves -> dense."""
+    return jax.tree.map(
+        lambda x: dequantize(x) if isinstance(x, QuantizedTensor) else x,
+        tree,
+        is_leaf=_is_leaf,
+    )
+
+
+def any_quantized(tree) -> bool:
+    return any(
+        isinstance(l, QuantizedTensor)
+        for l in jax.tree.leaves(tree, is_leaf=_is_leaf)
+    )
+
+
+def tree_bytes(tree) -> int:
+    """Storage bytes of a tree, counting packed bytes for quantized leaves."""
+    total = 0
+    for l in jax.tree.leaves(tree, is_leaf=_is_leaf):
+        if l is None:
+            continue
+        if isinstance(l, QuantizedTensor):
+            total += l.nbytes
+        else:
+            total += int(l.size) * jnp.dtype(l.dtype).itemsize
+    return total

@@ -34,11 +34,43 @@ def _leaf_none(x):
 
 
 class AdapterStore:
-    def __init__(self):
+    def __init__(self, base_params=None):
+        """``base_params`` (optional) enables registration-time validation of
+        each tenant's delta indices against the base weight shapes — works
+        for dense *and* quantized bases (QuantizedTensor exposes the logical
+        shape), catching an adapter trained for a different arch before it
+        produces silent out-of-range gathers inside a jitted decode."""
         self._indices: list = []  # one (indices, values) tree pair per tenant
         self._values: list = []
         self.names: list[str] = []
         self._stacked: tuple | None = None
+        self._base = base_params
+
+    def _validate_base_shapes(self, indices, label: str) -> None:
+        if self._base is None:
+            return
+        flat = jax.tree_util.tree_flatten_with_path(indices, is_leaf=_leaf_none)[0]
+        for path, leaf in flat:
+            if leaf is None:
+                continue
+            node = self._base
+            try:
+                for p in path:
+                    node = node[p.key if hasattr(p, "key") else p.idx]
+            except (KeyError, TypeError, IndexError):
+                raise ValueError(
+                    f"{label}: adapter leaf {jax.tree_util.keystr(path)} has "
+                    "no matching base weight"
+                ) from None
+            d_in = node.shape[-2]  # logical shape (QuantizedTensor-aware)
+            arr = np.asarray(leaf)
+            lo, hi = int(np.min(arr)), int(np.max(arr))
+            if lo < 0 or hi >= d_in:
+                raise ValueError(
+                    f"{label}: delta index {lo if lo < 0 else hi} out of "
+                    f"range [0, {d_in}) at {jax.tree_util.keystr(path)} — "
+                    "adapter trained against a different architecture?"
+                )
 
     @property
     def num_adapters(self) -> int:
@@ -58,6 +90,7 @@ class AdapterStore:
         if not isinstance(indices, dict) or "blocks" not in indices:
             raise ValueError("adapter tree has no 'blocks' subtree")
         label = name or f"adapter{len(self.names) + 1}"
+        self._validate_base_shapes(indices, label)
         istruct = jax.tree.structure(indices, is_leaf=_leaf_none)
         vstruct = jax.tree.structure(values, is_leaf=_leaf_none)
         if istruct != vstruct:

@@ -56,11 +56,23 @@ class ServeEngine:
         rng=None,
         adapter_store: AdapterStore | None = None,
         min_prefill_bucket: int = 16,
+        base_dtype: str = "fp32",
+        quant_block: int = 64,
     ):
         if model.cfg.family not in ("dense", "moe", "vlm"):
             # engine currently drives KV-cache LMs; SSM/hybrid/encdec decode
             # through their model APIs directly (see examples).
             raise ValueError(f"ServeEngine supports KV LMs, got {model.cfg.family}")
+        from repro.peft import BASE_DTYPES, quantize_base
+
+        if base_dtype not in BASE_DTYPES:
+            raise ValueError(f"base_dtype {base_dtype!r} not in {BASE_DTYPES}")
+        if base_dtype != "fp32":
+            # one quantized base serves every tenant: the decode/prefill
+            # matmuls run the fused dequant path, tenant deltas apply on
+            # top. quant_block must match the base the adapters were
+            # trained against (launch --quant-block).
+            params = quantize_base(params, base_dtype, block=quant_block)
         self.model = model
         self.params = params
         self.slots = slots

@@ -88,11 +88,8 @@ def test_ops_delta_apply_batched_backends_and_padding():
     aid = jnp.asarray([2, 0], jnp.int32)  # (B,) ids against (B, S, d_in)
     want = ops.delta_apply_batched(x, idx, val, aid)
     assert want.shape == (2, 5, 70)
-    try:
-        ops.set_backend("pallas_interpret")
+    with ops.use_backend("pallas_interpret"):
         got = ops.delta_apply_batched(x, idx, val, aid)
-    finally:
-        ops.set_backend("jnp")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
 
 
@@ -139,30 +136,23 @@ def test_topk_select(shape, k):
 
 def test_ops_vjp_matches_jnp_backend():
     x, w, idx, val, b = _mk(256, 384, 256, 3, jnp.float32)
-    try:
-        ops.set_backend("pallas_interpret")
 
-        def f(xx, vv):
-            return jnp.sum(jnp.cos(ops.fused_linear(xx, w, idx, vv, b)))
+    def f(xx, vv):
+        return jnp.sum(jnp.cos(ops.fused_linear(xx, w, idx, vv, b)))
 
+    with ops.use_backend("pallas_interpret"):
         gk = jax.grad(f, argnums=(0, 1))(x, val)
-        ops.set_backend("jnp")
-        gr = jax.grad(f, argnums=(0, 1))(x, val)
-    finally:
-        ops.set_backend("jnp")
+    gr = jax.grad(f, argnums=(0, 1))(x, val)
     np.testing.assert_allclose(np.asarray(gk[0]), np.asarray(gr[0]), atol=1e-3)
     np.testing.assert_allclose(np.asarray(gk[1]), np.asarray(gr[1]), atol=1e-3)
 
 
 def test_ops_handles_batch_dims_and_padding():
-    try:
-        ops.set_backend("pallas_interpret")
-        x = jnp.asarray(RNG.normal(size=(2, 5, 100)), jnp.float32)  # ragged dims
-        idx = jnp.asarray(RNG.integers(0, 100, size=(3, 70)), jnp.int32)
-        val = jnp.asarray(RNG.normal(size=(3, 70)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, 5, 100)), jnp.float32)  # ragged dims
+    idx = jnp.asarray(RNG.integers(0, 100, size=(3, 70)), jnp.int32)
+    val = jnp.asarray(RNG.normal(size=(3, 70)), jnp.float32)
+    with ops.use_backend("pallas_interpret"):
         got = ops.delta_apply(x, idx, val)
-    finally:
-        ops.set_backend("jnp")
     want = ops.delta_apply(x, idx, val)
     assert got.shape == (2, 5, 70)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)

@@ -53,6 +53,36 @@ def test_lora_zero_at_init(setup):
         np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
 
 
+def test_lora_adapts_quantized_base(setup):
+    """QLoRA shape: LoRA leaves appear for packed matrices too (the packed
+    node is the adaptable leaf, not its data/scales children), zero-init
+    parity holds, and merge folds into a dequantized dense tree."""
+    from repro.peft import quantize_base
+    from repro.quant import any_quantized, dequantize_tree
+
+    m, params = setup
+    qp = quantize_base(params, "int8")
+    peft = get_peft(PeftConfig(method="lora", lora_rank=4))
+    tr_q, _ = peft.init(qp, jax.random.PRNGKey(1))
+    tr_d, _ = peft.init(params, jax.random.PRNGKey(1))
+    n_q = sum(x is not None for x in jax.tree.leaves(
+        tr_q, is_leaf=lambda x: x is None or (isinstance(x, dict) and "A" in x)))
+    n_d = sum(x is not None for x in jax.tree.leaves(
+        tr_d, is_leaf=lambda x: x is None or (isinstance(x, dict) and "A" in x)))
+    assert n_q == n_d > 0
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+    eff, ad = peft.model_inputs(qp, tr_q, None)
+    lg1, _ = m.forward(eff, ad, batch)
+    lg0, _ = m.forward(qp, None, batch)
+    np.testing.assert_allclose(
+        np.asarray(lg1, np.float32), np.asarray(lg0, np.float32), atol=1e-5
+    )
+    merged = peft.merge(qp, tr_q, None)  # B=0 ⇒ merged == dequantized base
+    assert not any_quantized(merged)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(dequantize_tree(qp))):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
 def test_bitfit_selects_only_bias_norm(setup):
     m, params = setup
     peft = get_peft(PeftConfig(method="bitfit"))

@@ -1,0 +1,197 @@
+"""Quantizer unit tests: roundtrip error bounds, packing, trees, pytree
+mechanics (scan slicing, jit), and checkpoint save/restore of packed trees."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant import (
+    QuantizedTensor,
+    any_quantized,
+    dequantize,
+    dequantize_tree,
+    quantize,
+    quantize_tree,
+    tree_bytes,
+    unpack_nf4,
+)
+
+RNG = np.random.default_rng(11)
+
+
+def _w(shape, scale=0.05, dt=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dt)
+
+
+# ------------------------------------------------------------- roundtrip
+
+
+@pytest.mark.parametrize("shape", [(128, 96), (3, 128, 64), (100, 70)])
+@pytest.mark.parametrize("block", [32, 64])
+def test_int8_roundtrip_bounded(shape, block):
+    w = _w(shape)
+    qt = quantize(w, "int8", block)
+    wd = dequantize(qt)
+    assert wd.shape == w.shape and wd.dtype == w.dtype
+    # symmetric int8: per-element error <= scale/2 = absmax/254 per block;
+    # bound globally by the worst block's absmax
+    err = np.abs(np.asarray(wd - w))
+    bound = float(jnp.max(qt.scales)) / 2 + 1e-7
+    assert err.max() <= bound, (err.max(), bound)
+
+
+@pytest.mark.parametrize("shape", [(128, 96), (3, 128, 64)])
+def test_nf4_roundtrip_bounded(shape):
+    w = _w(shape)
+    qt = quantize(w, "nf4", 64)
+    wd = dequantize(qt)
+    assert wd.shape == w.shape
+    # NF4's widest decision cell is ~0.14 of the block absmax (around ±1)
+    err = np.abs(np.asarray(wd - w))
+    bound = 0.15 * float(jnp.max(qt.scales))
+    assert err.max() <= bound, (err.max(), bound)
+    # and the codebook is actually 4-bit: data holds two codes per byte
+    assert qt.data.dtype == jnp.uint8
+    assert qt.data.shape[-2] == shape[-2] // 2
+
+
+def test_nf4_exact_zero_and_pack_order():
+    w = jnp.zeros((8, 4), jnp.float32).at[2, 1].set(0.5).at[3, 1].set(-0.5)
+    qt = quantize(w, "nf4", 8)
+    np.testing.assert_allclose(np.asarray(dequantize(qt)), np.asarray(w), atol=1e-6)
+    codes = np.asarray(unpack_nf4(qt.data))
+    assert codes.shape == (8, 4)
+    assert codes[2, 1] == 15 and codes[3, 1] == 0  # ±absmax endpoints
+    assert codes[0, 0] == 7  # zero maps to the exact-zero code
+
+
+def test_int8_bf16_dtype_and_odd_blocks():
+    w = _w((100, 48), dt=jnp.bfloat16)  # d_in not a block multiple
+    qt = quantize(w, "int8", 64)
+    assert qt.scales.shape == (2, 48)  # ceil(100/64)
+    wd = dequantize(qt)
+    assert wd.dtype == jnp.bfloat16 and wd.shape == (100, 48)
+
+
+def test_nf4_odd_d_in_rejected():
+    with pytest.raises(ValueError, match="even"):
+        quantize(_w((7, 8)), "nf4", 4)
+
+
+# ----------------------------------------------------------- pytree node
+
+
+def test_scan_slices_packed_stacks():
+    """lax.scan over a (L, …) quantized stack must yield per-layer tensors
+    whose dequant equals slicing the full dequant — the property the layer
+    scan in every model relies on."""
+    w = _w((4, 128, 64))
+    qt = quantize(w, "int8", 64)
+
+    def body(c, per_layer):
+        return c, dequantize(per_layer)
+
+    _, per = jax.lax.scan(body, 0, qt)
+    np.testing.assert_allclose(
+        np.asarray(per), np.asarray(dequantize(qt)), atol=1e-6
+    )
+
+
+def test_jit_and_grad_through_dequantize():
+    w = _w((64, 32))
+    qt = quantize(w, "int8", 32)
+    x = _w((8, 64), 1.0)
+    y = jax.jit(lambda q, xx: xx @ dequantize(q))(qt, x)
+    assert y.shape == (8, 32)
+    # differentiating w.r.t. x through the dequant matmul works (int codes
+    # are not differentiated — the trainer never asks for their grads)
+    g = jax.grad(lambda xx: jnp.sum(jax.jit(lambda q, xx: xx @ dequantize(q))(qt, xx)))(x)
+    assert g.shape == x.shape
+
+
+def test_quantize_tree_policy_and_bytes():
+    tree = {
+        "blocks": {"wq": {"w": _w((2, 128, 64))}, "attn_norm": jnp.ones((2, 64))},
+        "embed": {"w": _w((256, 64))},
+        "head": {"w": _w((64, 256))},
+    }
+    qtree = quantize_tree(tree, "int8", 64)
+    assert isinstance(qtree["blocks"]["wq"]["w"], QuantizedTensor)
+    assert isinstance(qtree["head"]["w"], QuantizedTensor)
+    assert not isinstance(qtree["embed"]["w"], QuantizedTensor)  # excluded
+    assert not isinstance(qtree["blocks"]["attn_norm"], QuantizedTensor)
+    assert any_quantized(qtree) and not any_quantized(tree)
+    assert tree_bytes(qtree) < tree_bytes(tree)
+    back = dequantize_tree(qtree)
+    assert not any_quantized(back)
+    assert back["blocks"]["wq"]["w"].shape == (2, 128, 64)
+
+
+def test_quantize_tree_idempotent():
+    """Re-quantizing an already-packed tree is a no-op, not a crash —
+    ServeEngine(base_dtype=…) may receive params a launcher already packed."""
+    tree = {"blocks": {"wq": {"w": _w((2, 128, 64))}}}
+    q1 = quantize_tree(tree, "int8", 64)
+    q2 = quantize_tree(q1, "int8", 64)
+    assert q2["blocks"]["wq"]["w"] is q1["blocks"]["wq"]["w"]
+
+
+def test_int8_blockwise_byte_reduction_vs_fp32():
+    """Acceptance floor: >=3.5x over fp32 for the quantized leaves."""
+    w = jnp.asarray(RNG.normal(size=(4, 128, 128)), jnp.float32)
+    qt = quantize(w, "int8", 64)
+    assert w.size * 4 / qt.nbytes >= 3.5
+    nf4 = quantize(w, "nf4", 64)
+    assert w.size * 4 / nf4.nbytes >= 6.0
+
+
+# ----------------------------------------------------------- checkpointing
+
+
+def test_checkpoint_roundtrip_packed(tmp_path):
+    from repro.checkpoint.manager import load_pytree, restore_into, save_pytree
+
+    tree = {
+        "blocks": {"wq": {"w": quantize(_w((2, 128, 64), dt=jnp.bfloat16), "nf4", 64)}},
+        "head": {"w": quantize(_w((64, 128)), "int8", 32)},
+        "norm": jnp.ones((64,), jnp.bfloat16),
+        "none_leaf": None,
+    }
+    p = os.path.join(tmp_path, "q.npz")
+    save_pytree(p, tree, {"kind": "test"})
+    loaded = load_pytree(p)
+    qw = loaded["blocks"]["wq"]["w"]
+    assert isinstance(qw, QuantizedTensor)
+    assert qw.qdtype == "nf4" and qw.block == 64 and qw.dtype_name == "bfloat16"
+    # packed bytes identical, therefore dequant identical
+    np.testing.assert_array_equal(
+        np.asarray(tree["blocks"]["wq"]["w"].data), np.asarray(qw.data)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(tree["head"]["w"].data), np.asarray(loaded["head"]["w"].data)
+    )
+    restored = restore_into(tree, loaded)
+    np.testing.assert_allclose(
+        np.asarray(dequantize(restored["head"]["w"])),
+        np.asarray(dequantize(tree["head"]["w"])),
+    )
+    assert restored["none_leaf"] is None
+
+    # a dense checkpoint cannot silently restore into a packed template…
+    dense = {**tree, "head": {"w": _w((64, 128))}}
+    pd = os.path.join(tmp_path, "d.npz")
+    save_pytree(pd, dense)
+    with pytest.raises(ValueError, match="QuantizedTensor"):
+        restore_into(tree, load_pytree(pd))
+    # …and a packed checkpoint into a dense template fails loudly too
+    # (resuming without the run's --base-dtype), not with a numpy crash
+    with pytest.raises(ValueError, match="dense array"):
+        restore_into(dense, load_pytree(p))
+    # …and a scheme/block mismatch is rejected rather than silently
+    # adopting the checkpoint's packing over the requested one
+    other = {**tree, "head": {"w": quantize(_w((64, 128)), "int8", 64)}}
+    with pytest.raises(ValueError, match="block=64"):
+        restore_into(other, load_pytree(p))

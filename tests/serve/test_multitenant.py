@@ -105,12 +105,9 @@ def test_parity_on_pallas_interpret_backend():
     store.register(*a1)
     prompt = [1, 5, 9, 2 + 11]
     want = _serve(m, params, prompt, store=store, adapter_id=1)  # jnp backend
-    try:
-        ops.set_backend("pallas_interpret")
+    with ops.use_backend("pallas_interpret"):
         got = _serve(m, params, prompt, store=store, adapter_id=1)
         merged = _serve(m, merge_adapters(params, *a1), prompt)
-    finally:
-        ops.set_backend("jnp")
     assert got == want
     assert merged == want
 
