@@ -1,14 +1,23 @@
-"""Serving micro-bench: decode throughput/latency vs slots × tenants.
+"""Serving micro-bench: decode throughput vs slots × tenants × chunk.
 
 Compares merged serving (Alg. 1 phase 3 — the zero-overhead single-tenant
 path) against unmerged multi-tenant serving (per-slot batched delta apply)
-on the reduced dense arch. Emits the ``name,us_per_call,derived`` CSV
-schema of benchmarks.run so the perf trajectory picks it up. Times are CPU
-wall — the structural claim (one jitted call, no per-slot host traffic)
-holds on any backend."""
+on the reduced dense arch, and the per-token decode loop
+(``decode_chunk=1``) against the fused decode megastep, on fp32 and int8
+bases. Times are CPU wall — the structural claim (one jitted call and one
+device→host transfer per *chunk*, no per-slot host traffic) holds on any
+backend.
+
+Besides the ``name,us_per_call,derived`` CSV schema of benchmarks.run, the
+full grid lands in ``BENCH_serving.json`` (tok/s per configuration plus
+the megastep-vs-per-token speedup ratios) so the perf trajectory is
+machine-readable.
+"""
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -17,6 +26,9 @@ import numpy as np
 from benchmarks.common import bench_model
 from repro.core.adapt import init_adapters, merge_adapters
 from repro.serve import AdapterStore, ServeEngine
+
+MAX_LEN = 128
+JSON_PATH = pathlib.Path("BENCH_serving.json")
 
 
 def _adapter(params, seed, k=2, scale=0.05):
@@ -35,53 +47,106 @@ def _adapter(params, seed, k=2, scale=0.05):
     return idx, val
 
 
-def _run_engine(m, params, *, slots, store, n_tenants, steps):
-    eng = ServeEngine(m, params, slots=slots, max_len=128, adapter_store=store)
+def _run_engine(m, params, *, slots, store, n_tenants, chunk, steps,
+                base_dtype="fp32"):
+    # eos outside the vocab: a greedy sample hitting the default eos_id
+    # mid-window would idle its slot for the rest of the timed window
+    eng = ServeEngine(
+        m, params, slots=slots, max_len=MAX_LEN, adapter_store=store,
+        decode_chunk=chunk, base_dtype=base_dtype, eos_id=1 << 20,
+    )
     for i in range(slots):
         aid = 1 + i % n_tenants if n_tenants else 0
-        eng.submit([1, 3 + i, 7, 2 + i], max_new=steps + 1, adapter_id=aid)
-    eng.step()  # admission + compile of both prefill and decode
+        eng.submit([1, 3 + i, 7, 2 + i], max_new=MAX_LEN - 8, adapter_id=aid)
+    # count tokens over a stable Request snapshot: in_flight() drops
+    # completed requests, which would corrupt the count for long windows
+    reqs = eng.scheduler.in_flight()
+    eng.step()  # admission + compile of both prefill and megastep
+    # equal decode budget per config: ``steps`` per-token steps' worth
+    n_calls = max(steps // chunk, 1)
+    tok0 = sum(len(r.out) for r in reqs)
     t0 = time.perf_counter()
-    n = 0
-    while eng.step():
-        n += 1
+    for _ in range(n_calls):
+        eng.step()
     wall = time.perf_counter() - t0
-    return wall / max(n, 1) * 1e6, slots * n / wall
+    toks = sum(len(r.out) for r in reqs) - tok0
+    return {
+        "us_per_call": wall / n_calls * 1e6,
+        "tok_s": toks / wall,
+        "tokens": toks,
+    }
 
 
 def run(*, steps: int = 24) -> list[str]:
     out = []
+    records = []
     cfg, m, params = bench_model("qwen2-1.5b")
     adapters = [_adapter(params, seed) for seed in (1, 2, 3, 4)]
+    merged = merge_adapters(params, *adapters[0])
 
-    for slots in (1, 4, 8):
-        # merged single-tenant reference: delta folded into the weights
-        merged = merge_adapters(params, *adapters[0])
-        us, tok_s = _run_engine(
-            m, merged, slots=slots, store=None, n_tenants=0, steps=steps
-        )
-        out.append(
-            f"serve.decode.slots{slots}.merged,{us:.0f},tok_s={tok_s:.1f} tenants=0"
-        )
-        for n_tenants in (1, 4):
+    def bench(slots, chunk, *, mode, n_tenants=0, base="fp32"):
+        if mode == "merged":
+            p, store = merged, None
+        else:
+            p = params
             store = AdapterStore()
             for ad in adapters[:n_tenants]:
                 store.register(*ad)
-            us, tok_s = _run_engine(
-                m, params, slots=slots, store=store, n_tenants=n_tenants, steps=steps
-            )
-            out.append(
-                f"serve.decode.slots{slots}.unmerged{n_tenants},{us:.0f},"
-                f"tok_s={tok_s:.1f} tenants={n_tenants}"
-            )
+        r = _run_engine(
+            m, p, slots=slots, store=store, n_tenants=n_tenants,
+            chunk=chunk, steps=steps, base_dtype=base,
+        )
+        rec = {"slots": slots, "chunk": chunk, "mode": mode,
+               "tenants": n_tenants, "base": base, **r}
+        records.append(rec)
+        out.append(
+            f"serve.decode.slots{slots}.chunk{chunk}.{mode}{n_tenants or ''}"
+            f"{'.int8' if base != 'fp32' else ''},{r['us_per_call']:.0f},"
+            f"tok_s={r['tok_s']:.1f}"
+        )
+        return rec
+
+    for slots in (1, 4, 8):
+        for chunk in (1, 8):
+            bench(slots, chunk, mode="merged")
+            for n_tenants in (1, 4):
+                bench(slots, chunk, mode="unmerged", n_tenants=n_tenants)
+    for chunk in (1, 8):  # quantized frozen base, multi-tenant
+        bench(4, chunk, mode="unmerged", n_tenants=2, base="int8")
+
+    # megastep win over the per-token loop, per (slots, mode, base) config
+    ratios = []
+    by_key = {}
+    for r in records:
+        by_key.setdefault(
+            (r["slots"], r["mode"], r["tenants"], r["base"]), {}
+        )[r["chunk"]] = r
+    for (slots, mode, tenants, base), chunks in sorted(by_key.items()):
+        if 1 not in chunks or 8 not in chunks:
+            continue
+        ratio = chunks[8]["tok_s"] / chunks[1]["tok_s"]
+        ratios.append({"slots": slots, "mode": mode, "tenants": tenants,
+                       "base": base, "chunk8_vs_chunk1_tok_s": round(ratio, 3)})
+        out.append(
+            f"serve.decode.slots{slots}.{mode}{tenants or ''}"
+            f"{'.int8' if base != 'fp32' else ''}.speedup,0,"
+            f"chunk8_vs_chunk1={ratio:.2f}x"
+        )
 
     # prefill bucketing: cost of admitting a mixed-length batch
-    eng = ServeEngine(m, params, slots=4, max_len=128)
+    eng = ServeEngine(m, params, slots=4, max_len=MAX_LEN)
     for plen in (3, 9, 17, 30):
         eng.submit(list(np.arange(1, plen + 1)), max_new=2)
     t0 = time.perf_counter()
     eng.run_to_completion()
     out.append(f"serve.prefill.bucketed_admit4,{(time.perf_counter() - t0) * 1e6:.0f},")
+
+    JSON_PATH.write_text(json.dumps(
+        {"arch": cfg.name, "max_len": MAX_LEN, "decode_steps_budget": steps,
+         "results": records, "speedups": ratios},
+        indent=2,
+    ))
+    out.append(f"serve.json_written,0,{JSON_PATH}")
     return out
 
 

@@ -45,6 +45,21 @@ python -m repro.launch.serve --arch qwen2-1.5b --reduced \
 grep -q "tenant1" "$tmpdir/serve.out"
 grep -q "tenant2" "$tmpdir/serve.out"
 
+echo "== decode megastep (chunked decode must match the per-token loop) =="
+# same 2 tenants, same prompts: --decode-chunk 8 compiles an 8-token
+# on-device decode loop per step; greedy outputs must be token-for-token
+# identical to the per-token (--decode-chunk 1) reference
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,17,25;1,40,41,42" --max-new 8 \
+    --decode-chunk 1 | grep '^req' > "$tmpdir/serve_chunk1.out"
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,17,25;1,40,41,42" --max-new 8 \
+    --decode-chunk 8 | grep '^req' > "$tmpdir/serve_chunk8.out"
+diff "$tmpdir/serve_chunk1.out" "$tmpdir/serve_chunk8.out"
+echo "decode-chunk parity OK"
+
 echo "== quantized-base e2e (adapt -> 2 train steps -> export -> serve int8) =="
 # the frozen base lives in int8 through BOTH training and serving: only the
 # sparse (idx, val) bypass pairs train, and two tenants then share the one

@@ -1,0 +1,131 @@
+"""Pallas TPU batched decode-attention kernel (Sq = 1, per-slot valid len).
+
+The serving decode hot path previously ran ``dense_attention`` over the
+full ``(B, max_len)`` cache with a masked softmax: every step materialises
+a ``(B, KV, G, 1, max_len)`` score tensor in f32 and re-reads the whole
+cache through XLA's generic einsum. This kernel is the roofline-shaped
+replacement: grid over (slot, kv-head), the GQA group rides as a
+``(G, hd)`` register tile against each ``(block_s, hd)`` KV chunk, and the
+online-softmax state ``(m, l, acc)`` lives in VMEM scratch in f32 for the
+whole sweep — each cache byte is read from HBM exactly once per step.
+
+Per-slot ``kv_valid_len`` masks the tail of the cache (continuous batching
+slots sit at different positions), so one compiled kernel serves every
+slot mix. VMEM per cell: ``block_s·hd·(2·4)B`` (k/v chunks in f32) +
+``G·(hd+block_s)·4B`` + scratch ``G·(hd+2)·4B`` — ≈ 140 KB at
+``block_s=128, hd=128, G=8``, far under the 16 MB budget, leaving the
+pipeline room to double-buffer the KV chunk DMA.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
+_NEG = -1e30
+
+
+def _decode_attn_kernel(
+    vl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, block_s: int, scale: float,
+):
+    s_step = pl.program_id(2)
+
+    @pl.when(s_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)   # (block_s, hd)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)   # (block_s, hd)
+    g = q.shape[0]
+    s = jax.lax.dot_general(
+        q, kb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (G, block_s)
+    col = s_step * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (g, block_s), 1
+    )
+    valid = col < vl_ref[0, 0]                   # per-slot cache frontier
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s_step == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_valid_len,
+    *,
+    block_s: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token GQA attention against a slot cache.
+
+    q (B, 1, H, hd); k, v (B, Smax, Hkv, hd); kv_valid_len scalar or (B,)
+    int — positions ``>= kv_valid_len[b]`` are masked out. Returns
+    (B, 1, H, hd). Smax is padded up to a ``block_s`` multiple here (pad
+    columns are always masked: ``kv_valid_len <= Smax``).
+    """
+    b, sq, h, hd = q.shape
+    if sq != 1:
+        raise ValueError(f"decode attention needs Sq=1, got {sq}")
+    skv, hkv = k.shape[1], k.shape[2]
+    if h % hkv:
+        raise ValueError(f"H={h} must be a multiple of Hkv={hkv}")
+    g = h // hkv
+    vl = jnp.asarray(kv_valid_len, jnp.int32).reshape(-1)
+    vl = jnp.broadcast_to(vl, (b,))[:, None]     # (B, 1)
+    bs = min(block_s, skv)
+    pad = (-skv) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ns = (skv + pad) // bs
+    qg = q.reshape(b, hkv, g, hd)
+    grid = (b, hkv, ns)
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, block_s=bs, scale=hd**-0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h_, s_: (b_, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, s_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b_, h_, s_: (b_, s_, h_, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b_, h_, s_: (b_, s_, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h_, s_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),    # running max
+            pltpu.VMEM((g, 1), jnp.float32),    # running denom
+            pltpu.VMEM((g, hd), jnp.float32),   # f32 accumulator
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(vl, qg, k, v)
+    return out.reshape(b, 1, h, hd)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.fused_linear import fused_linear_pallas
 from repro.kernels.quant_linear import fused_linear_q_pallas
 from repro.kernels.sparse_delta import (
@@ -228,12 +229,15 @@ def fused_linear(
 
 
 def _q_meta(qw: QuantizedTensor):
-    return (qw.qdtype, qw.block)
+    # interpret rides in the static meta: a traced bool would break
+    # pallas_call(interpret=...) when the wrapper runs under jit (the
+    # serving megastep jits the whole decode chunk).
+    return (qw.qdtype, qw.block, _backend == "pallas_interpret")
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _fused_linear_q(meta, x2d, data, scales, idx, val, bias, interpret):
-    qdtype, block = meta
+def _fused_linear_q(meta, x2d, data, scales, idx, val, bias):
+    qdtype, block, interpret = meta
     bm = 128 if x2d.shape[0] >= 128 else 8
     xp, m = _pad_to(x2d, 0, bm)
     bk = min(512, x2d.shape[1])
@@ -244,14 +248,14 @@ def _fused_linear_q(meta, x2d, data, scales, idx, val, bias, interpret):
     return y[:m]
 
 
-def _fused_q_fwd(meta, x2d, data, scales, idx, val, bias, interpret):
-    y = _fused_linear_q(meta, x2d, data, scales, idx, val, bias, interpret)
-    return y, (x2d, data, scales, idx, val, bias, interpret)
+def _fused_q_fwd(meta, x2d, data, scales, idx, val, bias):
+    y = _fused_linear_q(meta, x2d, data, scales, idx, val, bias)
+    return y, (x2d, data, scales, idx, val, bias)
 
 
 def _fused_q_bwd(meta, res, dy):
-    x2d, data, scales, idx, val, bias, interpret = res
-    qdtype, block = meta
+    x2d, data, scales, idx, val, bias = res
+    qdtype, block, interpret = meta
     # The quantized base is frozen *by construction* (int codes don't
     # differentiate): mirror fused_linear's w_frozen guard — no dense dw,
     # only dx (dense transpose vs the dequantized tile + sparse scatter)
@@ -272,7 +276,7 @@ def _fused_q_bwd(meta, res, dy):
     ddata = np.zeros(data.shape, dtype=jax.dtypes.float0)
     didx = np.zeros(idx.shape, dtype=jax.dtypes.float0)
     dscales = jnp.zeros(scales.shape, scales.dtype)  # frozen; DCE'd
-    return dx, ddata, dscales, didx, dval, dbias, None
+    return dx, ddata, dscales, didx, dval, dbias
 
 
 _fused_linear_q.defvjp(_fused_q_fwd, _fused_q_bwd)
@@ -301,10 +305,7 @@ def fused_linear_q(
         return y
     lead = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
-    y = _fused_linear_q(
-        _q_meta(qw), x2d, qw.data, qw.scales, idx, val, bias,
-        _backend == "pallas_interpret",
-    )
+    y = _fused_linear_q(_q_meta(qw), x2d, qw.data, qw.scales, idx, val, bias)
     return y.reshape(*lead, qw.shape[-1])
 
 
@@ -327,11 +328,29 @@ def matmul_q(x: jax.Array, w) -> jax.Array:
     # e.g. LoRA or untied-head training on a quantized base
     idx = jnp.zeros((1, n), jnp.int32)
     val = jnp.zeros((1, n), x.dtype)
-    y = _fused_linear_q(
-        _q_meta(w), x2d, w.data, w.scales, idx, val, None,
-        _backend == "pallas_interpret",
-    )
+    y = _fused_linear_q(_q_meta(w), x2d, w.data, w.scales, idx, val, None)
     return y.reshape(*lead, n)
+
+
+# ------------------------------------------------------------ decode attention
+
+
+def decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_valid_len
+) -> jax.Array:
+    """Batched single-token GQA attention for the serving decode hot path.
+
+    q (B, 1, H, hd) against a (B, Smax, Hkv, hd) slot cache with per-slot
+    ``kv_valid_len``. jnp backend: the gathered-einsum oracle; Pallas
+    backends: the online-softmax kernel (grid slot × kv-head, f32
+    accumulation in VMEM). Dispatch policy — *when* this replaces the
+    dense masked softmax — lives in ``models.attention.attention``.
+    """
+    if _backend == "jnp":
+        return ref.decode_attention_ref(q, k, v, kv_valid_len)
+    return decode_attention_pallas(
+        q, k, v, kv_valid_len, interpret=_backend == "pallas_interpret"
+    )
 
 
 # ----------------------------------------------------------------- topk select

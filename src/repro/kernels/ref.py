@@ -46,6 +46,27 @@ def sparse_delta_batched_ref(
     return jnp.sum(xg * val_m.astype(x.dtype), axis=-2)
 
 
+def decode_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_valid_len
+) -> jax.Array:
+    """Single-token GQA attention with a per-slot cache frontier.
+
+    q (B, 1, H, hd); k, v (B, Smax, Hkv, hd); kv_valid_len scalar or (B,)
+    — cache positions ``>= kv_valid_len[b]`` are masked. f32 softmax.
+    """
+    b, _, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32)) * hd**-0.5
+    vl = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32).reshape(-1), (b,))
+    mask = jnp.arange(skv)[None, None, None, :] < vl[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.where(mask, jax.nn.softmax(s, axis=-1), 0.0)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
 def fused_linear_ref(
     x: jax.Array,
     w: jax.Array,

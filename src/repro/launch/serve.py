@@ -40,6 +40,11 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="tokens decoded per jitted megastep call (1 = "
+                         "classic per-token loop; greedy outputs are "
+                         "identical across chunk sizes, sampled ones "
+                         "follow a different rng stream)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--base-dtype", default="fp32", choices=BASE_DTYPES,
@@ -81,6 +86,7 @@ def main(argv=None):
     engine = ServeEngine(
         model, params, slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, top_k=args.top_k, adapter_store=store,
+        decode_chunk=args.decode_chunk,
     )
     prompts = [p for p in args.prompts.split(";") if p]
     n_tenants = store.num_adapters if store is not None else 0

@@ -13,6 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 _MASKED = -1e30
 
 
@@ -168,6 +170,11 @@ def flash_attention(
     return out.astype(q.dtype)
 
 
+# smallest cache worth the Pallas decode kernel: below this, padding Smax
+# up to a lane-aligned KV chunk costs more than the dense masked softmax
+DECODE_KERNEL_MIN_LEN = 16
+
+
 def attention(
     q: jax.Array,
     k: jax.Array,
@@ -178,13 +185,28 @@ def attention(
     q_offset=0,
     kv_valid_len=None,
 ) -> jax.Array:
-    """Dispatch: decode/small -> dense; long sequences -> flash scan."""
+    """Dispatch: decode -> Pallas decode kernel (dense on jnp/tiny caches);
+    long sequences -> flash scan; everything else -> dense."""
     skv = k.shape[1]
     sq = q.shape[1]
+    h, hkv = q.shape[2], k.shape[2]
     if sq > 1 and kv_valid_len is None and skv >= cfg.flash_threshold:
         return flash_attention(
             q, k, v, causal=causal, q_offset=q_offset, block=cfg.flash_block
         )
+    if (
+        sq == 1
+        and not causal
+        and kv_valid_len is not None
+        and h % hkv == 0
+        and skv >= DECODE_KERNEL_MIN_LEN
+        and ops.get_backend() != "jnp"
+    ):
+        # decode hot path: online-softmax kernel over the slot cache with
+        # per-slot valid lengths — one HBM read per cache byte per step.
+        # Dense fallback remains for the jnp backend (CPU oracle) and for
+        # caches too small to amortise the KV-chunk padding.
+        return ops.decode_attention(q, k, v, kv_valid_len)
     return dense_attention(
         q, k, v, causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len
     )

@@ -1,10 +1,14 @@
 """Multi-tenant, adapter-aware serving subsystem.
 
-engine    — thin orchestration (the public ``ServeEngine``);
-scheduler — FIFO admission + slot assignment;
-kv_cache  — shared slot cache: splice/evict/positions;
-sampler   — greedy/temperature/top-k fused into the jitted step;
-adapters  — tenant registry of unmerged NeuroAda deltas.
+engine    — thin orchestration (the public ``ServeEngine``): decode runs
+            as a compiled multi-token megastep, one device→host transfer
+            per ``decode_chunk`` tokens (DESIGN §9);
+scheduler — FIFO admission + slot assignment + slot state as arrays;
+kv_cache  — shared slot cache: one jitted splice per admission bucket,
+            device-resident per-slot positions;
+sampler   — greedy/temperature/top-k fused into the jitted calls;
+adapters  — tenant registry of unmerged NeuroAda deltas (stacked once,
+            cached until register/remove).
 """
 
 from repro.serve.adapters import AdapterStore

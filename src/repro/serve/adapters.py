@@ -45,6 +45,10 @@ class AdapterStore:
         self.names: list[str] = []
         self._stacked: tuple | None = None
         self._base = base_params
+        # bumped on every remove(): ids shift, so engines stamp requests
+        # with the revision they validated against and refuse to decode a
+        # request whose revision is stale (silent cross-tenant serving)
+        self.removals = 0
 
     def _validate_base_shapes(self, indices, label: str) -> None:
         if self._base is None:
@@ -140,10 +144,34 @@ class AdapterStore:
         self._stacked = None
         return len(self._indices)  # id 0 is the base model
 
+    def remove(self, name_or_id: str | int) -> None:
+        """Unregister a tenant by name or adapter id (1-based). Later
+        tenants shift down one id — callers holding ids must re-resolve.
+        Invalidates the stacked cache; the next engine step re-stacks."""
+        if isinstance(name_or_id, str):
+            try:
+                i = self.names.index(name_or_id)
+            except ValueError:
+                raise KeyError(f"no tenant named {name_or_id!r}") from None
+        else:
+            if not 1 <= name_or_id <= len(self._indices):
+                raise KeyError(f"adapter id {name_or_id} not registered")
+            i = name_or_id - 1
+        del self._indices[i]
+        del self._values[i]
+        del self.names[i]
+        self._stacked = None
+        self.removals += 1
+
     def stacked(self):
         """(idx_tree, val_tree) of adapter stacks, N = num_adapters + 1
         (row 0 = base, zero values): ``blocks`` leaves are (L, N, k, d_out),
-        other leaves (N, k, d_out). None when nothing is registered."""
+        other leaves (N, k, d_out). None when nothing is registered.
+
+        The result is CACHED and invalidated on register/remove: the
+        engine calls this every decode chunk, and re-stacking the full
+        tenant tree per step was pure host overhead (the regression test
+        asserts object identity across steps)."""
         if not self._indices:
             return None
         if self._stacked is None:

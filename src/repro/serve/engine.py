@@ -3,21 +3,32 @@
 The subsystem splits along its natural seams:
 
 * :mod:`repro.serve.scheduler` — FIFO admission, slot assignment,
-  per-request adapter ids (host-side, no jax);
-* :mod:`repro.serve.kv_cache`  — the shared slot cache: splice on
-  admission, evict on completion, per-slot positions;
+  per-request adapter ids, slot state as dense arrays (host-side, no jax);
+* :mod:`repro.serve.kv_cache`  — the shared slot cache: one jitted splice
+  per admission bucket, per-slot positions as device state;
 * :mod:`repro.serve.sampler`   — greedy/temperature/top-k sampling fused
-  into the jitted step (one host transfer per step, never per slot);
+  into the jitted calls;
 * :mod:`repro.serve.adapters`  — the tenant registry: N unmerged NeuroAda
-  ``(indices, values)`` trees stacked for the batched kernel path.
+  ``(indices, values)`` trees stacked (and cached) for the batched kernel
+  path.
 
 One frozen base model serves every tenant: the decode step applies each
 slot's ``(k, d_out)`` delta in-flight via ``ops.delta_apply_batched``
 (jnp oracle or Pallas per-slot gather) instead of merging weights ahead
 of time. Prefill is bucketed — prompts pad to the next power-of-two
 length and concurrent admissions share one compiled call per
-(length-bucket, batch-bucket) — so admission cost is one compile per
-bucket, not one per prompt length.
+(length-bucket, batch-bucket).
+
+Decode is a **megastep**: one jitted ``lax.scan`` over up to
+``decode_chunk`` tokens, carrying (kv cache, last tokens, per-slot
+positions, active mask, max_new budget) as device state with sampling,
+EOS detection, cache advance and per-slot masking all in-graph. A step
+costs exactly ONE device→host transfer — the whole chunk's token matrix —
+instead of one per token; finished slots become masked no-ops until the
+chunk drains, and freed slots re-admit at chunk boundaries. With
+``decode_chunk=1`` the megastep reproduces the per-token loop exactly
+(same tokens, same Request lifecycle), so chunking is a pure throughput
+knob (see DESIGN §9).
 """
 
 from __future__ import annotations
@@ -58,11 +69,14 @@ class ServeEngine:
         min_prefill_bucket: int = 16,
         base_dtype: str = "fp32",
         quant_block: int = 64,
+        decode_chunk: int = 1,
     ):
         if model.cfg.family not in ("dense", "moe", "vlm"):
             # engine currently drives KV-cache LMs; SSM/hybrid/encdec decode
             # through their model APIs directly (see examples).
             raise ValueError(f"ServeEngine supports KV LMs, got {model.cfg.family}")
+        if decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
         from repro.peft import BASE_DTYPES, quantize_base
 
         if base_dtype not in BASE_DTYPES:
@@ -82,12 +96,15 @@ class ServeEngine:
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.store = adapter_store
         self.min_prefill_bucket = min_prefill_bucket
+        self.decode_chunk = decode_chunk
+        self.transfers = 0  # device→host fetches: one per decode chunk
 
         self.scheduler = Scheduler(slots)
         self.kv = KVCache(model, slots, max_len)
         self.sampler = Sampler(model.cfg.vocab_size, top_k=top_k)
 
         L = model.cfg.num_layers
+        eos, mlen, chunk = eos_id, max_len, decode_chunk
 
         def batched_adapters(aidx, aval, aid):
             # blocks leaves ride the layer scan: their aid copy carries a
@@ -115,23 +132,55 @@ class ServeEngine:
             )
             return self.sampler(logits, temps, key), cache
 
-        def decode_plain(p, cache, tokens, pos, temps, key):
-            logits, cache = model.decode_step(
-                p, None, cache, {"token": tokens, "pos": pos}
-            )
-            return self.sampler(logits, temps, key), cache
+        def megastep(p, adapters, cache, tok, pos, active, remaining, temps, key):
+            """Compiled decode loop over up to ``chunk`` tokens.
 
-        def decode_ad(p, aidx, aval, aid, cache, tokens, pos, temps, key):
-            adapters = batched_adapters(aidx, aval, aid)
-            logits, cache = model.decode_step(
-                p, adapters, cache, {"token": tokens, "pos": pos}
+            Device-state carry: (cache, last tokens, per-slot pos, active
+            mask, max_new budget). Finished/empty slots are masked no-ops:
+            their token and position freeze, and their cache writes land on
+            a stale row that the overwrite-before-attend invariant makes
+            unobservable. Ys: the (chunk, slots) emitted-token matrix plus
+            its emit mask — the step's single host transfer.
+            """
+
+            def body(carry, k_t):
+                cache, tok, pos, active, remaining = carry
+                logits, cache = model.decode_step(
+                    p, adapters, cache, {"token": tok, "pos": pos}
+                )
+                nxt = self.sampler(logits, temps, k_t)
+                emitted = active
+                tok = jnp.where(active, nxt, tok)
+                pos = jnp.where(active, pos + 1, pos)
+                remaining = jnp.where(active, remaining - 1, remaining)
+                # mirror of the host Request lifecycle: EOS | max_new | cache
+                # full — evaluated post-advance, exactly like _maybe_finish
+                active = (
+                    active & (tok != eos) & (remaining > 0) & (pos < mlen - 1)
+                )
+                return (cache, tok, pos, active, remaining), (tok, emitted)
+
+            keys = jax.random.split(key, chunk)
+            (cache, tok, pos, active, remaining), (toks, emits) = jax.lax.scan(
+                body, (cache, tok, pos, active, remaining), keys
             )
-            return self.sampler(logits, temps, key), cache
+            return cache, pos, active, toks, emits
+
+        def megastep_plain(p, cache, tok, pos, active, remaining, temps, key):
+            return megastep(p, None, cache, tok, pos, active, remaining, temps, key)
+
+        def megastep_ad(
+            p, aidx, aval, aid, cache, tok, pos, active, remaining, temps, key
+        ):
+            adapters = batched_adapters(aidx, aval, aid)
+            return megastep(
+                p, adapters, cache, tok, pos, active, remaining, temps, key
+            )
 
         self._prefill_plain = jax.jit(prefill_plain)
         self._prefill_ad = jax.jit(prefill_ad)
-        self._decode_plain = jax.jit(decode_plain)
-        self._decode_ad = jax.jit(decode_ad)
+        self._megastep_plain = jax.jit(megastep_plain)
+        self._megastep_ad = jax.jit(megastep_ad)
 
     # ------------------------------------------------------------- intake
 
@@ -152,11 +201,31 @@ class ServeEngine:
             )
         temp = self.temperature if temperature is None else temperature
         return self.scheduler.submit(
-            prompt, max_new, adapter_id=adapter_id, temperature=temp
+            prompt, max_new, adapter_id=adapter_id, temperature=temp,
+            store_rev=self.store.removals if self.store is not None else 0,
         )
 
     def _bucket(self, plen: int) -> int:
         return min(_next_pow2(plen, self.min_prefill_bucket), self.max_len)
+
+    def _check_adapter_ids(self) -> None:
+        """Requests freeze their adapter id at submit; a store.remove()
+        after that shifts ids under them — including *middle* removals
+        that keep every id in range but re-point it at another tenant.
+        Each request is stamped with the store's removal revision at
+        submit; any stale-revision request still naming a tenant fails
+        loudly instead of silently decoding with the wrong delta."""
+        if self.store is None:
+            return
+        rev = self.store.removals
+        for req in self.scheduler.in_flight():
+            if req.adapter_id > 0 and req.store_rev != rev:
+                raise RuntimeError(
+                    f"request {req.rid} holds adapter_id {req.adapter_id} "
+                    "validated against a store revision that has since seen "
+                    "remove() — ids shifted; drain in-flight requests before "
+                    "removing tenants"
+                )
 
     def _admit(self, key) -> None:
         admitted = self.scheduler.admissible()
@@ -172,12 +241,17 @@ class ServeEngine:
             last_pos = np.zeros((bsz,), np.int32)
             aid = np.zeros((bsz,), np.int32)
             temps = np.zeros((bsz,), np.float32)
-            for row, (_, req) in enumerate(group):
+            # pad rows scatter to an out-of-range slot id -> dropped
+            slot_ids = np.full((bsz,), self.slots, np.int32)
+            plens = np.zeros((bsz,), np.int32)
+            for row, (slot, req) in enumerate(group):
                 plen = len(req.prompt)
                 tokens[row, :plen] = req.prompt
                 last_pos[row] = plen - 1
                 aid[row] = req.adapter_id
                 temps[row] = req.temperature
+                slot_ids[row] = slot
+                plens[row] = plen
             args = (
                 jnp.asarray(tokens), jnp.asarray(last_pos),
                 jnp.asarray(temps), jax.random.fold_in(key, i),
@@ -188,17 +262,23 @@ class ServeEngine:
                 first, pcache = self._prefill_ad(
                     self.params, *stacked, jnp.asarray(aid), *args
                 )
-            first_np = np.asarray(first)
+            self.kv.splice_group(pcache, slot_ids, plens)
+            first_np = jax.device_get(first)
             for row, (slot, req) in enumerate(group):
-                self.kv.splice(slot, pcache, row, len(req.prompt))
                 req.out.append(int(first_np[row]))
                 self._maybe_finish(slot, req)
 
     # --------------------------------------------------------------- step
 
     def step(self) -> bool:
-        """One decode step over all active slots. False when fully idle."""
-        self.rng, k_admit, k_samp = jax.random.split(self.rng, 3)
+        """One decode chunk over all active slots. False when fully idle.
+
+        With ``decode_chunk=1`` this is the classic per-token step; larger
+        chunks emit up to ``decode_chunk`` tokens per slot per call with
+        one device→host transfer for the whole chunk.
+        """
+        self.rng, k_admit, k_chunk = jax.random.split(self.rng, 3)
+        self._check_adapter_ids()
         self._admit(k_admit)
         # a request can finish AT admission (first token is EOS, max_new=1),
         # freeing its slot with the queue still non-empty — keep admitting,
@@ -208,32 +288,35 @@ class ServeEngine:
             self._admit(k_admit)
         if not self.scheduler.has_active():
             return False
-        tokens = np.zeros((self.slots,), np.int32)
-        aid = np.zeros((self.slots,), np.int32)
-        temps = np.zeros((self.slots,), np.float32)
-        for s, req in enumerate(self.scheduler.active):
-            if req is not None:
-                tokens[s] = req.out[-1]
-                aid[s] = req.adapter_id
-                temps[s] = req.temperature
+        st = self.scheduler.slot_arrays()
         stacked = self.store.stacked() if self.store is not None else None
         args = (
-            self.kv.data, jnp.asarray(tokens), jnp.asarray(self.kv.pos),
-            jnp.asarray(temps), k_samp,
+            self.kv.data, jnp.asarray(st["tokens"]), self.kv.pos,
+            jnp.asarray(st["active"]), jnp.asarray(st["remaining"]),
+            jnp.asarray(st["temps"]), k_chunk,
         )
         if stacked is None:
-            nxt, self.kv.data = self._decode_plain(self.params, *args)
+            out = self._megastep_plain(self.params, *args)
         else:
-            nxt, self.kv.data = self._decode_ad(
-                self.params, *stacked, jnp.asarray(aid), *args
+            out = self._megastep_ad(
+                self.params, *stacked, jnp.asarray(st["aid"]), *args
             )
-        nxt_np = np.asarray(nxt)  # ONE device->host transfer for all slots
+        self.kv.data, pos_dev = out[0], out[1]
+        # ONE device→host transfer for the whole chunk (all slots, all
+        # steps): emitted tokens + mask, final positions, survivor mask.
+        pos_np, active_np, toks, emits = jax.device_get(out[1:])
+        self.transfers += 1
+        self.kv.sync(pos_dev, pos_np)
+        for t in range(self.decode_chunk):
+            for s, req in enumerate(self.scheduler.active):
+                if req is not None and emits[t, s]:
+                    req.out.append(int(toks[t, s]))
         for s, req in enumerate(self.scheduler.active):
-            if req is None:
-                continue
-            self.kv.advance(s)
-            req.out.append(int(nxt_np[s]))
-            self._maybe_finish(s, req)
+            if req is not None and not active_np[s]:
+                # the in-graph mask already encodes EOS/max_new/cache-full;
+                # completing off it keeps host and device lifecycles identical
+                self.scheduler.complete(s)
+                self.kv.evict(s)
         return True
 
     def _maybe_finish(self, slot: int, req: Request) -> None:

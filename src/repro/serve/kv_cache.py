@@ -1,17 +1,40 @@
 """Slot-based KV cache manager: splice-in on admission, per-slot positions.
 
-Owns the shared ``(L, slots, max_len, KV, hd)`` cache trees and the host
-mirror of per-slot write positions. Prefill produces a ``(L, B, S_bucket,
-KV, hd)`` cache for a whole admission bucket; :meth:`splice` copies one
-batch row into a slot. Rows past the true prompt length contain pad
-garbage — exact anyway, because decode overwrites position ``p`` before
+Owns the shared ``(L, slots, max_len, KV, hd)`` cache trees and the
+per-slot write positions. Positions are *device state*: the decode
+megastep carries them through its on-device loop and hands the final
+vector back via :meth:`sync`; a host ``pos_host`` mirror exists only for
+admission bookkeeping (``full`` checks, evict).
+
+Prefill produces a ``(L, B, S_bucket, KV, hd)`` cache for a whole
+admission bucket; :meth:`splice_group` scatters every row of the bucket
+into its slot — k, v, *and* the position vector — in ONE jitted call
+(the seed version dispatched eager ``dynamic_update_slice`` per tree key
+per admission). Rows past the true prompt length contain pad garbage —
+exact anyway, because decode overwrites position ``p`` before
 ``kv_valid_len`` ever reaches it (see transformer.prefill).
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+@jax.jit
+def _splice_group(data_k, data_v, upd_k, upd_v, slots, plens, pos):
+    """Scatter a prefill bucket into the slot cache in one compiled call.
+
+    ``slots`` may carry out-of-range pad entries (bucket rows without a
+    request): ``mode="drop"`` discards their updates, so one compile per
+    (bucket-len, bucket-batch) shape serves any group size.
+    """
+    sb = upd_k.shape[2]
+    data_k = data_k.at[:, slots, :sb].set(upd_k.astype(data_k.dtype), mode="drop")
+    data_v = data_v.at[:, slots, :sb].set(upd_v.astype(data_v.dtype), mode="drop")
+    pos = pos.at[slots].set(plens, mode="drop")
+    return data_k, data_v, pos
 
 
 class KVCache:
@@ -19,25 +42,33 @@ class KVCache:
         self.slots = slots
         self.max_len = max_len
         self.data = model.init_cache(slots, max_len)
-        self.pos = np.zeros((slots,), np.int32)
+        self.pos = jnp.zeros((slots,), jnp.int32)  # device (megastep carry)
+        self.pos_host = np.zeros((slots,), np.int32)  # admission mirror
 
-    def splice(self, slot: int, pcache: dict, row: int, plen: int) -> None:
-        """Copy batch row ``row`` of a prefill cache into ``slot``."""
-        for key in ("k", "v"):
-            c = self.data[key]
-            upd = pcache[key][:, row : row + 1]  # (L, 1, S_bucket, KV, hd)
-            self.data[key] = jax.lax.dynamic_update_slice(
-                c, upd.astype(c.dtype), (0, slot, 0, 0, 0)
-            )
-        self.pos[slot] = plen
+    def splice_group(
+        self, pcache: dict, slots: np.ndarray, plens: np.ndarray
+    ) -> None:
+        """Splice prefill rows into slots: ``slots``/``plens`` are (B,)
+        int32 covering the whole (padded) prefill batch; pad rows carry an
+        out-of-range slot id (``self.slots``) and are dropped."""
+        self.data["k"], self.data["v"], self.pos = _splice_group(
+            self.data["k"], self.data["v"], pcache["k"], pcache["v"],
+            jnp.asarray(slots, jnp.int32), jnp.asarray(plens, jnp.int32),
+            self.pos,
+        )
+        real = slots < self.slots
+        self.pos_host[slots[real]] = plens[real]
+
+    def sync(self, pos_dev: jax.Array, pos_np: np.ndarray) -> None:
+        """Adopt the megastep's final position state (device + fetched)."""
+        self.pos = pos_dev
+        self.pos_host[:] = pos_np
 
     def evict(self, slot: int) -> None:
-        """Free a slot. Cache rows are left stale — the next splice
-        overwrites them, and decode never attends past ``pos``."""
-        self.pos[slot] = 0
-
-    def advance(self, slot: int) -> None:
-        self.pos[slot] += 1
+        """Free a slot. Cache rows and the device position are left stale —
+        the next splice overwrites both, and decode never attends past a
+        slot's valid length."""
+        self.pos_host[slot] = 0
 
     def full(self, slot: int) -> bool:
-        return self.pos[slot] >= self.max_len - 1
+        return self.pos_host[slot] >= self.max_len - 1

@@ -11,6 +11,8 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass, field
 
+import numpy as np
+
 
 @dataclass
 class Request:
@@ -19,6 +21,9 @@ class Request:
     max_new: int
     adapter_id: int = 0
     temperature: float = 0.0
+    # AdapterStore.removals at submit: adapter_id is only meaningful
+    # against that revision of the store (remove() shifts later ids)
+    store_rev: int = 0
     out: list[int] = field(default_factory=list)
     done: bool = False
 
@@ -39,11 +44,12 @@ class Scheduler:
         *,
         adapter_id: int = 0,
         temperature: float = 0.0,
+        store_rev: int = 0,
     ) -> int:
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(
-            Request(rid, list(prompt), max_new, adapter_id, temperature)
+            Request(rid, list(prompt), max_new, adapter_id, temperature, store_rev)
         )
         return rid
 
@@ -57,6 +63,31 @@ class Scheduler:
             self.active[slot] = req
             out.append((slot, req))
         return out
+
+    def slot_arrays(self) -> dict[str, np.ndarray]:
+        """Per-slot state as dense arrays for the decode megastep.
+
+        Empty slots are inactive no-ops: ``active`` gates every in-graph
+        write (sampled token, position advance, max_new budget), so the
+        compiled chunk loop needs no per-slot host branching.
+        """
+        n = self.slots
+        state = {
+            "tokens": np.zeros((n,), np.int32),
+            "aid": np.zeros((n,), np.int32),
+            "temps": np.zeros((n,), np.float32),
+            "active": np.zeros((n,), np.bool_),
+            "remaining": np.zeros((n,), np.int32),
+        }
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            state["tokens"][s] = req.out[-1]
+            state["aid"][s] = req.adapter_id
+            state["temps"][s] = req.temperature
+            state["active"][s] = True
+            state["remaining"][s] = req.max_new - len(req.out)
+        return state
 
     def complete(self, slot: int) -> None:
         req = self.active[slot]

@@ -1,0 +1,85 @@
+"""Decode-attention Pallas kernel sweeps vs the dense/jnp oracles.
+
+The serving decode hot path replaces ``dense_attention``'s full-``max_len``
+masked softmax with the online-softmax kernel; these sweeps pin interpret-
+mode parity across GQA group sizes (h/hkv ∈ {1, 4}), dtypes (fp32, bf16),
+per-slot vs scalar ``kv_valid_len``, KV-chunk blockings, and non-aligned
+cache lengths (wrapper pads; pad columns are masked).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.ref import decode_attention_ref
+from repro.models.attention import dense_attention
+
+RNG = np.random.default_rng(23)
+
+CASES = [
+    # (B, Smax, H, Hkv, hd) — group size G = H/Hkv in {1, 4}
+    (2, 64, 1, 1, 16),
+    (2, 64, 4, 1, 16),
+    (2, 128, 4, 4, 16),
+    (1, 128, 4, 1, 32),
+    (3, 96, 4, 4, 64),  # Smax not a block multiple -> wrapper pads
+]
+
+
+def _qkv(b, skv, h, hkv, hd, dt):
+    q = jnp.asarray(RNG.normal(size=(b, 1, h, hd)), dt)
+    k = jnp.asarray(RNG.normal(size=(b, skv, hkv, hd)), dt)
+    v = jnp.asarray(RNG.normal(size=(b, skv, hkv, hd)), dt)
+    return q, k, v
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_decode_kernel_matches_dense(case, dt):
+    b, skv, h, hkv, hd = case
+    q, k, v = _qkv(b, skv, h, hkv, hd, dt)
+    # per-slot frontiers, incl. the 1-token and full-cache extremes
+    vl = jnp.asarray(RNG.integers(1, skv + 1, size=(b,)), jnp.int32)
+    vl = vl.at[0].set(1)
+    want = dense_attention(q, k, v, causal=False, kv_valid_len=vl)
+    got = decode_attention_pallas(q, k, v, vl, interpret=True)
+    atol = 1e-5 if dt == jnp.float32 else 0.05
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+def test_decode_ref_matches_dense():
+    q, k, v = _qkv(2, 64, 4, 2, 16, jnp.float32)
+    vl = jnp.asarray([3, 64], jnp.int32)
+    want = dense_attention(q, k, v, causal=False, kv_valid_len=vl)
+    got = decode_attention_ref(q, k, v, vl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_decode_kernel_scalar_valid_len():
+    """Aligned-batch decode passes ``pos + 1`` as a scalar."""
+    q, k, v = _qkv(2, 64, 4, 2, 16, jnp.float32)
+    want = dense_attention(q, k, v, causal=False, kv_valid_len=jnp.int32(7))
+    got = decode_attention_pallas(q, k, v, jnp.int32(7), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("block_s", [32, 64, 128])
+def test_decode_kernel_block_invariance(block_s):
+    q, k, v = _qkv(2, 128, 4, 2, 32, jnp.float32)
+    vl = jnp.asarray([17, 111], jnp.int32)
+    ref = decode_attention_pallas(q, k, v, vl, block_s=128, interpret=True)
+    got = decode_attention_pallas(q, k, v, vl, block_s=block_s, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_decode_kernel_rejects_ragged_heads():
+    q, k, v = _qkv(1, 64, 3, 2, 16, jnp.float32)
+    with pytest.raises(ValueError):
+        decode_attention_pallas(q, k, v, jnp.int32(4), interpret=True)
+    with pytest.raises(ValueError):
+        decode_attention_pallas(
+            jnp.zeros((1, 2, 4, 16)), k, v, jnp.int32(4), interpret=True
+        )
