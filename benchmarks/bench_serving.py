@@ -1,17 +1,24 @@
-"""Serving micro-bench: decode throughput vs slots × tenants × chunk.
+"""Serving micro-bench: decode throughput vs slots × tenants × chunk × cache.
 
 Compares merged serving (Alg. 1 phase 3 — the zero-overhead single-tenant
 path) against unmerged multi-tenant serving (per-slot batched delta apply)
-on the reduced dense arch, and the per-token decode loop
-(``decode_chunk=1``) against the fused decode megastep, on fp32 and int8
-bases. Times are CPU wall — the structural claim (one jitted call and one
-device→host transfer per *chunk*, no per-slot host traffic) holds on any
+on the reduced dense arch, the per-token decode loop (``decode_chunk=1``)
+against the fused decode megastep, the dense slot cache against the paged
+block pool, on fp32 and int8 bases. Times are CPU wall — the structural
+claims (one jitted call and one device→host transfer per *chunk*; paged
+capacity bounded by tokens in flight, not slots × max_len) hold on any
 backend.
+
+The paged capacity section *asserts* the structural wins: with mixed-length
+prompts the paged engine holds concurrently a workload whose dense
+reservation (requests × max_len) overflows the dense pool several times
+over, and K same-prefix same-tenant requests keep more logical tokens in
+flight than the pool physically stores (one refcounted prefix copy).
 
 Besides the ``name,us_per_call,derived`` CSV schema of benchmarks.run, the
 full grid lands in ``BENCH_serving.json`` (tok/s per configuration plus
-the megastep-vs-per-token speedup ratios) so the perf trajectory is
-machine-readable.
+the megastep-vs-per-token and paged-vs-dense ratios) so the perf
+trajectory is machine-readable.
 """
 
 from __future__ import annotations
@@ -48,12 +55,13 @@ def _adapter(params, seed, k=2, scale=0.05):
 
 
 def _run_engine(m, params, *, slots, store, n_tenants, chunk, steps,
-                base_dtype="fp32"):
+                base_dtype="fp32", paged=False):
     # eos outside the vocab: a greedy sample hitting the default eos_id
     # mid-window would idle its slot for the rest of the timed window
     eng = ServeEngine(
         m, params, slots=slots, max_len=MAX_LEN, adapter_store=store,
         decode_chunk=chunk, base_dtype=base_dtype, eos_id=1 << 20,
+        paged=paged,
     )
     for i in range(slots):
         aid = 1 + i % n_tenants if n_tenants else 0
@@ -84,7 +92,7 @@ def run(*, steps: int = 24) -> list[str]:
     adapters = [_adapter(params, seed) for seed in (1, 2, 3, 4)]
     merged = merge_adapters(params, *adapters[0])
 
-    def bench(slots, chunk, *, mode, n_tenants=0, base="fp32"):
+    def bench(slots, chunk, *, mode, n_tenants=0, base="fp32", paged=False):
         if mode == "merged":
             p, store = merged, None
         else:
@@ -94,14 +102,16 @@ def run(*, steps: int = 24) -> list[str]:
                 store.register(*ad)
         r = _run_engine(
             m, p, slots=slots, store=store, n_tenants=n_tenants,
-            chunk=chunk, steps=steps, base_dtype=base,
+            chunk=chunk, steps=steps, base_dtype=base, paged=paged,
         )
+        cache = "paged" if paged else "dense"
         rec = {"slots": slots, "chunk": chunk, "mode": mode,
-               "tenants": n_tenants, "base": base, **r}
+               "tenants": n_tenants, "base": base, "cache": cache, **r}
         records.append(rec)
         out.append(
             f"serve.decode.slots{slots}.chunk{chunk}.{mode}{n_tenants or ''}"
-            f"{'.int8' if base != 'fp32' else ''},{r['us_per_call']:.0f},"
+            f"{'.int8' if base != 'fp32' else ''}"
+            f"{'.paged' if paged else ''},{r['us_per_call']:.0f},"
             f"tok_s={r['tok_s']:.1f}"
         )
         return rec
@@ -113,11 +123,18 @@ def run(*, steps: int = 24) -> list[str]:
                 bench(slots, chunk, mode="unmerged", n_tenants=n_tenants)
     for chunk in (1, 8):  # quantized frozen base, multi-tenant
         bench(4, chunk, mode="unmerged", n_tenants=2, base="int8")
+    # paged twins of the dense columns (same workload, block-pool cache)
+    for slots in (1, 4, 8):
+        bench(slots, 8, mode="merged", paged=True)
+        bench(slots, 8, mode="unmerged", n_tenants=4, paged=True)
+    bench(4, 8, mode="unmerged", n_tenants=2, base="int8", paged=True)
 
     # megastep win over the per-token loop, per (slots, mode, base) config
     ratios = []
     by_key = {}
     for r in records:
+        if r["cache"] != "dense":
+            continue
         by_key.setdefault(
             (r["slots"], r["mode"], r["tenants"], r["base"]), {}
         )[r["chunk"]] = r
@@ -133,6 +150,27 @@ def run(*, steps: int = 24) -> list[str]:
             f"chunk8_vs_chunk1={ratio:.2f}x"
         )
 
+    # paged vs dense, same (slots, mode, tenants, base, chunk) column
+    paged_ratios = []
+    by_cache = {}
+    for r in records:
+        key = (r["slots"], r["chunk"], r["mode"], r["tenants"], r["base"])
+        by_cache.setdefault(key, {})[r["cache"]] = r
+    for key, caches in sorted(by_cache.items()):
+        if "dense" not in caches or "paged" not in caches:
+            continue
+        slots, chunk, mode, tenants, base = key
+        ratio = caches["paged"]["tok_s"] / caches["dense"]["tok_s"]
+        paged_ratios.append({
+            "slots": slots, "chunk": chunk, "mode": mode, "tenants": tenants,
+            "base": base, "paged_vs_dense_tok_s": round(ratio, 3),
+        })
+        out.append(
+            f"serve.decode.slots{slots}.{mode}{tenants or ''}"
+            f"{'.int8' if base != 'fp32' else ''}.paged_ratio,0,"
+            f"paged_vs_dense={ratio:.2f}x"
+        )
+
     # prefill bucketing: cost of admitting a mixed-length batch
     eng = ServeEngine(m, params, slots=4, max_len=MAX_LEN)
     for plen in (3, 9, 17, 30):
@@ -141,13 +179,78 @@ def run(*, steps: int = 24) -> list[str]:
     eng.run_to_completion()
     out.append(f"serve.prefill.bucketed_admit4,{(time.perf_counter() - t0) * 1e6:.0f},")
 
+    capacity = _capacity_demo(m, params, out)
+
     JSON_PATH.write_text(json.dumps(
         {"arch": cfg.name, "max_len": MAX_LEN, "decode_steps_budget": steps,
-         "results": records, "speedups": ratios},
+         "results": records, "speedups": ratios,
+         "paged_vs_dense": paged_ratios, "capacity": capacity},
         indent=2,
     ))
     out.append(f"serve.json_written,0,{JSON_PATH}")
     return out
+
+
+def _capacity_demo(m, params, out):
+    """The paged structural wins, asserted via pool accounting.
+
+    Concurrency: 12 mixed-length requests run simultaneously on a pool
+    holding the token budget dense reserves for 4 slots — the workload's
+    dense reservation (12 × max_len) is 3× the pool. Prefix sharing: 8
+    same-tenant requests over a 64-token system prompt keep more logical
+    tokens in flight than the pool physically stores.
+    """
+    page, num_blocks = 16, 4 * MAX_LEN // 16  # dense 4-slot token budget
+    eng = ServeEngine(m, params, slots=12, max_len=MAX_LEN, eos_id=1 << 20,
+                      decode_chunk=8, paged=True, page_size=page,
+                      num_blocks=num_blocks)
+    lens = [4, 8, 12, 16, 20, 24, 28, 32, 8, 12, 16, 20]
+    for i, plen in enumerate(lens):
+        eng.submit(list(np.arange(1, plen + 1) + i), max_new=16)
+    eng.step()
+    n_active = sum(r is not None for r in eng.scheduler.active)
+    dense_reservation = n_active * MAX_LEN
+    pool_tokens = num_blocks * page
+    assert n_active == 12, f"paged admission held {n_active}/12"
+    assert dense_reservation > 2 * pool_tokens
+    used_mid = int(eng.kv.used_blocks)
+    eng.run_to_completion()
+    assert eng.kv.free_blocks == eng.kv.num_blocks
+    out.append(
+        f"serve.paged.capacity,0,concurrent=12of12"
+        f"_densewould={dense_reservation}tok_pool={pool_tokens}tok"
+    )
+
+    # prefix sharing: one refcounted copy of a 64-token system prompt
+    prefix = list(np.arange(1, 65))
+    eng = ServeEngine(m, params, slots=8, max_len=MAX_LEN, eos_id=1 << 20,
+                      decode_chunk=8, paged=True, page_size=page,
+                      num_blocks=num_blocks)
+    for i in range(8):
+        eng.submit(prefix + [100 + i], max_new=16)
+    eng.step()
+    logical = sum(int(p) for p in eng.kv.pos_host) + 8  # +1 pending tok each
+    physical = int(eng.kv.used_blocks) * page
+    shared = eng.kv.refcount[eng.kv.refcount > 1]
+    assert len(shared) == len(prefix) // page and (shared == 8).all()
+    assert logical > pool_tokens, (logical, pool_tokens)
+    assert physical < logical
+    eng.run_to_completion()
+    assert eng.kv.free_blocks == eng.kv.num_blocks
+    out.append(
+        f"serve.paged.prefix_share,0,8x{len(prefix)}tok_prefix"
+        f"_logical={logical}tok_physical={physical}tok"
+    )
+    return {
+        "page_size": page, "num_blocks": num_blocks,
+        "pool_tokens": pool_tokens,
+        "mixed_len_concurrent": 12,
+        "dense_reservation_equiv": dense_reservation,
+        "mixed_len_used_blocks_mid": used_mid,
+        "prefix_requests": 8, "prefix_tokens": len(prefix),
+        "prefix_logical_tokens": logical,
+        "prefix_physical_tokens": physical,
+    }
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
-"""Batched serving: slot-based continuous batching, multi-tenant adapters —
-staggered request arrival, per-slot positions, per-slot NeuroAda deltas,
-all off ONE int8-packed frozen base (DESIGN.md §8; the CLI twin is
+"""Batched serving on the paged KV core: block-pool cache, block-aware
+continuous batching, multi-tenant adapters — staggered request arrival,
+shared-prefix reuse, per-slot NeuroAda deltas, all off ONE int8-packed
+frozen base (DESIGN.md §8/§10; the CLI twin is
 ``python -m repro.launch.serve --base-dtype int8 --adapters …``).
 
   PYTHONPATH=src python examples/serve_batched.py
@@ -40,24 +41,41 @@ def main():
             idx, val, is_leaf=lambda x: x is None)
         store.register(idx, val, name=f"tenant{seed}")
 
-    engine = ServeEngine(model, params, slots=4, max_len=128, adapter_store=store)
+    # paged KV: 6 slots share a 32-block pool (512 tokens) — a dense cache
+    # at this concurrency would pre-reserve 6 × 128 = 768 rows. Requests
+    # with a common page-aligned prompt prefix (same tenant) dedup their
+    # leading pages against refcounted shared blocks.
+    engine = ServeEngine(model, params, slots=6, max_len=128,
+                         adapter_store=store, decode_chunk=8,
+                         paged=True, page_size=16, num_blocks=32)
+    system = list(range(1, 17))  # 16-token "system prompt" = 1 full page
     prompts = [
-        [1, 10, 11, 12],
-        [1, 20, 21],
-        [1, 30, 31, 32, 33, 34],
+        system + [10, 11, 12],
+        system + [20, 21],
+        system + [30, 31, 32, 33, 34],
         [1, 40],
         [1, 50, 51, 52],
         [1, 60, 61],
     ]
+    # the three system-prompted requests belong to tenant1 — their shared
+    # page dedups (reuse is per-tenant: deltas change k/v); the rest
+    # interleave tenant2 and the base model
+    ids = [1, 1, 1, 0, 2, 0]
     t0 = time.perf_counter()
-    for i, p in enumerate(prompts):
-        # tenants interleave: base model, tenant1, tenant2, base, …
-        engine.submit(p, max_new=16, adapter_id=i % 3)
+    for p, aid in zip(prompts, ids):
+        engine.submit(p, max_new=16, adapter_id=aid)
+    engine.step()
+    kv = engine.kv
+    print(f"in flight: {kv.used_blocks}/{kv.num_blocks} blocks "
+          f"({kv.used_blocks * kv.page_size} of {kv.num_blocks * kv.page_size} "
+          f"pooled tokens), shared pages: "
+          f"{int((kv.refcount > 1).sum())} (refcounted prefix reuse)")
     reqs = engine.run_to_completion()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out) for r in reqs)
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s on CPU)")
+          f"({total_tokens/dt:.1f} tok/s on CPU), "
+          f"pool drained: {kv.free_blocks}/{kv.num_blocks} free")
     for r in reqs:
         tenant = "base" if r.adapter_id == 0 else store.names[r.adapter_id - 1]
         print(f"  req{r.rid} [{tenant}] prompt={r.prompt} -> {r.out}")

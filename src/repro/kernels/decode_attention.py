@@ -1,4 +1,4 @@
-"""Pallas TPU batched decode-attention kernel (Sq = 1, per-slot valid len).
+"""Pallas TPU batched decode-attention kernels (Sq = 1, per-slot valid len).
 
 The serving decode hot path previously ran ``dense_attention`` over the
 full ``(B, max_len)`` cache with a masked softmax: every step materialises
@@ -15,6 +15,17 @@ slot mix. VMEM per cell: ``block_s·hd·(2·4)B`` (k/v chunks in f32) +
 ``G·(hd+block_s)·4B`` + scratch ``G·(hd+2)·4B`` — ≈ 140 KB at
 ``block_s=128, hd=128, G=8``, far under the 16 MB budget, leaving the
 pipeline room to double-buffer the KV chunk DMA.
+
+:func:`paged_decode_attention_pallas` is the block-table variant for the
+paged serving core (DESIGN §10): the KV arrays are a shared block *pool*
+``(num_blocks, page_size, Hkv, hd)`` and each slot's logical pages route
+through a ``(B, n_pages)`` block table. The table (and the per-slot valid
+lengths) ride in as scalar-prefetch operands so the k/v BlockSpec index
+maps can compute the physical page DMA source *before* the body runs —
+the grid is (slot, kv-head, page) and the page dimension accumulates the
+same online-softmax scratch as the dense-slot kernel. Sentinel table
+entries (unallocated pages) clamp to a resident block; their columns sit
+past the slot's frontier and mask to zero.
 """
 
 from __future__ import annotations
@@ -128,4 +139,122 @@ def decode_attention_pallas(
         ),
         interpret=interpret,
     )(vl, qg, k, v)
+    return out.reshape(b, 1, h, hd)
+
+
+# ----------------------------------------------------------- paged variant
+
+
+def _paged_decode_attn_kernel(
+    table_ref, vl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, page: int, scale: float,
+):
+    slot = pl.program_id(0)
+    p_step = pl.program_id(2)
+
+    @pl.when(p_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)   # (page, hd)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)   # (page, hd)
+    g = q.shape[0]
+    s = jax.lax.dot_general(
+        q, kb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (G, page)
+    # columns are *logical* positions: page index × page size + offset —
+    # the physical block the data came from is irrelevant to masking
+    col = p_step * page + jax.lax.broadcasted_iota(jnp.int32, (g, page), 1)
+    valid = col < vl_ref[slot]                   # per-slot cache frontier
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(p_step == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    table: jax.Array,
+    kv_valid_len,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token GQA attention against a paged block pool.
+
+    q (B, 1, H, hd); k_pool, v_pool (N, P, Hkv, hd); table (B, n_pages)
+    int32 mapping each slot's logical pages to physical blocks
+    (out-of-range entries = unallocated, clamped — always masked because
+    reservation keeps ``kv_valid_len`` within allocated pages);
+    kv_valid_len scalar or (B,). Returns (B, 1, H, hd).
+
+    Grid (slot, kv-head, page): the block table is a scalar-prefetch
+    operand, so the k/v index maps resolve the *physical* block for each
+    (slot, page) cell ahead of the DMA — the pool is never gathered into
+    a contiguous per-slot cache.
+    """
+    b, sq, h, hd = q.shape
+    if sq != 1:
+        raise ValueError(f"decode attention needs Sq=1, got {sq}")
+    n, page, hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    if h % hkv:
+        raise ValueError(f"H={h} must be a multiple of Hkv={hkv}")
+    if table.shape[0] != b:
+        raise ValueError(f"table rows {table.shape[0]} != batch {b}")
+    g = h // hkv
+    n_pages = table.shape[1]
+    vl = jnp.asarray(kv_valid_len, jnp.int32).reshape(-1)
+    vl = jnp.broadcast_to(vl, (b,))
+    # clamp the sentinel in the wrapper: index maps must name a resident
+    # block, and clamped pages lie past the frontier anyway
+    tbl = jnp.minimum(table.astype(jnp.int32), n - 1)
+    qg = q.reshape(b, hkv, g, hd)
+    grid = (b, hkv, n_pages)
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, hd),
+        lambda b_, h_, p_, table_ref, vl_ref: (table_ref[b_, p_], 0, h_, 0),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, p_, t_, v_: (b_, h_, 0, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, hd), lambda b_, h_, p_, t_, v_: (b_, h_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),    # running max
+            pltpu.VMEM((g, 1), jnp.float32),    # running denom
+            pltpu.VMEM((g, hd), jnp.float32),   # f32 accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_attn_kernel, page=page, scale=hd**-0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tbl, vl, qg, k_pool, v_pool)
     return out.reshape(b, 1, h, hd)

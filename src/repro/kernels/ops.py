@@ -25,7 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+)
 from repro.kernels.fused_linear import fused_linear_pallas
 from repro.kernels.quant_linear import fused_linear_q_pallas
 from repro.kernels.sparse_delta import (
@@ -350,6 +353,26 @@ def decode_attention(
         return ref.decode_attention_ref(q, k, v, kv_valid_len)
     return decode_attention_pallas(
         q, k, v, kv_valid_len, interpret=_backend == "pallas_interpret"
+    )
+
+
+def paged_decode_attention(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
+    kv_valid_len,
+) -> jax.Array:
+    """Block-table decode attention for the paged serving core.
+
+    q (B, 1, H, hd) against a (N, P, Hkv, hd) block pool routed through a
+    (B, n_pages) block table with per-slot ``kv_valid_len``. jnp backend:
+    gather-then-softmax oracle; Pallas backends: the scalar-prefetch
+    kernel that DMAs physical pages straight from the pool (no contiguous
+    gather ever materialises).
+    """
+    if _backend == "jnp":
+        return ref.paged_decode_attention_ref(q, k_pool, v_pool, table, kv_valid_len)
+    return paged_decode_attention_pallas(
+        q, k_pool, v_pool, table, kv_valid_len,
+        interpret=_backend == "pallas_interpret",
     )
 
 

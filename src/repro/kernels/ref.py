@@ -67,6 +67,35 @@ def decode_attention_ref(
     return o.reshape(b, 1, h, hd).astype(q.dtype)
 
 
+def gather_paged_kv(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Materialise a contiguous (B, n_pages·P, KV, hd) cache view from a
+    (N, P, KV, hd) block pool through a (B, n_pages) block table.
+
+    Sentinel (out-of-range) table entries clamp to the last block — their
+    rows sit beyond every ``kv_valid_len`` frontier and are masked out by
+    the attention that consumes the view.
+    """
+    n = pool.shape[0]
+    tbl = jnp.minimum(table, n - 1)
+    b, n_pages = table.shape
+    return pool[tbl].reshape(b, n_pages * pool.shape[1], *pool.shape[2:])
+
+
+def paged_decode_attention_ref(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
+    kv_valid_len,
+) -> jax.Array:
+    """Block-table decode attention oracle: gather pages, then the dense
+    per-slot-frontier softmax.
+
+    q (B, 1, H, hd); k_pool/v_pool (N, P, Hkv, hd); table (B, n_pages)
+    int32 (out-of-range = unallocated); kv_valid_len scalar or (B,).
+    """
+    k = gather_paged_kv(k_pool, table)
+    v = gather_paged_kv(v_pool, table)
+    return decode_attention_ref(q, k, v, kv_valid_len)
+
+
 def fused_linear_ref(
     x: jax.Array,
     w: jax.Array,

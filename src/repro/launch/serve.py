@@ -10,6 +10,12 @@ cycle through the tenants unless ``--adapter-ids`` pins them):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --adapters a.npz,b.npz --prompts "1,17,25;1,40,41" [--adapter-ids 1,2]
+
+The engine defaults to the paged KV cache (block pool + block tables +
+shared-prefix reuse, DESIGN §10); ``--dense`` restores the dense
+slots×max_len layout. Flag combinations are validated up front with
+readable ``SystemExit`` messages — a bad ``--page-size`` should not
+surface as a jit-time shape error three layers down.
 """
 
 from __future__ import annotations
@@ -22,6 +28,32 @@ from repro.configs import ARCH_IDS, PAPER_ARCH_IDS, get_config, reduced
 from repro.models import get_model
 from repro.peft import BASE_DTYPES
 from repro.serve import AdapterStore, ServeEngine
+
+
+def validate_args(args) -> None:
+    """Reject bad flag combinations before any compilation starts."""
+    if args.decode_chunk < 1:
+        raise SystemExit(f"--decode-chunk must be >= 1, got {args.decode_chunk}")
+    if args.max_new < 1:
+        raise SystemExit(f"--max-new must be >= 1, got {args.max_new}")
+    if args.dense:
+        if args.paged:
+            raise SystemExit("--paged and --dense are mutually exclusive")
+        if args.page_size is not None:
+            raise SystemExit("--page-size is a paged-engine flag; drop --dense")
+        if args.num_blocks is not None:
+            raise SystemExit("--num-blocks is a paged-engine flag; drop --dense")
+        return
+    page = 16 if args.page_size is None else args.page_size
+    if page < 1 or page & (page - 1):
+        raise SystemExit(f"--page-size must be a power of two, got {page}")
+    min_blocks = -(-args.max_len // page)
+    if args.num_blocks is not None and args.num_blocks < min_blocks:
+        raise SystemExit(
+            f"--num-blocks {args.num_blocks} cannot hold one max-length "
+            f"request: --max-len {args.max_len} needs {min_blocks} pages "
+            f"of {page}"
+        )
 
 
 def main(argv=None):
@@ -47,12 +79,28 @@ def main(argv=None):
                          "follow a different rng stream)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling mass (0 = off); applies to "
+                         "temperature>0 rows, greedy rows are untouched")
     ap.add_argument("--base-dtype", default="fp32", choices=BASE_DTYPES,
                     help="serve every tenant off one quantized frozen base")
     ap.add_argument("--quant-block", type=int, default=64,
                     help="scale-block rows; must match the --quant-block "
                          "the adapters were trained against")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: block pool + block tables + "
+                         "shared-prefix reuse (already the default; "
+                         "conflicts with --dense)")
+    ap.add_argument("--dense", action="store_true",
+                    help="dense slots×max_len KV cache (the pre-paged layout)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV block (power of two; default 16)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks (default: slots × "
+                         "ceil(max_len / page_size), the dense-equivalent "
+                         "token budget)")
     args = ap.parse_args(argv)
+    validate_args(args)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -85,8 +133,11 @@ def main(argv=None):
 
     engine = ServeEngine(
         model, params, slots=args.slots, max_len=args.max_len,
-        temperature=args.temperature, top_k=args.top_k, adapter_store=store,
-        decode_chunk=args.decode_chunk,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        adapter_store=store, decode_chunk=args.decode_chunk,
+        paged=not args.dense,
+        page_size=16 if args.page_size is None else args.page_size,
+        num_blocks=args.num_blocks,
     )
     prompts = [p for p in args.prompts.split(";") if p]
     n_tenants = store.num_adapters if store is not None else 0

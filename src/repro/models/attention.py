@@ -210,3 +210,36 @@ def attention(
     return dense_attention(
         q, k, v, causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len
     )
+
+
+def paged_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    table: jax.Array,
+    cfg,
+    *,
+    kv_valid_len,
+) -> jax.Array:
+    """Decode attention against a paged block pool (DESIGN §10).
+
+    Pallas backends take the block-table kernel — physical pages DMA
+    straight from the (N, P, Hkv, hd) pool, no contiguous per-slot cache
+    is ever materialised. The jnp backend (and pools too small to amortise
+    page-grain DMA) gathers the table's pages into the contiguous view and
+    runs the same dense masked softmax the dense-slot engine uses, keeping
+    paged-vs-dense greedy outputs token-for-token identical on the oracle
+    backend.
+    """
+    from repro.kernels import ref
+
+    page, n_pages = k_pool.shape[1], table.shape[1]
+    if (
+        ops.get_backend() != "jnp"
+        and q.shape[2] % k_pool.shape[2] == 0
+        and page * n_pages >= DECODE_KERNEL_MIN_LEN
+    ):
+        return ops.paged_decode_attention(q, k_pool, v_pool, table, kv_valid_len)
+    k = ref.gather_paged_kv(k_pool, table)
+    v = ref.gather_paged_kv(v_pool, table)
+    return dense_attention(q, k, v, causal=False, kv_valid_len=kv_valid_len)

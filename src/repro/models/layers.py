@@ -119,6 +119,25 @@ def cache_update(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
     return jax.vmap(one)(cache, new, pos)
 
 
+def paged_cache_update(cache: jax.Array, new: jax.Array, table, pos) -> jax.Array:
+    """Write ``new`` (B,1,…) into a block pool ``cache`` (N,P,…) at each
+    slot's current position, routed through its block table.
+
+    table (B, n_pages) int32 maps logical page -> physical block; pos (B,)
+    is each slot's write index. Table entries holding the out-of-range
+    sentinel (unadmitted slots) drop their writes — the paged twin of the
+    dense engine's harmless stale-row write for masked slots.
+    """
+    page = cache.shape[1]
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (new.shape[0],))
+    blk = jnp.take_along_axis(table, (pos // page)[:, None], axis=1)[:, 0]
+    return cache.at[blk, pos % page].set(
+        new[:, 0].astype(cache.dtype), mode="drop"
+    )
+
+
 def decode_positions(pos, batch: int) -> jax.Array:
     """(B,1) rope positions from scalar or per-slot pos."""
     pos = jnp.asarray(pos)

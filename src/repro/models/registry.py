@@ -48,6 +48,14 @@ class Model:
     def init_cache(self, batch: int, max_len: int):
         return self.mod.init_cache(self.cfg, batch, max_len)
 
+    def init_paged_cache(self, num_blocks: int, page_size: int):
+        """Block-pool KV cache for the paged serving core (KV-cache LMs)."""
+        if not hasattr(self.mod, "init_paged_cache"):
+            raise ValueError(
+                f"family {self.cfg.family!r} has no paged KV cache"
+            )
+        return self.mod.init_paged_cache(self.cfg, num_blocks, page_size)
+
     # ---------------------------------------------------------------- specs
 
     def vlm_split(self, seq_len: int) -> tuple[int, int]:

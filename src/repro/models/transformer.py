@@ -15,7 +15,7 @@ from repro.core.delta import BatchedDelta, Delta
 from repro.distributed.context import constrain, constrain_inner
 from repro.kernels import ops
 from repro.models import moe as moe_lib
-from repro.models.attention import attention
+from repro.models.attention import attention, paged_attention
 from repro.models.layers import (
     ad_get,
     alinear,
@@ -26,6 +26,7 @@ from repro.models.layers import (
     decode_positions,
     init_linear,
     init_norm,
+    paged_cache_update,
     rms_norm,
     softmax_cross_entropy,
 )
@@ -138,6 +139,20 @@ def _block_decode(cfg, h, p, a, ck, cv, pos, positions, mrope_pos):
     return h + y, ck, cv
 
 
+def _block_decode_paged(cfg, h, p, a, ck, cv, pos, table, positions, mrope_pos):
+    """One-token step against a block pool. ck/cv (N,P,KV,hd) shared pool;
+    table (B, n_pages) routes each slot's logical pages; pos (B,)."""
+    x = rms_norm(h, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, a, x, positions, mrope_pos)
+    ck = paged_cache_update(ck, k, table, pos)
+    cv = paged_cache_update(cv, v, table, pos)
+    o = paged_attention(q, ck, cv, table, cfg, kv_valid_len=pos + 1)
+    h = h + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
+    x = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    y, _ = _mlp(cfg, p, a, x)
+    return h + y, ck, cv
+
+
 # ----------------------------------------------------------------- forward
 
 
@@ -234,6 +249,17 @@ def init_cache(cfg, batch: int, max_len: int):
     }
 
 
+def init_paged_cache(cfg, num_blocks: int, page_size: int):
+    """Block-pool cache: capacity is tokens (num_blocks × page_size), not
+    slots × max_len — slots own pages through a block table, not rows."""
+    dt = compute_dtype(cfg)
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((L, num_blocks, page_size, KV, hd), dt),
+        "v": jnp.zeros((L, num_blocks, page_size, KV, hd), dt),
+    }
+
+
 def prefill(cfg, params, adapters, batch):
     """Full forward over the prompt; returns (last-token logits, cache).
 
@@ -266,13 +292,17 @@ def prefill(cfg, params, adapters, batch):
 
 
 def decode_step(cfg, params, adapters, cache, batch):
-    """One new token per sequence against a (L,B,Smax,…) KV cache.
+    """One new token per sequence against a (L,B,Smax,…) KV cache — or,
+    when ``batch["block_table"]`` is present, against a paged
+    (L,N,P,…) block pool routed through the (B, n_pages) table.
 
-    batch: {"token": (B,) int32, "pos": () int32 — current write index}.
+    batch: {"token": (B,) int32, "pos": () int32 — current write index,
+    ["block_table": (B, n_pages) int32 — paged serving]}.
     """
     dt = compute_dtype(cfg)
     tok = batch["token"]
     pos = batch["pos"]
+    table = batch.get("block_table")
     b = tok.shape[0]
     h = jnp.take(params["embed"]["w"], tok[:, None], axis=0).astype(dt)
     positions = decode_positions(pos, b)
@@ -281,7 +311,14 @@ def decode_step(cfg, params, adapters, cache, batch):
 
     def body(hh, xs):
         p, a, ck, cv = xs
-        hh, ck, cv = _block_decode(cfg, hh, p, a, ck, cv, pos, positions, mrope_pos)
+        if table is None:
+            hh, ck, cv = _block_decode(
+                cfg, hh, p, a, ck, cv, pos, positions, mrope_pos
+            )
+        else:
+            hh, ck, cv = _block_decode_paged(
+                cfg, hh, p, a, ck, cv, pos, table, positions, mrope_pos
+            )
         return hh, (ck, cv)
 
     h, (ck, cv) = jax.lax.scan(body, h, (blocks, a_blocks, cache["k"], cache["v"]))

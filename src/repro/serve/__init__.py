@@ -2,24 +2,28 @@
 
 engine    — thin orchestration (the public ``ServeEngine``): decode runs
             as a compiled multi-token megastep, one device→host transfer
-            per ``decode_chunk`` tokens (DESIGN §9);
-scheduler — FIFO admission + slot assignment + slot state as arrays;
-kv_cache  — shared slot cache: one jitted splice per admission bucket,
-            device-resident per-slot positions;
-sampler   — greedy/temperature/top-k fused into the jitted calls;
+            per ``decode_chunk`` tokens (DESIGN §9); ``paged=True`` swaps
+            the dense slot cache for the block pool (DESIGN §10);
+scheduler — FIFO admission + slot assignment + slot state as arrays,
+            block-aware placement and preemption for the paged engine;
+kv_cache  — the dense slot cache (``KVCache``) and the paged block pool
+            (``PagedKVCache``: block tables, free-list with refcounts,
+            shared-prefix page dedup);
+sampler   — greedy/temperature/top-k/top-p fused into the jitted calls;
 adapters  — tenant registry of unmerged NeuroAda deltas (stacked once,
             cached until register/remove).
 """
 
 from repro.serve.adapters import AdapterStore
 from repro.serve.engine import ServeEngine
-from repro.serve.kv_cache import KVCache
+from repro.serve.kv_cache import KVCache, PagedKVCache
 from repro.serve.sampler import Sampler
 from repro.serve.scheduler import Request, Scheduler
 
 __all__ = [
     "AdapterStore",
     "KVCache",
+    "PagedKVCache",
     "Request",
     "Sampler",
     "Scheduler",

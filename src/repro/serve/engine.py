@@ -29,6 +29,17 @@ chunk drains, and freed slots re-admit at chunk boundaries. With
 ``decode_chunk=1`` the megastep reproduces the per-token loop exactly
 (same tokens, same Request lifecycle), so chunking is a pure throughput
 knob (see DESIGN §9).
+
+With ``paged=True`` (DESIGN §10) the dense slot cache becomes a shared
+block pool: capacity is ``num_blocks × page_size`` tokens actually in
+flight, not ``slots × max_len`` reservations. Admission is block-aware
+(a request leaves the queue only when the pool covers its prompt, with
+same-tenant page-aligned prefixes deduplicated against refcounted shared
+blocks), chunk boundaries pre-reserve each active slot's next
+``decode_chunk`` positions — preempting the *youngest* request back to
+the queue head on OOM (it re-prefills over ``prompt + out`` later and
+continues identically) — and the megastep carries the block table as
+device state so the whole chunk still costs one transfer.
 """
 
 from __future__ import annotations
@@ -39,7 +50,7 @@ import numpy as np
 
 from repro.core.delta import BatchedDelta
 from repro.serve.adapters import AdapterStore
-from repro.serve.kv_cache import KVCache
+from repro.serve.kv_cache import KVCache, PagedKVCache
 from repro.serve.sampler import Sampler
 from repro.serve.scheduler import Request, Scheduler
 
@@ -64,12 +75,16 @@ class ServeEngine:
         eos_id: int = 2,
         temperature: float = 0.0,
         top_k: int = 0,
+        top_p: float = 0.0,
         rng=None,
         adapter_store: AdapterStore | None = None,
         min_prefill_bucket: int = 16,
         base_dtype: str = "fp32",
         quant_block: int = 64,
         decode_chunk: int = 1,
+        paged: bool = False,
+        page_size: int = 16,
+        num_blocks: int | None = None,
     ):
         if model.cfg.family not in ("dense", "moe", "vlm"):
             # engine currently drives KV-cache LMs; SSM/hybrid/encdec decode
@@ -77,6 +92,8 @@ class ServeEngine:
             raise ValueError(f"ServeEngine supports KV LMs, got {model.cfg.family}")
         if decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
+        if paged and (page_size < 1 or page_size & (page_size - 1)):
+            raise ValueError(f"page_size must be a power of two, got {page_size}")
         from repro.peft import BASE_DTYPES, quantize_base
 
         if base_dtype not in BASE_DTYPES:
@@ -97,11 +114,22 @@ class ServeEngine:
         self.store = adapter_store
         self.min_prefill_bucket = min_prefill_bucket
         self.decode_chunk = decode_chunk
+        self.paged = paged
         self.transfers = 0  # device→host fetches: one per decode chunk
+        self.preemptions = 0  # block-pool OOM evictions (paged only)
 
         self.scheduler = Scheduler(slots)
-        self.kv = KVCache(model, slots, max_len)
-        self.sampler = Sampler(model.cfg.vocab_size, top_k=top_k)
+        if paged:
+            max_pages = -(-max_len // page_size)
+            if num_blocks is None:
+                # capacity-equivalent default: same token budget the dense
+                # layout would reserve, now shared instead of per-slot
+                num_blocks = slots * max_pages
+            self.kv = PagedKVCache(model, slots, max_len, page_size, num_blocks)
+        else:
+            self.kv = KVCache(model, slots, max_len)
+        self.sampler = Sampler(model.cfg.vocab_size, top_k=top_k, top_p=top_p)
+        self._pending_dst: dict[int, np.ndarray] = {}  # slot -> splice blocks
 
         L = model.cfg.num_layers
         eos, mlen, chunk = eos_id, max_len, decode_chunk
@@ -132,22 +160,29 @@ class ServeEngine:
             )
             return self.sampler(logits, temps, key), cache
 
-        def megastep(p, adapters, cache, tok, pos, active, remaining, temps, key):
+        def megastep(p, adapters, table, cache, tok, pos, active, remaining,
+                     temps, key):
             """Compiled decode loop over up to ``chunk`` tokens.
 
             Device-state carry: (cache, last tokens, per-slot pos, active
             mask, max_new budget). Finished/empty slots are masked no-ops:
             their token and position freeze, and their cache writes land on
-            a stale row that the overwrite-before-attend invariant makes
-            unobservable. Ys: the (chunk, slots) emitted-token matrix plus
-            its emit mask — the step's single host transfer.
+            a stale row (dense) or their own already-reserved page (paged)
+            that the overwrite-before-attend invariant makes unobservable —
+            empty paged slots carry sentinel table rows, so their writes
+            drop entirely. ``table`` (paged engines) is device state for
+            the whole chunk: chunk boundaries pre-reserve every position
+            the loop can write, so no allocation happens in-graph. Ys: the
+            (chunk, slots) emitted-token matrix plus its emit mask — the
+            step's single host transfer.
             """
 
             def body(carry, k_t):
                 cache, tok, pos, active, remaining = carry
-                logits, cache = model.decode_step(
-                    p, adapters, cache, {"token": tok, "pos": pos}
-                )
+                batch = {"token": tok, "pos": pos}
+                if table is not None:
+                    batch["block_table"] = table
+                logits, cache = model.decode_step(p, adapters, cache, batch)
                 nxt = self.sampler(logits, temps, k_t)
                 emitted = active
                 tok = jnp.where(active, nxt, tok)
@@ -167,20 +202,41 @@ class ServeEngine:
             return cache, pos, active, toks, emits
 
         def megastep_plain(p, cache, tok, pos, active, remaining, temps, key):
-            return megastep(p, None, cache, tok, pos, active, remaining, temps, key)
+            return megastep(
+                p, None, None, cache, tok, pos, active, remaining, temps, key
+            )
 
         def megastep_ad(
             p, aidx, aval, aid, cache, tok, pos, active, remaining, temps, key
         ):
             adapters = batched_adapters(aidx, aval, aid)
             return megastep(
-                p, adapters, cache, tok, pos, active, remaining, temps, key
+                p, adapters, None, cache, tok, pos, active, remaining, temps, key
+            )
+
+        def megastep_paged_plain(
+            p, table, cache, tok, pos, active, remaining, temps, key
+        ):
+            return megastep(
+                p, None, table, cache, tok, pos, active, remaining, temps, key
+            )
+
+        def megastep_paged_ad(
+            p, aidx, aval, aid, table, cache, tok, pos, active, remaining,
+            temps, key,
+        ):
+            adapters = batched_adapters(aidx, aval, aid)
+            return megastep(
+                p, adapters, table, cache, tok, pos, active, remaining, temps,
+                key,
             )
 
         self._prefill_plain = jax.jit(prefill_plain)
         self._prefill_ad = jax.jit(prefill_ad)
         self._megastep_plain = jax.jit(megastep_plain)
         self._megastep_ad = jax.jit(megastep_ad)
+        self._megastep_paged_plain = jax.jit(megastep_paged_plain)
+        self._megastep_paged_ad = jax.jit(megastep_paged_ad)
 
     # ------------------------------------------------------------- intake
 
@@ -227,14 +283,40 @@ class ServeEngine:
                     "removing tenants"
                 )
 
+    def _try_place(self, slot: int, req: Request) -> bool:
+        """Block-aware admission gate (paged): reserve the prompt's pages
+        (shared prefix pages dedup against live blocks) PLUS the first
+        decode chunk's headroom, or refuse. Without the headroom a
+        constrained pool thrashes: the request prefills, the chunk
+        reservation comes up short, and the freshly admitted request —
+        the youngest — is the first preempted, burning one full prefill
+        per generated token."""
+        toks = req.prompt + req.out
+        dst = self.kv.admit(slot, toks, req.adapter_id)
+        if dst is None:
+            return False
+        if not self.kv.reserve(
+            slot, min(len(toks) + self.decode_chunk, self.max_len)
+        ):
+            self.kv.evict(slot)  # full rollback: prompt pages + partials
+            return False
+        self._pending_dst[slot] = dst
+        return True
+
     def _admit(self, key) -> None:
-        admitted = self.scheduler.admissible()
+        admitted = self.scheduler.admissible(
+            self._try_place if self.paged else None
+        )
         if not admitted:
             return
         stacked = self.store.stacked() if self.store is not None else None
         buckets: dict[int, list[tuple[int, Request]]] = {}
         for slot, req in admitted:
-            buckets.setdefault(self._bucket(len(req.prompt)), []).append((slot, req))
+            # re-prefill basis is prompt + out: a preempted request resumes
+            # from its full generated sequence (out is empty on first entry)
+            buckets.setdefault(
+                self._bucket(len(req.prompt) + len(req.out)), []
+            ).append((slot, req))
         for i, (blen, group) in enumerate(sorted(buckets.items())):
             bsz = _next_pow2(len(group))
             tokens = np.zeros((bsz, blen), np.int32)
@@ -244,14 +326,23 @@ class ServeEngine:
             # pad rows scatter to an out-of-range slot id -> dropped
             slot_ids = np.full((bsz,), self.slots, np.int32)
             plens = np.zeros((bsz,), np.int32)
+            if self.paged:
+                n_pages = -(-blen // self.kv.page_size)
+                dst_blocks = np.full(
+                    (bsz, n_pages), self.kv.num_blocks, np.int32
+                )
             for row, (slot, req) in enumerate(group):
-                plen = len(req.prompt)
-                tokens[row, :plen] = req.prompt
+                toks = req.prompt + req.out
+                plen = len(toks)
+                tokens[row, :plen] = toks
                 last_pos[row] = plen - 1
                 aid[row] = req.adapter_id
                 temps[row] = req.temperature
                 slot_ids[row] = slot
                 plens[row] = plen
+                if self.paged:
+                    dst = self._pending_dst.pop(slot)
+                    dst_blocks[row, : len(dst)] = dst
             args = (
                 jnp.asarray(tokens), jnp.asarray(last_pos),
                 jnp.asarray(temps), jax.random.fold_in(key, i),
@@ -262,7 +353,10 @@ class ServeEngine:
                 first, pcache = self._prefill_ad(
                     self.params, *stacked, jnp.asarray(aid), *args
                 )
-            self.kv.splice_group(pcache, slot_ids, plens)
+            if self.paged:
+                self.kv.splice_group(pcache, slot_ids, plens, dst_blocks)
+            else:
+                self.kv.splice_group(pcache, slot_ids, plens)
             first_np = jax.device_get(first)
             for row, (slot, req) in enumerate(group):
                 req.out.append(int(first_np[row]))
@@ -288,6 +382,8 @@ class ServeEngine:
             self._admit(k_admit)
         if not self.scheduler.has_active():
             return False
+        if self.paged:
+            self._reserve_chunk()
         st = self.scheduler.slot_arrays()
         stacked = self.store.stacked() if self.store is not None else None
         args = (
@@ -295,7 +391,15 @@ class ServeEngine:
             jnp.asarray(st["active"]), jnp.asarray(st["remaining"]),
             jnp.asarray(st["temps"]), k_chunk,
         )
-        if stacked is None:
+        if self.paged:
+            args = (self.kv.table_device(),) + args
+            if stacked is None:
+                out = self._megastep_paged_plain(self.params, *args)
+            else:
+                out = self._megastep_paged_ad(
+                    self.params, *stacked, jnp.asarray(st["aid"]), *args
+                )
+        elif stacked is None:
             out = self._megastep_plain(self.params, *args)
         else:
             out = self._megastep_ad(
@@ -318,6 +422,41 @@ class ServeEngine:
                 self.scheduler.complete(s)
                 self.kv.evict(s)
         return True
+
+    def _reserve_chunk(self) -> None:
+        """Pre-reserve every position the next chunk can write (paged).
+
+        Each active slot gets pages covering ``pos + decode_chunk`` (capped
+        at ``max_len``) so the in-graph loop never needs a block. On
+        shortfall, the *youngest* admitted request is preempted — evicted
+        back to the queue head; it re-prefills over ``prompt + out`` later
+        and its greedy continuation is identical — and the round retries.
+        A single admitted request always fits (``num_blocks`` covers one
+        max-length request by construction), so the loop terminates.
+        """
+        while True:
+            short = False
+            for s, req in enumerate(self.scheduler.active):
+                if req is None:
+                    continue
+                target = min(
+                    int(self.kv.pos_host[s]) + self.decode_chunk, self.max_len
+                )
+                if not self.kv.reserve(s, target):
+                    short = True
+                    break
+            if not short:
+                return
+            victim = self.scheduler.youngest_active()
+            if sum(r is not None for r in self.scheduler.active) <= 1:
+                raise RuntimeError(
+                    "paged KV pool cannot hold a single request's chunk — "
+                    "num_blocks too small for max_len (validated at init; "
+                    "this indicates refcount leakage)"
+                )
+            self.scheduler.preempt(victim)
+            self.kv.evict(victim)
+            self.preemptions += 1
 
     def _maybe_finish(self, slot: int, req: Request) -> None:
         if (

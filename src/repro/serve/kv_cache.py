@@ -1,10 +1,11 @@
-"""Slot-based KV cache manager: splice-in on admission, per-slot positions.
+"""KV cache managers: the dense slot cache and the paged block pool.
 
-Owns the shared ``(L, slots, max_len, KV, hd)`` cache trees and the
-per-slot write positions. Positions are *device state*: the decode
-megastep carries them through its on-device loop and hands the final
-vector back via :meth:`sync`; a host ``pos_host`` mirror exists only for
-admission bookkeeping (``full`` checks, evict).
+:class:`KVCache` is the original dense layout — ``(L, slots, max_len,
+KV, hd)`` trees where every slot pre-reserves ``max_len`` rows.
+Positions are *device state*: the decode megastep carries them through
+its on-device loop and hands the final vector back via :meth:`sync`; a
+host ``pos_host`` mirror exists only for admission bookkeeping
+(``full`` checks, evict).
 
 Prefill produces a ``(L, B, S_bucket, KV, hd)`` cache for a whole
 admission bucket; :meth:`splice_group` scatters every row of the bucket
@@ -13,6 +14,15 @@ into its slot — k, v, *and* the position vector — in ONE jitted call
 per admission). Rows past the true prompt length contain pad garbage —
 exact anyway, because decode overwrites position ``p`` before
 ``kv_valid_len`` ever reaches it (see transformer.prefill).
+
+:class:`PagedKVCache` replaces the per-slot reservation with a shared
+block pool: ``(L, num_blocks, page_size, KV, hd)`` k/v arrays, a
+per-slot block table mapping logical page → physical block, a host-side
+free-list with per-block refcounts, and a prefix map that lets
+same-tenant requests whose prompts share a page-aligned prefix point
+their leading table entries at the same refcounted blocks (DESIGN §10).
+Capacity is bounded by tokens actually in flight — ``num_blocks ×
+page_size`` — not by ``slots × max_len``.
 """
 
 from __future__ import annotations
@@ -72,3 +82,206 @@ class KVCache:
 
     def full(self, slot: int) -> bool:
         return self.pos_host[slot] >= self.max_len - 1
+
+
+# --------------------------------------------------------------- paged pool
+
+
+@jax.jit
+def _splice_group_paged(data_k, data_v, upd_k, upd_v, dst, slots, plens, pos):
+    """Scatter a prefill bucket into the block pool in one compiled call.
+
+    ``dst`` (B, n_pages) holds the physical destination block per logical
+    page; entries carrying the out-of-range sentinel (pad rows, pages of
+    other requests, *shared* prefix pages that must keep their existing
+    contents) are dropped. One compile per (bucket-len, bucket-batch,
+    n_pages) shape serves any group size.
+    """
+    ll, b, sb = upd_k.shape[:3]
+    page = data_k.shape[2]
+    n_pages = dst.shape[1]
+    pad = n_pages * page - sb
+    widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+    upd_k = jnp.pad(upd_k, widths).astype(data_k.dtype)
+    upd_v = jnp.pad(upd_v, widths).astype(data_v.dtype)
+    upd_k = upd_k.reshape(ll, b * n_pages, page, *upd_k.shape[3:])
+    upd_v = upd_v.reshape(ll, b * n_pages, page, *upd_v.shape[3:])
+    data_k = data_k.at[:, dst.reshape(-1)].set(upd_k, mode="drop")
+    data_v = data_v.at[:, dst.reshape(-1)].set(upd_v, mode="drop")
+    pos = pos.at[slots].set(plens, mode="drop")
+    return data_k, data_v, pos
+
+
+class PagedKVCache:
+    """Block-pool KV cache: per-slot block tables over shared pages.
+
+    Device state: the ``(L, num_blocks, page_size, KV, hd)`` k/v pools and
+    the per-slot position vector (megastep carry, as in :class:`KVCache`).
+    Host state: the block table (pushed to device per decode chunk), the
+    free-list, per-block refcounts, and the prefix hash.
+
+    Unallocated table entries hold the out-of-range sentinel
+    ``num_blocks``: in-graph cache writes drop through ``mode="drop"``,
+    and attention gathers clamp it (the masked tail contributes zero).
+    """
+
+    def __init__(
+        self, model, slots: int, max_len: int, page_size: int, num_blocks: int
+    ):
+        self.slots = slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.num_blocks = num_blocks
+        self.max_pages = -(-max_len // page_size)
+        if num_blocks < self.max_pages:
+            raise ValueError(
+                f"num_blocks {num_blocks} cannot hold one max_len={max_len} "
+                f"request ({self.max_pages} pages of {page_size})"
+            )
+        self.data = model.init_paged_cache(num_blocks, page_size)
+        self.pos = jnp.zeros((slots,), jnp.int32)  # device (megastep carry)
+        self.pos_host = np.zeros((slots,), np.int32)  # admission mirror
+        self.table = np.full((slots, self.max_pages), num_blocks, np.int32)
+        self.alloc_count = np.zeros((slots,), np.int32)
+        self.refcount = np.zeros((num_blocks,), np.int32)
+        self._free = list(range(num_blocks - 1, -1, -1))  # pop() -> 0, 1, …
+        # (adapter_id, exact token prefix) -> shared block. Exact tuples,
+        # not chained hashes: a 64-bit hash collision would silently alias
+        # one request's pages onto another's KV; at this repo's max_len the
+        # O(pages²) key material is noise next to one KV block
+        self._prefix: dict[tuple, int] = {}
+        self._block_key: dict[int, tuple] = {}  # shared block -> its key
+        self._table_dev = None  # cached device copy; invalidated on mutation
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def full(self, slot: int) -> bool:
+        return self.pos_host[slot] >= self.max_len - 1
+
+    def table_device(self) -> jax.Array:
+        """Block table as a device array; re-uploaded only after mutation."""
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self.table)
+        return self._table_dev
+
+    # ---------------------------------------------------------- allocation
+
+    def _release(self, blk: int) -> None:
+        self.refcount[blk] -= 1
+        if self.refcount[blk] == 0:
+            key = self._block_key.pop(blk, None)
+            if key is not None:
+                del self._prefix[key]
+            self._free.append(blk)
+
+    def admit(self, slot: int, tokens, adapter_id: int):
+        """Place a prompt's pages; returns splice destinations or None.
+
+        Full pages (``page_size`` tokens entirely inside the prompt) are
+        looked up in the prefix map — keyed on ``(adapter_id, exact token
+        prefix)`` so reuse never crosses tenants, whose deltas change
+        k/v — and reused with a refcount bump when present. Fresh pages
+        pop the free-list. Returns the (n_pages,) destination-block
+        vector for :meth:`splice_group` (sentinel on reused pages: the
+        splice must not rewrite blocks other requests already attend to),
+        or None — with every allocation rolled back — when the pool
+        cannot cover the prompt.
+        """
+        plen = len(tokens)
+        n_pages = self.blocks_for(plen)
+        if n_pages > self.max_pages:
+            raise ValueError(
+                f"prompt of {plen} tokens needs {n_pages} pages; "
+                f"max_len {self.max_len} caps a slot at {self.max_pages}"
+            )
+        n_full = plen // self.page_size
+        row = np.full((self.max_pages,), self.num_blocks, np.int32)
+        dst = np.full((n_pages,), self.num_blocks, np.int32)
+        prefix: list[int] = []
+        for j in range(n_pages):
+            if j < n_full:
+                p0 = j * self.page_size
+                prefix.extend(int(t) for t in tokens[p0 : p0 + self.page_size])
+                key = (int(adapter_id), tuple(prefix))
+                shared = self._prefix.get(key)
+                if shared is not None:
+                    self.refcount[shared] += 1
+                    row[j] = shared
+                    continue
+            if not self._free:
+                for j2 in range(j):  # roll back: this request takes nothing
+                    self._release(int(row[j2]))
+                return None
+            blk = self._free.pop()
+            self.refcount[blk] = 1
+            if j < n_full:
+                self._prefix[key] = blk
+                self._block_key[blk] = key
+            row[j] = blk
+            dst[j] = blk
+        self.table[slot] = row
+        self.alloc_count[slot] = n_pages
+        self._table_dev = None
+        return dst
+
+    def reserve(self, slot: int, target_len: int) -> bool:
+        """Extend a slot's table to cover ``target_len`` positions.
+
+        Called at chunk boundaries so the in-graph decode loop never
+        allocates: every position it can write this chunk already has a
+        physical block. Keeps partial progress on failure (the pages stay
+        owned by the slot; the engine preempts someone and retries).
+        """
+        need = self.blocks_for(target_len)
+        while self.alloc_count[slot] < need:
+            if not self._free:
+                return False
+            blk = self._free.pop()
+            self.refcount[blk] = 1
+            self.table[slot, self.alloc_count[slot]] = blk
+            self.alloc_count[slot] += 1
+            self._table_dev = None
+        return True
+
+    def splice_group(
+        self, pcache: dict, slots: np.ndarray, plens: np.ndarray,
+        dst_blocks: np.ndarray,
+    ) -> None:
+        """Splice prefill rows into the pool. ``dst_blocks`` (B, n_pages)
+        carries each bucket row's destination block per page (sentinel
+        entries — pads, shared pages — are dropped in-graph)."""
+        self.data["k"], self.data["v"], self.pos = _splice_group_paged(
+            self.data["k"], self.data["v"], pcache["k"], pcache["v"],
+            jnp.asarray(dst_blocks, jnp.int32),
+            jnp.asarray(slots, jnp.int32), jnp.asarray(plens, jnp.int32),
+            self.pos,
+        )
+        real = slots < self.slots
+        self.pos_host[slots[real]] = plens[real]
+
+    def sync(self, pos_dev: jax.Array, pos_np: np.ndarray) -> None:
+        """Adopt the megastep's final position state (device + fetched)."""
+        self.pos = pos_dev
+        self.pos_host[:] = pos_np
+
+    def evict(self, slot: int) -> None:
+        """Return a slot's blocks to the pool (refcounted: a block shared
+        with another live request survives until its last holder leaves;
+        blocks dropping to refcount 0 leave the prefix hash and free)."""
+        for j in range(int(self.alloc_count[slot])):
+            self._release(int(self.table[slot, j]))
+        self.table[slot] = self.num_blocks
+        self.alloc_count[slot] = 0
+        self.pos_host[slot] = 0
+        self._table_dev = None

@@ -8,8 +8,13 @@ whole batch.
 
 Greedy vs. temperature is resolved per row from a traced ``(B,)``
 temperature vector (0 = greedy), so tenants with different sampling
-settings share one compiled step. ``top_k`` is a static engine-level
-setting (0 = off).
+settings share one compiled step. ``top_k`` and ``top_p`` (nucleus) are
+static engine-level settings (0 = off): every slot shares one compiled
+step, and the filters vectorise over the batch. ``top_p`` keeps the
+smallest set of tokens whose probability mass (under the per-row
+temperature-scaled distribution) reaches ``p`` — implemented as a sorted
+cumulative-mass cutoff value per row, so no unsort scatter is needed; the
+most probable token always survives.
 """
 
 from __future__ import annotations
@@ -19,9 +24,12 @@ import jax.numpy as jnp
 
 
 class Sampler:
-    def __init__(self, vocab_size: int, *, top_k: int = 0):
+    def __init__(self, vocab_size: int, *, top_k: int = 0, top_p: float = 0.0):
+        if not 0.0 <= top_p <= 1.0:
+            raise ValueError(f"top_p must be in [0, 1], got {top_p}")
         self.vocab_size = vocab_size
         self.top_k = top_k
+        self.top_p = top_p
 
     def __call__(
         self, logits: jax.Array, temps: jax.Array, key: jax.Array
@@ -34,5 +42,15 @@ class Sampler:
         greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         temps = temps.astype(jnp.float32)
         scaled = lg / jnp.maximum(temps, 1e-6)[:, None]
+        if self.top_p and self.top_p < 1.0:
+            srt = jnp.sort(scaled, axis=-1)[:, ::-1]  # descending
+            probs = jax.nn.softmax(srt, axis=-1)
+            cum = jnp.cumsum(probs, axis=-1) - probs  # mass strictly above
+            keep = cum < self.top_p  # first column is always kept
+            # smallest kept logit = the nucleus cutoff for this row
+            cutoff = jnp.min(
+                jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True
+            )
+            scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
         sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
         return jnp.where(temps > 0.0, sampled, greedy)

@@ -4,6 +4,13 @@ Host-side bookkeeping only — no jax. Requests queue in submit order; every
 admission round pops as many as there are free slots. Each request carries
 its tenant's ``adapter_id`` (0 = base model) and its own sampling
 temperature, both threaded into the jitted decode step as traced arrays.
+
+The paged engine adds two block-aware motions: admission takes a
+``try_place`` callback so a request only leaves the queue when the block
+pool can hold its prompt (head-of-line FIFO: the first refusal stops the
+round), and :meth:`preempt` hands an admitted request back to the *front*
+of the queue when decode runs out of blocks mid-flight — it re-prefills
+later over ``prompt + out`` and continues exactly where it stopped.
 """
 
 from __future__ import annotations
@@ -53,16 +60,40 @@ class Scheduler:
         )
         return rid
 
-    def admissible(self) -> list[tuple[int, Request]]:
-        """Pop queued requests into free slots (FIFO); returns (slot, req)."""
+    def admissible(self, try_place=None) -> list[tuple[int, Request]]:
+        """Pop queued requests into free slots (FIFO); returns (slot, req).
+
+        ``try_place(slot, req) -> bool`` (paged engine) reserves memory for
+        the request; a False puts the request back at the queue head and
+        ends the round — admitting around it would starve the head forever.
+        """
         out = []
         for slot in range(self.slots):
             if self.active[slot] is not None or not self._queue:
                 continue
             req = self._queue.popleft()
+            if try_place is not None and not try_place(slot, req):
+                self._queue.appendleft(req)
+                break
             self.active[slot] = req
             out.append((slot, req))
         return out
+
+    def preempt(self, slot: int) -> Request:
+        """Evict an admitted request back to the queue *front* (it is older
+        than everything queued — rids are monotone) for later re-prefill."""
+        req = self.active[slot]
+        self.active[slot] = None
+        self._queue.appendleft(req)
+        return req
+
+    def youngest_active(self) -> int | None:
+        """Slot of the most recently submitted admitted request — the
+        preemption victim (its re-prefill redoes the least work)."""
+        slots = [s for s, r in enumerate(self.active) if r is not None]
+        if not slots:
+            return None
+        return max(slots, key=lambda s: self.active[s].rid)
 
     def slot_arrays(self) -> dict[str, np.ndarray]:
         """Per-slot state as dense arrays for the decode megastep.

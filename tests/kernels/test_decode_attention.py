@@ -11,8 +11,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention import decode_attention_pallas
-from repro.kernels.ref import decode_attention_ref
+from repro.kernels.decode_attention import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+)
+from repro.kernels.ref import (
+    decode_attention_ref,
+    gather_paged_kv,
+    paged_decode_attention_ref,
+)
 from repro.models.attention import dense_attention
 
 RNG = np.random.default_rng(23)
@@ -83,3 +90,94 @@ def test_decode_kernel_rejects_ragged_heads():
         decode_attention_pallas(
             jnp.zeros((1, 2, 4, 16)), k, v, jnp.int32(4), interpret=True
         )
+
+
+# ------------------------------------------------------- paged (block table)
+
+PAGED_CASES = [
+    # (B, n_pages, P, H, Hkv, hd) — slots × pages × GQA group sweep
+    (1, 2, 16, 1, 1, 16),
+    (2, 4, 16, 4, 1, 16),
+    (3, 8, 8, 4, 4, 32),
+    (4, 2, 32, 8, 2, 16),
+    (2, 6, 16, 4, 2, 64),
+]
+
+
+def _paged_case(b, n_pages, page, h, hkv, hd, dt, *, extra_blocks=3):
+    """Pool + per-slot tables: distinct private blocks, one block shared
+    across every slot (the prefix-reuse shape), sentinel tails past each
+    slot's allocated frontier."""
+    n = b * n_pages + extra_blocks
+    q = jnp.asarray(RNG.normal(size=(b, 1, h, hd)), dt)
+    kp = jnp.asarray(RNG.normal(size=(n, page, hkv, hd)), dt)
+    vp = jnp.asarray(RNG.normal(size=(n, page, hkv, hd)), dt)
+    table = RNG.permutation(n)[: b * n_pages].reshape(b, n_pages)
+    table[:, 0] = table[0, 0]  # shared prefix block
+    vl = RNG.integers(1, n_pages * page + 1, size=(b,)).astype(np.int32)
+    vl[0] = 1  # 1-token extreme
+    if b > 1:
+        vl[1] = n_pages * page  # full-table extreme
+    for i in range(b):  # unallocated pages carry the OOB sentinel
+        table[i, -(-int(vl[i]) // page):] = n
+    return q, kp, vp, jnp.asarray(table, jnp.int32), jnp.asarray(vl)
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_paged_kernel_matches_ref(case, dt):
+    q, kp, vp, table, vl = _paged_case(*case, dt)
+    want = paged_decode_attention_ref(q, kp, vp, table, vl)
+    got = paged_decode_attention_pallas(q, kp, vp, table, vl, interpret=True)
+    atol = 1e-5 if dt == jnp.float32 else 0.05
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+def test_paged_ref_matches_dense_on_gathered_pages():
+    """The paged oracle is exactly the dense masked softmax over the
+    table-gathered contiguous view."""
+    q, kp, vp, table, vl = _paged_case(2, 4, 16, 4, 2, 16, jnp.float32)
+    k = gather_paged_kv(kp, table)
+    v = gather_paged_kv(vp, table)
+    want = dense_attention(q, k, v, causal=False, kv_valid_len=vl)
+    got = paged_decode_attention_ref(q, kp, vp, table, vl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_paged_kernel_matches_contiguous_kernel():
+    """Identity routing (table[b, p] = b·n_pages + p over a pool that is
+    just the contiguous cache cut into pages) reproduces the dense-slot
+    kernel bit-for-bit semantics."""
+    b, n_pages, page, h, hkv, hd = 2, 4, 16, 4, 2, 32
+    q, k, v = _qkv(b, n_pages * page, h, hkv, hd, jnp.float32)
+    vl = jnp.asarray([17, 53], jnp.int32)
+    kp = jnp.asarray(k).reshape(b * n_pages, page, hkv, hd)
+    vp = jnp.asarray(v).reshape(b * n_pages, page, hkv, hd)
+    table = jnp.arange(b * n_pages, dtype=jnp.int32).reshape(b, n_pages)
+    want = decode_attention_pallas(q, k, v, vl, interpret=True)
+    got = paged_decode_attention_pallas(q, kp, vp, table, vl, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_paged_kernel_scalar_valid_len():
+    q, kp, vp, table, _ = _paged_case(2, 4, 16, 4, 2, 16, jnp.float32)
+    want = paged_decode_attention_ref(q, kp, vp, table, jnp.int32(7))
+    got = paged_decode_attention_pallas(q, kp, vp, table, jnp.int32(7),
+                                        interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_paged_kernel_rejects_bad_shapes():
+    q, kp, vp, table, vl = _paged_case(2, 4, 16, 4, 2, 16, jnp.float32)
+    with pytest.raises(ValueError, match="Sq=1"):
+        paged_decode_attention_pallas(
+            jnp.zeros((2, 2, 4, 16)), kp, vp, table, vl, interpret=True
+        )
+    with pytest.raises(ValueError, match="multiple"):
+        paged_decode_attention_pallas(
+            jnp.zeros((2, 1, 3, 16)), kp, vp, table, vl, interpret=True
+        )
+    with pytest.raises(ValueError, match="table rows"):
+        paged_decode_attention_pallas(q, kp, vp, table[:1], vl, interpret=True)

@@ -1,0 +1,320 @@
+"""Paged serving core: block pool, block tables, preemption, prefix reuse.
+
+The paged engine must be externally invisible next to the dense one:
+greedy outputs token-for-token identical across the megastep parity grid
+(plain / multi-tenant / int8 base × EOS / max_new / cache-full
+mid-chunk), one device→host transfer per chunk, and the same Request
+lifecycle. On top of that it must deliver the structural wins the dense
+layout cannot: admission bounded by tokens in flight instead of
+slots × max_len, preemption + re-admission under pool pressure with
+identical greedy output, and same-tenant shared-prefix prompts holding
+one refcounted copy of their common pages.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.adapt import init_adapters
+from repro.launch import serve as launch_serve
+from repro.models import get_model
+from repro.serve import AdapterStore, PagedKVCache, ServeEngine
+
+_NO_EOS = 1 << 20
+_CACHE = {}
+
+
+def _model():
+    if "m" not in _CACHE:
+        cfg = reduced(get_config("qwen2-1.5b")).replace(dtype="float32")
+        m = get_model(cfg)
+        _CACHE["m"] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+    return _CACHE["m"]
+
+
+def _adapter(params, seed, k=2, scale=0.05):
+    idx, val = init_adapters(params, k, rng=jax.random.PRNGKey(seed))
+    val = jax.tree.map(
+        lambda i, v: None
+        if v is None
+        else scale
+        * jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(seed), v.size), v.shape
+        ),
+        idx, val, is_leaf=lambda x: x is None,
+    )
+    return idx, val
+
+
+def _store(params):
+    if "store" not in _CACHE:
+        store = AdapterStore()
+        store.register(*_adapter(params, seed=1))
+        store.register(*_adapter(params, seed=2))
+        _CACHE["store"] = store
+    return _CACHE["store"]
+
+
+def _run(m, params, *, paged, chunk, eos_id=_NO_EOS, store=None,
+         base_dtype="fp32", slots=2, max_len=64, page_size=16,
+         num_blocks=None):
+    """5 requests on 2 slots: slot eviction + re-admission mid-run, and
+    max_new values chosen to land mid-chunk for every chunk > 1."""
+    eng = ServeEngine(
+        m, params, slots=slots, max_len=max_len, eos_id=eos_id,
+        adapter_store=store, base_dtype=base_dtype, decode_chunk=chunk,
+        paged=paged, page_size=page_size, num_blocks=num_blocks,
+    )
+    n_ad = store.num_adapters if store is not None else 0
+    for i, max_new in enumerate((3, 7, 12, 5, 9)):
+        eng.submit(
+            [1, 5 + i, 9, 2], max_new=max_new,
+            adapter_id=(1 + i % n_ad) if n_ad else 0,
+        )
+    return [r.out for r in eng.run_to_completion()], eng
+
+
+# ---------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize("variant", ["plain", "multitenant", "int8"])
+def test_paged_greedy_parity_with_dense(variant):
+    """Paged greedy outputs are token-for-token the dense engine's across
+    the megastep grid, including EOS firing mid-chunk; the pool drains
+    back to empty when the workload finishes."""
+    cfg, m, params = _model()
+    store = _store(params) if variant == "multitenant" else None
+    base = "int8" if variant == "int8" else "fp32"
+    ref, _ = _run(m, params, paged=False, chunk=1, store=store, base_dtype=base)
+    assert [len(o) for o in ref] == [3, 7, 12, 5, 9]
+    for chunk in (1, 5):
+        got, eng = _run(
+            m, params, paged=True, chunk=chunk, store=store, base_dtype=base
+        )
+        assert got == ref
+        assert eng.kv.free_blocks == eng.kv.num_blocks
+        assert not eng.kv.refcount.any()
+    # EOS mid-chunk: terminate on a token the greedy decode actually emits
+    eos = ref[2][4]
+    cut, _ = _run(m, params, paged=False, chunk=1, eos_id=eos, store=store,
+                  base_dtype=base)
+    assert any(len(c) < len(r) for c, r in zip(cut, ref))
+    got, _ = _run(m, params, paged=True, chunk=5, eos_id=eos, store=store,
+                  base_dtype=base)
+    assert got == cut
+
+
+def test_paged_cache_full_mid_chunk():
+    """A slot hitting max_len-1 inside a chunk stops exactly where the
+    dense per-token loop stops — with max_len not a page multiple."""
+    cfg, m, params = _model()
+
+    def go(paged, chunk):
+        eng = ServeEngine(m, params, slots=1, max_len=24, eos_id=_NO_EOS,
+                          decode_chunk=chunk, paged=paged, page_size=16)
+        eng.submit([1, 5, 9, 2], max_new=64)
+        return [r.out for r in eng.run_to_completion()]
+
+    ref = go(False, 1)
+    assert len(ref[0]) == 24 - 4
+    assert go(True, 8) == ref
+
+
+def test_paged_one_transfer_per_chunk(monkeypatch):
+    """The paged megastep keeps the chunk contract: block tables ride the
+    compiled call as device state, ONE device→host transfer per chunk."""
+    cfg, m, params = _model()
+    eng = ServeEngine(m, params, slots=2, max_len=64, eos_id=_NO_EOS,
+                      decode_chunk=4, paged=True)
+    eng.submit([1, 5, 9, 2], max_new=40)
+    eng.submit([1, 6, 9, 2], max_new=40)
+    eng.step()  # admission (its own transfer) + first chunk
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: (calls.append(1), real(x))[1])
+    for _ in range(3):
+        assert eng.step()
+    assert len(calls) == 3
+
+
+# -------------------------------------------- preemption / re-admission
+
+
+def test_eviction_readmission_matches_uncontended():
+    """Pool pressure preempts the youngest request back to the queue; it
+    re-prefills over prompt+out and finishes with greedy output identical
+    to an uncontended run, and every freed block returns to the pool."""
+    cfg, m, params = _model()
+    prompts = [([1, 5, 9, 2], 20), ([1, 6, 9, 2], 20), ([1, 7, 9, 2], 20)]
+
+    def solo(prompt, max_new):
+        eng = ServeEngine(m, params, slots=1, max_len=64, eos_id=_NO_EOS,
+                          decode_chunk=4, paged=True, page_size=4)
+        eng.submit(prompt, max_new=max_new)
+        return eng.run_to_completion()[0].out
+
+    want = [solo(p, mn) for p, mn in prompts]
+    # 3 slots over a 64-token pool; the workload wants 3 × 24 = 72 tokens,
+    # so someone must be evicted mid-flight and finish after re-admission
+    eng = ServeEngine(m, params, slots=3, max_len=64, eos_id=_NO_EOS,
+                      decode_chunk=4, paged=True, page_size=4, num_blocks=16)
+    for p, mn in prompts:
+        eng.submit(p, max_new=mn)
+    got = [r.out for r in eng.run_to_completion()]
+    assert eng.preemptions >= 1
+    assert got == want
+    # refcount accounting: everything handed back
+    assert eng.kv.free_blocks == eng.kv.num_blocks
+    assert not eng.kv.refcount.any()
+    assert (eng.kv.table == eng.kv.num_blocks).all()
+    assert not eng.kv.alloc_count.any()
+
+
+def test_paged_pool_refcounts_through_admit_reserve_evict():
+    """Direct PagedKVCache accounting: admit dedups shared pages, reserve
+    extends, evict releases — refcounts and the free-list stay exact."""
+    cfg, m, params = _model()
+    kv = PagedKVCache(m, slots=3, max_len=32, page_size=4, num_blocks=12)
+    toks = list(range(1, 10))  # 9 tokens: 2 full pages + 1 partial
+    dst0 = kv.admit(0, toks, adapter_id=1)
+    assert list(dst0 != kv.num_blocks).count(True) == 3  # all fresh
+    assert kv.used_blocks == 3
+    # same tenant, same 8-token prefix: both full pages dedup
+    dst1 = kv.admit(1, toks[:8] + [99], adapter_id=1)
+    assert (dst1[:2] == kv.num_blocks).all()  # shared -> splice skips them
+    assert kv.used_blocks == 4  # only the private partial page is new
+    assert (kv.refcount[kv.table[0, :2]] == 2).all()
+    # different tenant, same tokens: NO sharing (deltas change k/v)
+    dst2 = kv.admit(2, toks, adapter_id=2)
+    assert (dst2 != kv.num_blocks).all()
+    assert kv.used_blocks == 7
+    # reserve decode room; evict returns everything
+    assert kv.reserve(0, 16)  # 4 pages total for slot 0
+    assert kv.used_blocks == 8
+    kv.evict(0)
+    # slot 0's private pages freed; slot 1 still pins the shared pair
+    assert kv.used_blocks == 6
+    assert (kv.refcount[kv.table[1, :2]] == 1).all()
+    kv.evict(1)
+    assert kv.used_blocks == 3  # shared pair finally freed with last holder
+    kv.evict(2)
+    assert kv.free_blocks == kv.num_blocks and not kv.refcount.any()
+    # exhaustion rolls back: nothing is leaked on a refused admit
+    assert kv.reserve(0, 32)  # 8 pages
+    before = kv.used_blocks
+    assert kv.admit(1, list(range(100, 100 + 24)), adapter_id=0) is None
+    assert kv.used_blocks == before
+
+
+# -------------------------------------------------- capacity & prefixes
+
+
+def test_paged_admits_beyond_dense_slot_capacity():
+    """With the same token budget the dense layout reserves for 2 slots
+    (2 × 64), the paged engine runs 6 short requests CONCURRENTLY — the
+    workload's dense reservation (6 × max_len) is 3× the pool."""
+    cfg, m, params = _model()
+    eng = ServeEngine(m, params, slots=6, max_len=64, eos_id=_NO_EOS,
+                      decode_chunk=4, paged=True, page_size=16, num_blocks=8)
+    for i in range(6):
+        eng.submit([1, 5 + i, 9, 2], max_new=8)
+    eng.step()  # all 6 admitted and still decoding (1 + 4 of 8 tokens out)
+    n_active = sum(r is not None for r in eng.scheduler.active)
+    assert n_active == 6
+    assert n_active * eng.max_len > eng.kv.num_blocks * eng.kv.page_size
+    assert eng.kv.used_blocks * eng.kv.page_size <= 8 * 16
+    reqs = eng.run_to_completion()
+    assert all(len(r.out) == 8 for r in reqs)
+    assert eng.kv.free_blocks == eng.kv.num_blocks
+
+
+def test_shared_prefix_costs_one_copy():
+    """K same-tenant requests over one page-aligned system prompt hold a
+    single refcounted copy of the prefix pages."""
+    cfg, m, params = _model()
+    sys_prompt = list(range(1, 17))  # 4 full pages at page_size=4
+    eng = ServeEngine(m, params, slots=4, max_len=64, eos_id=_NO_EOS,
+                      decode_chunk=2, paged=True, page_size=4, num_blocks=40)
+    for i in range(4):
+        eng.submit(sys_prompt + [30 + i], max_new=8)
+    eng.step()
+    # unshared: 4 requests × 5 prompt pages (+ reserve) ≥ 20 blocks.
+    # shared: 4 prefix pages + 4 private partial/reserve pages.
+    assert eng.kv.used_blocks <= 4 + 4 * 2
+    shared = eng.kv.refcount[eng.kv.refcount > 1]
+    assert len(shared) == 4 and (shared == 4).all()
+    got = [r.out for r in eng.run_to_completion()]
+    assert eng.kv.free_blocks == eng.kv.num_blocks
+    # sharing is invisible to the tokens
+    dense = ServeEngine(m, params, slots=4, max_len=64, eos_id=_NO_EOS,
+                        decode_chunk=2)
+    for i in range(4):
+        dense.submit(sys_prompt + [30 + i], max_new=8)
+    assert [r.out for r in dense.run_to_completion()] == got
+
+
+def test_prefix_sharing_respects_tenants():
+    """Same prompt, different adapter_id: tenant deltas change k/v, so the
+    prefix hash must never alias across tenants."""
+    cfg, m, params = _model()
+    store = _store(params)
+    sys_prompt = list(range(1, 9))  # 2 full pages at page_size=4
+    eng = ServeEngine(m, params, slots=2, max_len=64, eos_id=_NO_EOS,
+                      decode_chunk=2, paged=True, page_size=4,
+                      adapter_store=store)
+    eng.submit(sys_prompt + [30], max_new=6, adapter_id=1)
+    eng.submit(sys_prompt + [31], max_new=6, adapter_id=2)
+    eng.step()
+    assert not (eng.kv.refcount > 1).any()  # no cross-tenant sharing
+    got = [r.out for r in eng.run_to_completion()]
+    dense = ServeEngine(m, params, slots=2, max_len=64, eos_id=_NO_EOS,
+                        decode_chunk=2, adapter_store=store)
+    dense.submit(sys_prompt + [30], max_new=6, adapter_id=1)
+    dense.submit(sys_prompt + [31], max_new=6, adapter_id=2)
+    assert [r.out for r in dense.run_to_completion()] == got
+
+
+# ----------------------------------------------------- launcher validation
+
+
+def _args(**kw):
+    base = dict(decode_chunk=8, max_new=16, max_len=128, dense=False,
+                paged=False, page_size=None, num_blocks=None)
+    base.update(kw)
+    import argparse
+
+    return argparse.Namespace(**base)
+
+
+def test_launch_flag_validation():
+    launch_serve.validate_args(_args())  # defaults pass
+    launch_serve.validate_args(_args(paged=True))
+    launch_serve.validate_args(_args(dense=True))
+    with pytest.raises(SystemExit, match="mutually exclusive"):
+        launch_serve.validate_args(_args(dense=True, paged=True))
+    with pytest.raises(SystemExit, match="decode-chunk"):
+        launch_serve.validate_args(_args(decode_chunk=0))
+    with pytest.raises(SystemExit, match="power of two"):
+        launch_serve.validate_args(_args(page_size=24))
+    with pytest.raises(SystemExit, match="max-length"):
+        launch_serve.validate_args(_args(page_size=16, num_blocks=4))
+    with pytest.raises(SystemExit, match="--dense"):
+        launch_serve.validate_args(_args(dense=True, page_size=16))
+    with pytest.raises(SystemExit, match="--dense"):
+        launch_serve.validate_args(_args(dense=True, num_blocks=64))
+    with pytest.raises(SystemExit, match="max-new"):
+        launch_serve.validate_args(_args(max_new=0))
+    # the CLI rejects before any model/compile work happens
+    with pytest.raises(SystemExit, match="power of two"):
+        launch_serve.main(["--arch", "qwen2-1.5b", "--reduced",
+                           "--page-size", "12"])
+
+
+def test_paged_engine_rejects_bad_config():
+    cfg, m, params = _model()
+    with pytest.raises(ValueError, match="power of two"):
+        ServeEngine(m, params, paged=True, page_size=12)
+    with pytest.raises(ValueError, match="num_blocks"):
+        ServeEngine(m, params, max_len=64, paged=True, page_size=16,
+                    num_blocks=2)

@@ -1,0 +1,79 @@
+"""Sampler semantics: nucleus (top-p) filtering next to top-k and greedy.
+
+``top_p`` is a static engine-level setting mirroring ``top_k``: all slots
+share one compiled step, the per-row temperature vector still resolves
+greedy-vs-sampled per slot, and the nucleus is computed on the
+temperature-scaled distribution (the one the categorical draw uses).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import Sampler
+
+PROBS = np.array([0.4, 0.3, 0.12, 0.08, 0.05, 0.03, 0.015, 0.005])
+
+
+def _freq(sampler, logits, temps, n=4000):
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    toks = jax.vmap(lambda k: sampler(logits, temps, k)[0])(keys)
+    return np.bincount(np.asarray(toks), minlength=logits.shape[1]) / n
+
+
+def test_top_p_distribution():
+    """Sampled frequencies match the renormalised truncated distribution,
+    with ZERO mass outside the nucleus (cum mass 0.4+0.3 ≥ 0.6 → {0, 1})."""
+    s = Sampler(8, top_p=0.6)
+    logits = jnp.log(jnp.asarray(PROBS))[None]
+    freq = _freq(s, logits, jnp.ones((1,)))
+    assert freq[2:].sum() == 0.0
+    want = PROBS[:2] / PROBS[:2].sum()
+    np.testing.assert_allclose(freq[:2], want, atol=0.03)
+
+
+def test_top_p_keeps_most_probable_token():
+    """A nucleus smaller than the top token's mass degenerates to greedy
+    sampling — the argmax always survives the cutoff."""
+    s = Sampler(8, top_p=0.05)  # < P(token 0) = 0.4
+    logits = jnp.log(jnp.asarray(PROBS))[None]
+    freq = _freq(s, logits, jnp.ones((1,)), n=500)
+    assert freq[0] == 1.0
+
+
+def test_top_p_off_matches_full_distribution():
+    s = Sampler(8)
+    logits = jnp.log(jnp.asarray(PROBS))[None]
+    freq = _freq(s, logits, jnp.ones((1,)))
+    np.testing.assert_allclose(freq, PROBS, atol=0.03)
+
+
+def test_top_p_leaves_greedy_rows_untouched():
+    """temp=0 rows ignore the nucleus entirely; mixed batches still share
+    one compiled call."""
+    s = Sampler(8, top_p=0.6)
+    logits = jnp.log(jnp.tile(PROBS, (2, 1)))
+    toks = s(jnp.asarray(logits), jnp.asarray([0.0, 1.0]), jax.random.PRNGKey(3))
+    assert int(toks[0]) == 0  # greedy = argmax
+    assert int(toks[1]) in (0, 1)  # sampled row stays inside the nucleus
+
+
+def test_top_p_composes_with_top_k():
+    """top_k prunes first, top_p renormalises over the survivors."""
+    s = Sampler(8, top_k=4, top_p=0.9)
+    logits = jnp.log(jnp.asarray(PROBS))[None]
+    freq = _freq(s, logits, jnp.ones((1,)))
+    assert freq[4:].sum() == 0.0  # top_k kills 4..7
+    kept = PROBS[:4] / PROBS[:4].sum()
+    # nucleus over the renormalised top-4 ([.444 .333 .133 .089]): the
+    # exclusive mass before token 3 is 0.911 ≥ 0.9, so 0..2 survive
+    assert freq[3] == 0.0
+    np.testing.assert_allclose(freq[:3], kept[:3] / kept[:3].sum(), atol=0.03)
+
+
+def test_top_p_validation():
+    with pytest.raises(ValueError):
+        Sampler(8, top_p=1.5)
+    with pytest.raises(ValueError):
+        Sampler(8, top_p=-0.1)
