@@ -1,8 +1,10 @@
 """Batched serving on the paged KV core: block-pool cache, block-aware
-continuous batching, multi-tenant adapters — staggered request arrival,
-shared-prefix reuse, per-slot NeuroAda deltas, all off ONE int8-packed
-frozen base (DESIGN.md §8/§10; the CLI twin is
-``python -m repro.launch.serve --base-dtype int8 --adapters …``).
+continuous batching, chunked prefill fused into the serving step,
+multi-tenant adapters — staggered request arrival, shared-prefix reuse,
+per-slot NeuroAda deltas, all off ONE int8-packed frozen base
+(DESIGN.md §8/§10/§11; the CLI twin is
+``python -m repro.launch.serve --base-dtype int8 --prefill-chunk 16
+--adapters …``).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -44,9 +46,13 @@ def main():
     # paged KV: 6 slots share a 32-block pool (512 tokens) — a dense cache
     # at this concurrency would pre-reserve 6 × 128 = 768 rows. Requests
     # with a common page-aligned prompt prefix (same tenant) dedup their
-    # leading pages against refcounted shared blocks.
+    # leading pages against refcounted shared blocks. Prompts are consumed
+    # 16 tokens per mixed step (--prefill-chunk): a long prompt never
+    # stalls the other streams' decode, and later same-prefix arrivals
+    # skip chunk-walking the pages that are already resident.
     engine = ServeEngine(model, params, slots=6, max_len=128,
                          adapter_store=store, decode_chunk=8,
+                         prefill_chunk=16,
                          paged=True, page_size=16, num_blocks=32)
     system = list(range(1, 17))  # 16-token "system prompt" = 1 full page
     prompts = [
@@ -64,9 +70,16 @@ def main():
     t0 = time.perf_counter()
     for p, aid in zip(prompts, ids):
         engine.submit(p, max_new=16, adapter_id=aid)
-    engine.step()
+    # chunked admission: the system-prompt *writer* lands its pages first
+    # (mixed steps), then the same-tenant twins admit against the written
+    # prefix and skip straight to their private tails
+    steps = 0
+    while engine.scheduler.has_queued() or engine.scheduler.has_prefilling():
+        engine.step()
+        steps += 1
     kv = engine.kv
-    print(f"in flight: {kv.used_blocks}/{kv.num_blocks} blocks "
+    print(f"in flight after {steps} mixed steps: "
+          f"{kv.used_blocks}/{kv.num_blocks} blocks "
           f"({kv.used_blocks * kv.page_size} of {kv.num_blocks * kv.page_size} "
           f"pooled tokens), shared pages: "
           f"{int((kv.refcount > 1).sum())} (refcounted prefix reuse)")

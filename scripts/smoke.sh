@@ -83,6 +83,23 @@ if python -m repro.launch.serve --page-size 12 2>/dev/null; then
 fi
 echo "paged-vs-dense parity OK"
 
+echo "== chunked prefill (long prompt admitted mid-decode, timed) =="
+# two short streams decode while a 56-token prompt is consumed in 8-token
+# chunks through the mixed step; greedy output must be token-identical to
+# the dense engine serving the same workload (which also exercises the
+# chunked path on the dense slot cache). Timed so a recompile-per-prompt
+# or per-chunk regression shows up as wall-clock in CI logs.
+long_prompt=$(seq -s, 1 56)
+time python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --prompts "1,17,25;1,40,41;$long_prompt" --max-new 8 --slots 2 \
+    --prefill-chunk 8 --paged \
+    | grep '^req' > "$tmpdir/serve_chunked.out"
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --prompts "1,17,25;1,40,41;$long_prompt" --max-new 8 --slots 2 \
+    --prefill-chunk 8 --dense | grep '^req' > "$tmpdir/serve_chunked_dense.out"
+diff "$tmpdir/serve_chunked.out" "$tmpdir/serve_chunked_dense.out"
+echo "chunked-prefill parity OK"
+
 echo "== quantized-base e2e (adapt -> 2 train steps -> export -> serve int8) =="
 # the frozen base lives in int8 through BOTH training and serving: only the
 # sparse (idx, val) bypass pairs train, and two tenants then share the one

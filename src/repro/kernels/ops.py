@@ -30,6 +30,7 @@ from repro.kernels.decode_attention import (
     paged_decode_attention_pallas,
 )
 from repro.kernels.fused_linear import fused_linear_pallas
+from repro.kernels.prefill_attention import paged_prefill_attention_pallas
 from repro.kernels.quant_linear import fused_linear_q_pallas
 from repro.kernels.sparse_delta import (
     sparse_delta_batched_pallas,
@@ -372,6 +373,29 @@ def paged_decode_attention(
         return ref.paged_decode_attention_ref(q, k_pool, v_pool, table, kv_valid_len)
     return paged_decode_attention_pallas(
         q, k_pool, v_pool, table, kv_valid_len,
+        interpret=_backend == "pallas_interpret",
+    )
+
+
+def prefill_attention(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
+    q_offset, kv_valid_len,
+) -> jax.Array:
+    """Query-chunk × paged-KV attention for chunked prefill (DESIGN §11).
+
+    q (B, C, H, hd) against a (N, P, Hkv, hd) block pool routed through a
+    (B, n_pages) block table; per-slot ``q_offset`` anchors the chunk's
+    intra-causal mask and ``kv_valid_len`` is the post-write cache
+    frontier. jnp backend: gather-then-masked-softmax oracle; Pallas
+    backends: the scalar-prefetch page-sweep kernel (physical pages DMA
+    straight from the pool, online softmax in VMEM).
+    """
+    if _backend == "jnp":
+        return ref.paged_prefill_attention_ref(
+            q, k_pool, v_pool, table, q_offset, kv_valid_len
+        )
+    return paged_prefill_attention_pallas(
+        q, k_pool, v_pool, table, q_offset, kv_valid_len,
         interpret=_backend == "pallas_interpret",
     )
 

@@ -1,0 +1,178 @@
+"""Pallas TPU paged prefill-attention kernel (query chunk × block-pool KV).
+
+Chunked prefill (DESIGN §11) feeds the serving step a per-slot *query
+chunk*: up to ``C`` prompt tokens whose k/v were just written into the
+slot's paged blocks, attending over everything the slot has cached so
+far — prior chunks AND the in-chunk causal prefix. The stop-the-world
+prefill this replaces ran a dense ``(B, S_bucket, S_bucket)`` causal
+softmax per pow2 bucket; this kernel is the paged, bounded-latency
+version: grid ``(slot, kv-head, page)``, the chunk's GQA queries ride as
+a ``(C·G, hd)`` register tile against each ``(page_size, hd)`` KV page,
+and the online-softmax state ``(m, l, acc)`` accumulates in f32 VMEM
+scratch across the page sweep — each cached byte is read from HBM once
+per chunk.
+
+Per-slot scalars ride in as *scalar-prefetch* operands so the k/v
+BlockSpec index maps can aim each page's DMA at its physical block
+before the body runs:
+
+* ``table``        (B, n_pages) — logical page → physical block
+  (out-of-range sentinel = unallocated; clamped in the wrapper, always
+  masked because the engine never lets ``kv_valid_len`` cross an
+  unallocated page);
+* ``q_offset``     (B,) — the chunk's first logical position (slots sit
+  at different prefill/decode frontiers, so masking is per-slot);
+* ``kv_valid_len`` (B,) — the slot's cache frontier *after* the chunk's
+  writes (``q_offset + q_len``).
+
+Masking is two-sided: column ``c`` is visible to query ``i`` iff
+``c <= q_offset + i`` (intra-chunk causality — query ``i`` sits at
+logical position ``q_offset + i``) and ``c < kv_valid_len`` (pad queries
+``i >= q_len`` of a short chunk attend only real cache; their rows are
+discarded downstream). A decode slot in the mixed batch is just the
+degenerate chunk ``q_len = 1``: the mask collapses to the §10 decode
+kernel's frontier mask.
+
+VMEM per cell: ``page·hd·8`` B (k/v pages in f32) + ``C·G·(hd + page)·4``
+B (q tile + scores) + scratch ``C·G·(hd + 2)·4`` B — ≈ 600 KB at
+``C=64, G=4, hd=128, page=16``, far under the 16 MB budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
+_NEG = -1e30
+
+
+def _paged_prefill_attn_kernel(
+    table_ref, qoff_ref, vl_ref, q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref, *, page: int, g: int, scale: float,
+):
+    slot = pl.program_id(0)
+    p_step = pl.program_id(2)
+
+    @pl.when(p_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (C·G, hd)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)   # (page, hd)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)   # (page, hd)
+    cg = q.shape[0]
+    s = jax.lax.dot_general(
+        q, kb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (C·G, page)
+    # columns are *logical* positions; rows fold (query, group): row r is
+    # query r // g, so its causal frontier is q_offset + r // g
+    col = p_step * page + jax.lax.broadcasted_iota(jnp.int32, (cg, page), 1)
+    qpos = qoff_ref[slot] + jax.lax.broadcasted_iota(
+        jnp.int32, (cg, page), 0
+    ) // g
+    valid = (col <= qpos) & (col < vl_ref[slot])
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(p_step == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_pallas(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    table: jax.Array,
+    q_offset,
+    kv_valid_len,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunked-prefill GQA attention against a paged block pool.
+
+    q (B, C, H, hd); k_pool, v_pool (N, P, Hkv, hd); table (B, n_pages)
+    int32 (out-of-range = unallocated, clamped here — such pages always
+    sit past ``kv_valid_len``); q_offset, kv_valid_len scalar or (B,).
+    Query ``i`` of slot ``b`` sees column ``c`` iff
+    ``c <= q_offset[b] + i`` and ``c < kv_valid_len[b]``. Returns
+    (B, C, H, hd); rows ``i >= q_len`` are well-defined but meaningless
+    (the caller discards them).
+    """
+    b, c, h, hd = q.shape
+    n, page, hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    if h % hkv:
+        raise ValueError(f"H={h} must be a multiple of Hkv={hkv}")
+    if table.shape[0] != b:
+        raise ValueError(f"table rows {table.shape[0]} != batch {b}")
+    g = h // hkv
+    n_pages = table.shape[1]
+    qoff = jnp.broadcast_to(
+        jnp.asarray(q_offset, jnp.int32).reshape(-1), (b,)
+    )
+    vl = jnp.broadcast_to(
+        jnp.asarray(kv_valid_len, jnp.int32).reshape(-1), (b,)
+    )
+    tbl = jnp.minimum(table.astype(jnp.int32), n - 1)
+    # fold (query, group) into one row axis: (B, Hkv, C·G, hd)
+    qg = q.reshape(b, c, hkv, g, hd).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b, hkv, c * g, hd)
+    grid = (b, hkv, n_pages)
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, hd),
+        lambda b_, h_, p_, table_ref, qoff_ref, vl_ref: (
+            table_ref[b_, p_], 0, h_, 0
+        ),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, c * g, hd),
+                lambda b_, h_, p_, t_, o_, v_: (b_, h_, 0, 0),
+            ),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, c * g, hd), lambda b_, h_, p_, t_, o_, v_: (b_, h_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((c * g, 1), jnp.float32),    # running max
+            pltpu.VMEM((c * g, 1), jnp.float32),    # running denom
+            pltpu.VMEM((c * g, hd), jnp.float32),   # f32 accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_prefill_attn_kernel, page=page, g=g, scale=hd**-0.5
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, c * g, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tbl, qoff, vl, qg, k_pool, v_pool)
+    out = out.reshape(b, hkv, c, g, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, c, h, hd)

@@ -96,6 +96,50 @@ def paged_decode_attention_ref(
     return decode_attention_ref(q, k, v, kv_valid_len)
 
 
+def prefill_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, q_offset, kv_valid_len
+) -> jax.Array:
+    """Chunked-prefill GQA attention against a contiguous cache view.
+
+    q (B, C, H, hd); k, v (B, Skv, Hkv, hd); q_offset, kv_valid_len
+    scalar or (B,). Query ``i`` (logical position ``q_offset[b] + i``)
+    sees column ``c`` iff ``c <= q_offset[b] + i`` and
+    ``c < kv_valid_len[b]`` — intra-chunk causality plus the per-slot
+    cache frontier. f32 softmax; fully-masked rows return zeros.
+    """
+    b, c, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, c, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32)) * hd**-0.5
+    qoff = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32).reshape(-1), (b,))
+    vl = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32).reshape(-1), (b,))
+    col = jnp.arange(skv)[None, None, :]
+    qpos = qoff[:, None, None] + jnp.arange(c)[None, :, None]
+    mask = (col <= qpos) & (col < vl[:, None, None])  # (B, C, Skv)
+    mask = mask[:, None, None]                        # (B, 1, 1, C, Skv)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.where(mask, jax.nn.softmax(s, axis=-1), 0.0)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, c, h, hd).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
+    q_offset, kv_valid_len,
+) -> jax.Array:
+    """Block-table chunked-prefill oracle: gather pages, dense masked
+    softmax with the two-sided (causal frontier × valid length) mask.
+
+    q (B, C, H, hd); k_pool/v_pool (N, P, Hkv, hd); table (B, n_pages)
+    int32 (out-of-range = unallocated); q_offset/kv_valid_len scalar or
+    (B,).
+    """
+    k = gather_paged_kv(k_pool, table)
+    v = gather_paged_kv(v_pool, table)
+    return prefill_attention_ref(q, k, v, q_offset, kv_valid_len)
+
+
 def fused_linear_ref(
     x: jax.Array,
     w: jax.Array,

@@ -13,7 +13,10 @@ cycle through the tenants unless ``--adapter-ids`` pins them):
 
 The engine defaults to the paged KV cache (block pool + block tables +
 shared-prefix reuse, DESIGN §10); ``--dense`` restores the dense
-slots×max_len layout. Flag combinations are validated up front with
+slots×max_len layout. Prefill is chunked into the serving step
+(``--prefill-chunk`` tokens per mixed step, DESIGN §11): a long prompt
+never stalls the other streams' decode. Flag combinations are validated
+up front with
 readable ``SystemExit`` messages — a bad ``--page-size`` should not
 surface as a jit-time shape error three layers down.
 """
@@ -34,6 +37,10 @@ def validate_args(args) -> None:
     """Reject bad flag combinations before any compilation starts."""
     if args.decode_chunk < 1:
         raise SystemExit(f"--decode-chunk must be >= 1, got {args.decode_chunk}")
+    if args.prefill_chunk < 1:
+        raise SystemExit(
+            f"--prefill-chunk must be >= 1, got {args.prefill_chunk}"
+        )
     if args.max_new < 1:
         raise SystemExit(f"--max-new must be >= 1, got {args.max_new}")
     if args.dense:
@@ -77,6 +84,12 @@ def main(argv=None):
                          "classic per-token loop; greedy outputs are "
                          "identical across chunk sizes, sampled ones "
                          "follow a different rng stream)")
+    ap.add_argument("--prefill-chunk", type=int, default=256,
+                    help="per-step prefill token budget: admitted prompts "
+                         "are consumed this many tokens per mixed step "
+                         "while decode slots keep advancing (capped at "
+                         "--max-len; greedy outputs are identical across "
+                         "chunk sizes)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=0.0,
@@ -135,6 +148,7 @@ def main(argv=None):
         model, params, slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         adapter_store=store, decode_chunk=args.decode_chunk,
+        prefill_chunk=args.prefill_chunk,
         paged=not args.dense,
         page_size=16 if args.page_size is None else args.page_size,
         num_blocks=args.num_blocks,

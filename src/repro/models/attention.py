@@ -32,7 +32,12 @@ def dense_attention(
     q_offset=0,
     kv_valid_len=None,
 ) -> jax.Array:
-    """q (B,Sq,H,hd); k,v (B,Skv,Hkv,hd) -> (B,Sq,H,hd). f32 softmax."""
+    """q (B,Sq,H,hd); k,v (B,Skv,Hkv,hd) -> (B,Sq,H,hd). f32 softmax.
+
+    ``q_offset`` may be a scalar (one logical start for the whole batch)
+    or a (B,) vector (chunked prefill: every slot sits at its own
+    frontier, so the causal mask is per-row).
+    """
     b, sq, h, hd = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     qg = _grouped(q, hkv)
@@ -41,9 +46,15 @@ def dense_attention(
     s = s * scale
     mask = None
     if causal:
-        qpos = q_offset + jnp.arange(sq)
-        mask = qpos[:, None] >= jnp.arange(skv)[None, :]  # (Sq,Skv)
-        mask = mask[None, None, None]
+        qoff = jnp.asarray(q_offset)
+        if qoff.ndim == 0:
+            qpos = qoff + jnp.arange(sq)
+            mask = qpos[:, None] >= jnp.arange(skv)[None, :]  # (Sq,Skv)
+            mask = mask[None, None, None]
+        else:
+            qpos = qoff[:, None] + jnp.arange(sq)[None, :]  # (B,Sq)
+            mask = qpos[:, :, None] >= jnp.arange(skv)[None, None, :]
+            mask = mask[:, None, None]  # (B,1,1,Sq,Skv)
     if kv_valid_len is not None:
         vl = jnp.asarray(kv_valid_len)
         vl = vl.reshape(-1, 1, 1, 1, 1) if vl.ndim else vl  # (B,1,1,1,1) or scalar
@@ -209,6 +220,68 @@ def attention(
         return ops.decode_attention(q, k, v, kv_valid_len)
     return dense_attention(
         q, k, v, causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len
+    )
+
+
+def chunk_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cfg,
+    *,
+    q_offset,
+    kv_valid_len,
+) -> jax.Array:
+    """Chunked-prefill attention against a dense slot cache (DESIGN §11).
+
+    q (B, C, H, hd) is a per-slot query chunk whose k/v were already
+    written into the (B, Smax, Hkv, hd) cache; ``q_offset`` (B,) anchors
+    each slot's intra-chunk causal mask, ``kv_valid_len`` (B,) its
+    post-write frontier. The dense masked softmax IS today's prefill
+    numerics per query row (masked columns contribute exact zeros), which
+    is what keeps chunked greedy outputs token-identical to the one-shot
+    prefill they replace.
+    """
+    return dense_attention(
+        q, k, v, causal=True, q_offset=q_offset, kv_valid_len=kv_valid_len
+    )
+
+
+def paged_prefill_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    table: jax.Array,
+    cfg,
+    *,
+    q_offset,
+    kv_valid_len,
+) -> jax.Array:
+    """Chunked-prefill attention against a paged block pool (DESIGN §11).
+
+    Pallas backends take the query-chunk × paged-KV kernel — the block
+    table and per-slot (q_offset, kv_valid_len) ride as scalar prefetch,
+    physical pages DMA straight from the pool. The jnp backend (and
+    pools too small to amortise page-grain DMA) gathers the table's
+    pages into the contiguous view and runs the same dense masked
+    softmax as :func:`chunk_attention`, keeping paged-vs-dense chunked
+    prefill bit-identical on the oracle backend.
+    """
+    from repro.kernels import ref
+
+    page, n_pages = k_pool.shape[1], table.shape[1]
+    if (
+        ops.get_backend() != "jnp"
+        and q.shape[2] % k_pool.shape[2] == 0
+        and page * n_pages >= DECODE_KERNEL_MIN_LEN
+    ):
+        return ops.prefill_attention(
+            q, k_pool, v_pool, table, q_offset, kv_valid_len
+        )
+    k = ref.gather_paged_kv(k_pool, table)
+    v = ref.gather_paged_kv(v_pool, table)
+    return dense_attention(
+        q, k, v, causal=True, q_offset=q_offset, kv_valid_len=kv_valid_len
     )
 
 

@@ -138,6 +138,49 @@ def paged_cache_update(cache: jax.Array, new: jax.Array, table, pos) -> jax.Arra
     )
 
 
+def chunk_cache_update(
+    cache: jax.Array, new: jax.Array, q_offset, q_len
+) -> jax.Array:
+    """Write a per-slot token chunk ``new`` (B,C,…) into ``cache`` (B,S,…).
+
+    Slot ``b``'s chunk lands at rows ``q_offset[b] .. q_offset[b] +
+    q_len[b] - 1``; chunk columns ``i >= q_len[b]`` (pad tokens, and the
+    whole row of an idle slot with ``q_len = 0``) scatter to an
+    out-of-range row and are dropped — the chunked twin of the megastep's
+    masked no-op write.
+    """
+    b, c = new.shape[:2]
+    smax = cache.shape[1]
+    i = jnp.arange(c)[None, :]
+    pos = jnp.asarray(q_offset, jnp.int32)[:, None] + i  # (B, C)
+    pos = jnp.where(i < jnp.asarray(q_len, jnp.int32)[:, None], pos, smax)
+    return cache.at[jnp.arange(b)[:, None], pos].set(
+        new.astype(cache.dtype), mode="drop"
+    )
+
+
+def paged_chunk_cache_update(
+    cache: jax.Array, new: jax.Array, table, q_offset, q_len
+) -> jax.Array:
+    """Write a per-slot token chunk ``new`` (B,C,…) into a block pool
+    ``cache`` (N,P,…) through each slot's *write* table.
+
+    ``table`` (B, n_pages) int32 maps logical page → physical block and
+    carries the out-of-range sentinel on pages the slot must not write —
+    unallocated pages AND pages shared with another live request (their
+    contents are someone else's KV); chunk columns ``i >= q_len[b]`` are
+    forced onto the sentinel too, so pads and idle slots drop cleanly.
+    """
+    n, page = cache.shape[0], cache.shape[1]
+    b, c = new.shape[:2]
+    i = jnp.arange(c)[None, :]
+    pos = jnp.asarray(q_offset, jnp.int32)[:, None] + i  # (B, C)
+    pg = jnp.minimum(pos // page, table.shape[1] - 1)
+    blk = jnp.take_along_axis(table, pg, axis=1)
+    blk = jnp.where(i < jnp.asarray(q_len, jnp.int32)[:, None], blk, n)
+    return cache.at[blk, pos % page].set(new.astype(cache.dtype), mode="drop")
+
+
 def decode_positions(pos, batch: int) -> jax.Array:
     """(B,1) rope positions from scalar or per-slot pos."""
     pos = jnp.asarray(pos)

@@ -45,6 +45,16 @@ class Model:
     def decode_step(self, params, adapters, cache, batch):
         return self.mod.decode_step(self.cfg, params, adapters, cache, batch)
 
+    def prefill_chunk(self, params, adapters, cache, batch):
+        """Mixed prefill+decode chunk step for the serving engine — one
+        compiled graph advances decode slots a token while prefilling
+        slots consume their next prompt chunk (KV-cache LMs only)."""
+        if not hasattr(self.mod, "prefill_chunk"):
+            raise ValueError(
+                f"family {self.cfg.family!r} has no chunked prefill"
+            )
+        return self.mod.prefill_chunk(self.cfg, params, adapters, cache, batch)
+
     def init_cache(self, batch: int, max_len: int):
         return self.mod.init_cache(self.cfg, batch, max_len)
 

@@ -15,18 +15,25 @@ from repro.core.delta import BatchedDelta, Delta
 from repro.distributed.context import constrain, constrain_inner
 from repro.kernels import ops
 from repro.models import moe as moe_lib
-from repro.models.attention import attention, paged_attention
+from repro.models.attention import (
+    attention,
+    chunk_attention,
+    paged_attention,
+    paged_prefill_attention,
+)
 from repro.models.layers import (
     ad_get,
     alinear,
     apply_mrope,
     apply_rope,
     cache_update,
+    chunk_cache_update,
     compute_dtype,
     decode_positions,
     init_linear,
     init_norm,
     paged_cache_update,
+    paged_chunk_cache_update,
     rms_norm,
     softmax_cross_entropy,
 )
@@ -264,7 +271,7 @@ def prefill(cfg, params, adapters, batch):
     """Full forward over the prompt; returns (last-token logits, cache).
 
     ``batch["last_pos"]`` (B,) optionally names the final *real* token per
-    sequence for right-padded (bucketed) prompts: logits are gathered there
+    sequence for right-padded batched prompts: logits are gathered there
     instead of at -1. Right pads are exact under causal attention — real
     positions never attend to them — and their garbage cache rows are
     overwritten by decode before ``kv_valid_len`` reaches them.
@@ -286,6 +293,67 @@ def prefill(cfg, params, adapters, batch):
     h, (ck, cv) = jax.lax.scan(body, h, (blocks, a_blocks))
     last = batch.get("last_pos")
     hs = h[:, -1:] if last is None else jnp.take_along_axis(h, last[:, None, None], axis=1)
+    h = rms_norm(hs, params["final_norm"], cfg.norm_eps)
+    logits = _head_logits(cfg, params, adapters, h)[:, 0]
+    return logits, {"k": ck, "v": cv}
+
+
+def prefill_chunk(cfg, params, adapters, cache, batch):
+    """Mixed prefill+decode chunk step against a live KV cache (DESIGN §11).
+
+    Every serving slot contributes one row of a (B, C) token chunk:
+    prefilling slots carry their next ``q_len`` prompt tokens, decode
+    slots the degenerate chunk ``q_len = 1`` (their last sampled token),
+    idle slots ``q_len = 0``. Each layer writes the chunk's k/v into the
+    cache *first* (pads and idle rows drop; paged writes route through
+    the write table so shared prefix pages are never rewritten), then
+    attends with the two-sided mask — intra-chunk causal from
+    ``q_offset`` plus the post-write frontier ``q_offset + q_len``.
+    Logits are gathered at ``last_idx`` (the row's final real token), so
+    a slot whose prompt completes this chunk samples its first token in
+    the same compiled step that decode slots sample their next.
+
+    batch: {"tokens": (B, C) int32, "q_offset": (B,) int32,
+    "q_len": (B,) int32, "last_idx": (B,) int32,
+    ["block_table"/"write_table": (B, n_pages) int32 — paged serving]}.
+    """
+    dt = compute_dtype(cfg)
+    tokens = batch["tokens"]
+    q_offset = batch["q_offset"]
+    q_len = batch["q_len"]
+    table = batch.get("block_table")
+    wtable = batch.get("write_table")
+    b, c = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(dt)
+    positions = q_offset[:, None] + jnp.arange(c)[None, :]
+    vl = q_offset + q_len
+    blocks, a_blocks = _split_blocks(params, adapters)
+
+    def body(hh, xs):
+        p, a, ck, cv = xs
+        x = rms_norm(hh, p["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, p, a, x, positions, None)
+        if table is None:
+            ck = chunk_cache_update(ck, k, q_offset, q_len)
+            cv = chunk_cache_update(cv, v, q_offset, q_len)
+            o = chunk_attention(
+                q, ck, cv, cfg, q_offset=q_offset, kv_valid_len=vl
+            )
+        else:
+            ck = paged_chunk_cache_update(ck, k, wtable, q_offset, q_len)
+            cv = paged_chunk_cache_update(cv, v, wtable, q_offset, q_len)
+            o = paged_prefill_attention(
+                q, ck, cv, table, cfg, q_offset=q_offset, kv_valid_len=vl
+            )
+        hh = hh + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
+        x = rms_norm(hh, p["mlp_norm"], cfg.norm_eps)
+        y, _ = _mlp(cfg, p, a, x)
+        return hh + y, (ck, cv)
+
+    h, (ck, cv) = jax.lax.scan(
+        body, h, (blocks, a_blocks, cache["k"], cache["v"])
+    )
+    hs = jnp.take_along_axis(h, batch["last_idx"][:, None, None], axis=1)
     h = rms_norm(hs, params["final_norm"], cfg.norm_eps)
     logits = _head_logits(cfg, params, adapters, h)[:, 0]
     return logits, {"k": ck, "v": cv}

@@ -1,14 +1,19 @@
 """Multi-tenant, adapter-aware serving subsystem.
 
-engine    — thin orchestration (the public ``ServeEngine``): decode runs
-            as a compiled multi-token megastep, one device→host transfer
-            per ``decode_chunk`` tokens (DESIGN §9); ``paged=True`` swaps
-            the dense slot cache for the block pool (DESIGN §10);
-scheduler — FIFO admission + slot assignment + slot state as arrays,
-            block-aware placement and preemption for the paged engine;
+engine    — thin orchestration (the public ``ServeEngine``): prefill is
+            chunked and fused into the serving step — one compiled mixed
+            graph advances decode slots a token while prefilling slots
+            consume their next ``prefill_chunk`` prompt tokens (DESIGN
+            §11) — and pure decode runs as a compiled multi-token
+            megastep (DESIGN §9); either way one device→host transfer
+            per step. ``paged=True`` swaps the dense slot cache for the
+            block pool (DESIGN §10);
+scheduler — FIFO admission + slot assignment + chunk planning + slot
+            state as arrays, block-aware placement and preemption for
+            the paged engine;
 kv_cache  — the dense slot cache (``KVCache``) and the paged block pool
-            (``PagedKVCache``: block tables, free-list with refcounts,
-            shared-prefix page dedup);
+            (``PagedKVCache``: read/write block tables, free-list with
+            refcounts, shared-prefix page dedup gated on written pages);
 sampler   — greedy/temperature/top-k/top-p fused into the jitted calls;
 adapters  — tenant registry of unmerged NeuroAda deltas (stacked once,
             cached until register/remove).

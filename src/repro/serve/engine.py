@@ -2,44 +2,54 @@
 
 The subsystem splits along its natural seams:
 
-* :mod:`repro.serve.scheduler` — FIFO admission, slot assignment,
-  per-request adapter ids, slot state as dense arrays (host-side, no jax);
-* :mod:`repro.serve.kv_cache`  — the shared slot cache: one jitted splice
-  per admission bucket, per-slot positions as device state;
+* :mod:`repro.serve.scheduler` — FIFO admission, slot assignment, chunk
+  planning, slot state as dense arrays (host-side, no jax);
+* :mod:`repro.serve.kv_cache`  — the dense slot cache and the paged
+  block pool: placement only, every cache write happens in-graph;
 * :mod:`repro.serve.sampler`   — greedy/temperature/top-k sampling fused
   into the jitted calls;
 * :mod:`repro.serve.adapters`  — the tenant registry: N unmerged NeuroAda
   ``(indices, values)`` trees stacked (and cached) for the batched kernel
   path.
 
-One frozen base model serves every tenant: the decode step applies each
-slot's ``(k, d_out)`` delta in-flight via ``ops.delta_apply_batched``
+One frozen base model serves every tenant: each compiled step applies
+each slot's ``(k, d_out)`` delta in-flight via ``ops.delta_apply_batched``
 (jnp oracle or Pallas per-slot gather) instead of merging weights ahead
-of time. Prefill is bucketed — prompts pad to the next power-of-two
-length and concurrent admissions share one compiled call per
-(length-bucket, batch-bucket).
+of time.
 
-Decode is a **megastep**: one jitted ``lax.scan`` over up to
-``decode_chunk`` tokens, carrying (kv cache, last tokens, per-slot
-positions, active mask, max_new budget) as device state with sampling,
-EOS detection, cache advance and per-slot masking all in-graph. A step
-costs exactly ONE device→host transfer — the whole chunk's token matrix —
-instead of one per token; finished slots become masked no-ops until the
-chunk drains, and freed slots re-admit at chunk boundaries. With
-``decode_chunk=1`` the megastep reproduces the per-token loop exactly
-(same tokens, same Request lifecycle), so chunking is a pure throughput
-knob (see DESIGN §9).
+Prefill is **chunked and fused into the serving step** (DESIGN §11): the
+scheduler carves each admitted prompt into ``prefill_chunk``-token
+chunks under a per-step token budget, and while any slot owes prompt
+chunks the engine runs ONE jitted mixed step — decode slots advance one
+token while prefilling slots consume their next chunk, writing k/v
+straight into their cache rows/paged blocks and sampling a first token
+the step their prompt completes. No step runs longer than the budget
+plus one decode token per slot, so a long prompt can no longer stall
+every in-flight stream behind a stop-the-world prefill; and because the
+mixed buffer has ONE compiled shape, the per-pow2-bucket prefill graphs
+(and their splice subsystem) are gone.
+
+Once no prompt chunks are owed, decode runs as a **megastep**: one
+jitted ``lax.scan`` over up to ``decode_chunk`` tokens, carrying (kv
+cache, last tokens, per-slot positions, active mask, max_new budget) as
+device state with sampling, EOS detection, cache advance and per-slot
+masking all in-graph. Every compiled step — mixed or megastep — costs
+exactly ONE device→host transfer; finished slots become masked no-ops
+until the chunk drains, and freed slots re-admit at step boundaries.
+With ``decode_chunk=1`` the megastep reproduces the per-token loop
+exactly (same tokens, same Request lifecycle), so chunking is a pure
+throughput knob (see DESIGN §9).
 
 With ``paged=True`` (DESIGN §10) the dense slot cache becomes a shared
 block pool: capacity is ``num_blocks × page_size`` tokens actually in
 flight, not ``slots × max_len`` reservations. Admission is block-aware
 (a request leaves the queue only when the pool covers its prompt, with
 same-tenant page-aligned prefixes deduplicated against refcounted shared
-blocks), chunk boundaries pre-reserve each active slot's next
-``decode_chunk`` positions — preempting the *youngest* request back to
-the queue head on OOM (it re-prefills over ``prompt + out`` later and
-continues identically) — and the megastep carries the block table as
-device state so the whole chunk still costs one transfer.
+blocks), step boundaries pre-reserve every position a compiled body can
+write — preempting the *youngest* request back to the queue head on OOM
+(mid-prefill victims included: they re-prefill over ``prompt + out``
+later and continue identically) — and both the read and write block
+tables ride the compiled steps as device state.
 """
 
 from __future__ import annotations
@@ -57,13 +67,6 @@ from repro.serve.scheduler import Request, Scheduler
 __all__ = ["Request", "ServeEngine"]
 
 
-def _next_pow2(n: int, lo: int = 1) -> int:
-    p = lo
-    while p < n:
-        p *= 2
-    return p
-
-
 class ServeEngine:
     def __init__(
         self,
@@ -78,10 +81,10 @@ class ServeEngine:
         top_p: float = 0.0,
         rng=None,
         adapter_store: AdapterStore | None = None,
-        min_prefill_bucket: int = 16,
         base_dtype: str = "fp32",
         quant_block: int = 64,
         decode_chunk: int = 1,
+        prefill_chunk: int = 256,
         paged: bool = False,
         page_size: int = 16,
         num_blocks: int | None = None,
@@ -92,6 +95,8 @@ class ServeEngine:
             raise ValueError(f"ServeEngine supports KV LMs, got {model.cfg.family}")
         if decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         if paged and (page_size < 1 or page_size & (page_size - 1)):
             raise ValueError(f"page_size must be a power of two, got {page_size}")
         from repro.peft import BASE_DTYPES, quantize_base
@@ -112,11 +117,16 @@ class ServeEngine:
         self.temperature = temperature
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.store = adapter_store
-        self.min_prefill_bucket = min_prefill_bucket
         self.decode_chunk = decode_chunk
+        # the chunk buffer width IS the per-step prefill token budget: a
+        # mixed step consumes at most this many prompt tokens across all
+        # slots, bounding per-step latency at budget + one decode token
+        # per decode slot. One compiled shape serves every prompt length.
+        self.prefill_chunk = min(prefill_chunk, max_len)
         self.paged = paged
-        self.transfers = 0  # device→host fetches: one per decode chunk
+        self.transfers = 0  # device→host fetches: one per compiled step
         self.preemptions = 0  # block-pool OOM evictions (paged only)
+        self.preemptions_mid_prefill = 0  # … of which mid-prefill victims
 
         self.scheduler = Scheduler(slots)
         if paged:
@@ -129,7 +139,6 @@ class ServeEngine:
         else:
             self.kv = KVCache(model, slots, max_len)
         self.sampler = Sampler(model.cfg.vocab_size, top_k=top_k, top_p=top_p)
-        self._pending_dst: dict[int, np.ndarray] = {}  # slot -> splice blocks
 
         L = model.cfg.num_layers
         eos, mlen, chunk = eos_id, max_len, decode_chunk
@@ -147,18 +156,41 @@ class ServeEngine:
                 )
             return out
 
-        def prefill_plain(p, tokens, last_pos, temps, key):
-            logits, cache = model.prefill(
-                p, None, {"tokens": tokens, "last_pos": last_pos}
-            )
-            return self.sampler(logits, temps, key), cache
+        def chunkstep(p, adapters, table, wtable, cache, tokens, q_offset,
+                      q_len, last_idx, temps, key):
+            """Compiled mixed prefill+decode step (DESIGN §11).
 
-        def prefill_ad(p, aidx, aval, aid, tokens, last_pos, temps, key):
+            One (slots, prefill_chunk) token buffer: prefilling slots
+            carry their next prompt chunk, decode slots the degenerate
+            one-token chunk, idle/stalled slots ``q_len = 0`` no-ops.
+            K/v land in-graph (write table gates shared paged blocks),
+            logits gather at each row's last real token, sampling is
+            fused — the (slots,) token vector is the step's single host
+            transfer. Positions advance to ``q_offset + q_len`` for
+            every role (decode +1, prefill +take, idle frozen).
+            """
+            batch = {"tokens": tokens, "q_offset": q_offset,
+                     "q_len": q_len, "last_idx": last_idx}
+            if table is not None:
+                batch["block_table"] = table
+                batch["write_table"] = wtable
+            logits, cache = model.prefill_chunk(p, adapters, cache, batch)
+            toks = self.sampler(logits, temps, key)
+            return cache, q_offset + q_len, toks
+
+        def chunkstep_plain(p, cache, *args):
+            return chunkstep(p, None, None, None, cache, *args)
+
+        def chunkstep_ad(p, aidx, aval, aid, cache, *args):
             adapters = batched_adapters(aidx, aval, aid)
-            logits, cache = model.prefill(
-                p, adapters, {"tokens": tokens, "last_pos": last_pos}
-            )
-            return self.sampler(logits, temps, key), cache
+            return chunkstep(p, adapters, None, None, cache, *args)
+
+        def chunkstep_paged_plain(p, table, wtable, cache, *args):
+            return chunkstep(p, None, table, wtable, cache, *args)
+
+        def chunkstep_paged_ad(p, aidx, aval, aid, table, wtable, cache, *args):
+            adapters = batched_adapters(aidx, aval, aid)
+            return chunkstep(p, adapters, table, wtable, cache, *args)
 
         def megastep(p, adapters, table, cache, tok, pos, active, remaining,
                      temps, key):
@@ -231,8 +263,10 @@ class ServeEngine:
                 key,
             )
 
-        self._prefill_plain = jax.jit(prefill_plain)
-        self._prefill_ad = jax.jit(prefill_ad)
+        self._chunkstep_plain = jax.jit(chunkstep_plain)
+        self._chunkstep_ad = jax.jit(chunkstep_ad)
+        self._chunkstep_paged_plain = jax.jit(chunkstep_paged_plain)
+        self._chunkstep_paged_ad = jax.jit(chunkstep_paged_ad)
         self._megastep_plain = jax.jit(megastep_plain)
         self._megastep_ad = jax.jit(megastep_ad)
         self._megastep_paged_plain = jax.jit(megastep_paged_plain)
@@ -261,9 +295,6 @@ class ServeEngine:
             store_rev=self.store.removals if self.store is not None else 0,
         )
 
-    def _bucket(self, plen: int) -> int:
-        return min(_next_pow2(plen, self.min_prefill_bucket), self.max_len)
-
     def _check_adapter_ids(self) -> None:
         """Requests freeze their adapter id at submit; a store.remove()
         after that shifts ids under them — including *middle* removals
@@ -285,111 +316,159 @@ class ServeEngine:
 
     def _try_place(self, slot: int, req: Request) -> bool:
         """Block-aware admission gate (paged): reserve the prompt's pages
-        (shared prefix pages dedup against live blocks) PLUS the first
-        decode chunk's headroom, or refuse. Without the headroom a
-        constrained pool thrashes: the request prefills, the chunk
-        reservation comes up short, and the freshly admitted request —
-        the youngest — is the first preempted, burning one full prefill
-        per generated token."""
+        (shared prefix pages dedup against live, already-written blocks)
+        PLUS the first decode chunk's headroom, or refuse. Without the
+        headroom a constrained pool thrashes: the request prefills, the
+        chunk reservation comes up short, and the freshly admitted
+        request — the youngest — is the first preempted, burning one full
+        prefill per generated token. A successful prefix dedup fast-
+        forwards the request's chunk walk past the resident pages — their
+        k/v are already in the pool, so only the private tail (and at
+        least the final basis token, which samples the next one) still
+        runs through the mixed step."""
         toks = req.prompt + req.out
-        dst = self.kv.admit(slot, toks, req.adapter_id)
-        if dst is None:
+        shared_lead = self.kv.admit(slot, toks, req.adapter_id)
+        if shared_lead is None:
             return False
         if not self.kv.reserve(
             slot, min(len(toks) + self.decode_chunk, self.max_len)
         ):
             self.kv.evict(slot)  # full rollback: prompt pages + partials
             return False
-        self._pending_dst[slot] = dst
+        req.prefilled = min(shared_lead, req.prefill_target - 1)
         return True
 
-    def _admit(self, key) -> None:
-        admitted = self.scheduler.admissible(
-            self._try_place if self.paged else None
-        )
-        if not admitted:
-            return
-        stacked = self.store.stacked() if self.store is not None else None
-        buckets: dict[int, list[tuple[int, Request]]] = {}
-        for slot, req in admitted:
-            # re-prefill basis is prompt + out: a preempted request resumes
-            # from its full generated sequence (out is empty on first entry)
-            buckets.setdefault(
-                self._bucket(len(req.prompt) + len(req.out)), []
-            ).append((slot, req))
-        for i, (blen, group) in enumerate(sorted(buckets.items())):
-            bsz = _next_pow2(len(group))
-            tokens = np.zeros((bsz, blen), np.int32)
-            last_pos = np.zeros((bsz,), np.int32)
-            aid = np.zeros((bsz,), np.int32)
-            temps = np.zeros((bsz,), np.float32)
-            # pad rows scatter to an out-of-range slot id -> dropped
-            slot_ids = np.full((bsz,), self.slots, np.int32)
-            plens = np.zeros((bsz,), np.int32)
-            if self.paged:
-                n_pages = -(-blen // self.kv.page_size)
-                dst_blocks = np.full(
-                    (bsz, n_pages), self.kv.num_blocks, np.int32
-                )
-            for row, (slot, req) in enumerate(group):
-                toks = req.prompt + req.out
-                plen = len(toks)
-                tokens[row, :plen] = toks
-                last_pos[row] = plen - 1
-                aid[row] = req.adapter_id
-                temps[row] = req.temperature
-                slot_ids[row] = slot
-                plens[row] = plen
-                if self.paged:
-                    dst = self._pending_dst.pop(slot)
-                    dst_blocks[row, : len(dst)] = dst
-            args = (
-                jnp.asarray(tokens), jnp.asarray(last_pos),
-                jnp.asarray(temps), jax.random.fold_in(key, i),
-            )
-            if stacked is None:
-                first, pcache = self._prefill_plain(self.params, *args)
-            else:
-                first, pcache = self._prefill_ad(
-                    self.params, *stacked, jnp.asarray(aid), *args
-                )
-            if self.paged:
-                self.kv.splice_group(pcache, slot_ids, plens, dst_blocks)
-            else:
-                self.kv.splice_group(pcache, slot_ids, plens)
-            first_np = jax.device_get(first)
-            for row, (slot, req) in enumerate(group):
-                req.out.append(int(first_np[row]))
-                self._maybe_finish(slot, req)
+    def _admit(self) -> None:
+        """Token-budget admission: queued requests enter free slots with
+        zero prefill progress — the mixed chunk steps that follow consume
+        their prompts ``prefill_chunk`` tokens at a time. No compilation,
+        no splice, no pow2 buckets: admission is pure bookkeeping."""
+        self.scheduler.admissible(self._try_place if self.paged else None)
 
     # --------------------------------------------------------------- step
 
     def step(self) -> bool:
-        """One decode chunk over all active slots. False when fully idle.
+        """One compiled step over all active slots. False when fully idle.
 
-        With ``decode_chunk=1`` this is the classic per-token step; larger
-        chunks emit up to ``decode_chunk`` tokens per slot per call with
-        one device→host transfer for the whole chunk.
+        While any admitted prompt still owes chunks this is a mixed
+        prefill+decode step (one prompt chunk under the token budget,
+        one token per decode slot); otherwise it is a decode megastep
+        over up to ``decode_chunk`` tokens. Either way: one jitted call,
+        one device→host transfer.
         """
-        self.rng, k_admit, k_chunk = jax.random.split(self.rng, 3)
+        self.rng, k_step = jax.random.split(self.rng)
         self._check_adapter_ids()
-        self._admit(k_admit)
-        # a request can finish AT admission (first token is EOS, max_new=1),
-        # freeing its slot with the queue still non-empty — keep admitting,
-        # or queued requests strand behind an idle engine
-        while not self.scheduler.has_active() and self.scheduler.has_queued():
-            self.rng, k_admit = jax.random.split(self.rng)
-            self._admit(k_admit)
+        self._admit()
         if not self.scheduler.has_active():
             return False
+        if self.scheduler.has_prefilling():
+            self._chunk_step(k_step)
+        else:
+            self._decode_step(k_step)
+        return True
+
+    # ------------------------------------------------- mixed chunk step
+
+    def _chunk_step(self, key) -> None:
+        """One mixed prefill+decode step (DESIGN §11): carve the chunk
+        plan, pre-reserve the positions it writes (paged), run the one
+        compiled mixed graph, then replay emissions into the Request
+        lifecycle and register freshly written prefix pages for dedup."""
         if self.paged:
-            self._reserve_chunk()
+            self._reserve(1)
+        plan = self.scheduler.chunk_plan(self.prefill_chunk, self.kv.pos_host)
+        stacked = self.store.stacked() if self.store is not None else None
+        args = (
+            self.kv.data, jnp.asarray(plan["tokens"]),
+            jnp.asarray(plan["q_offset"]), jnp.asarray(plan["q_len"]),
+            jnp.asarray(plan["last_idx"]), jnp.asarray(plan["temps"]), key,
+        )
+        if self.paged:
+            tables = (self.kv.table_device(), self.kv.write_table_device())
+            if stacked is None:
+                out = self._chunkstep_paged_plain(self.params, *tables, *args)
+            else:
+                out = self._chunkstep_paged_ad(
+                    self.params, *stacked, jnp.asarray(plan["aid"]), *tables,
+                    *args,
+                )
+        elif stacked is None:
+            out = self._chunkstep_plain(self.params, *args)
+        else:
+            out = self._chunkstep_ad(
+                self.params, *stacked, jnp.asarray(plan["aid"]), *args
+            )
+        self.kv.data, pos_dev, toks_dev = out
+        # ONE device→host transfer for the whole mixed step: the sampled
+        # token vector. Positions advance deterministically to
+        # q_offset + q_len, so the host mirrors them without a fetch.
+        toks = jax.device_get(toks_dev)
+        self.transfers += 1
+        self.kv.sync(pos_dev, plan["q_offset"] + plan["q_len"])
+        for s, req in enumerate(self.scheduler.active):
+            if req is None:
+                continue
+            if plan["q_len"][s] and req.mid_prefill:
+                req.prefilled += int(plan["q_len"][s])
+                if self.paged:
+                    self.kv.mark_prefilled(s, req.prefilled)
+            if plan["emit"][s]:
+                req.out.append(int(toks[s]))
+                self._maybe_finish(s, req)
+
+    def _reserve(self, horizon: int) -> None:
+        """Pre-reserve every position the next compiled step can write
+        (paged): each decode slot gets pages covering ``pos + horizon``
+        (capped at ``max_len``) — one token for the mixed step, the full
+        ``decode_chunk`` for the megastep; prefill chunks land in pages
+        admission already placed, so mid-prefill slots need nothing. On
+        shortfall the youngest admitted request — possibly itself
+        mid-prefill — is preempted back to the queue head (its progress
+        resets with its pages; it re-prefills over ``prompt + out`` later
+        and its greedy continuation is identical) and the round retries.
+        A single admitted request always fits (``num_blocks`` covers one
+        max-length request by construction).
+        """
+        while True:
+            short = False
+            for s, req in enumerate(self.scheduler.active):
+                if req is None or req.mid_prefill:
+                    continue
+                target = min(int(self.kv.pos_host[s]) + horizon, self.max_len)
+                if not self.kv.reserve(s, target):
+                    short = True
+                    break
+            if not short:
+                return
+            self._preempt_youngest()
+
+    def _preempt_youngest(self) -> None:
+        victim = self.scheduler.youngest_active()
+        if sum(r is not None for r in self.scheduler.active) <= 1:
+            raise RuntimeError(
+                "paged KV pool cannot hold a single request's chunk — "
+                "num_blocks too small for max_len (validated at init; "
+                "this indicates refcount leakage)"
+            )
+        if self.scheduler.active[victim].mid_prefill:
+            self.preemptions_mid_prefill += 1
+        self.scheduler.preempt(victim)
+        self.kv.evict(victim)
+        self.preemptions += 1
+
+    # ---------------------------------------------------- decode megastep
+
+    def _decode_step(self, key) -> None:
+        """One decode megastep over all active slots: up to
+        ``decode_chunk`` tokens per slot in one compiled call."""
+        if self.paged:
+            self._reserve(self.decode_chunk)
         st = self.scheduler.slot_arrays()
         stacked = self.store.stacked() if self.store is not None else None
         args = (
             self.kv.data, jnp.asarray(st["tokens"]), self.kv.pos,
             jnp.asarray(st["active"]), jnp.asarray(st["remaining"]),
-            jnp.asarray(st["temps"]), k_chunk,
+            jnp.asarray(st["temps"]), key,
         )
         if self.paged:
             args = (self.kv.table_device(),) + args
@@ -421,42 +500,6 @@ class ServeEngine:
                 # completing off it keeps host and device lifecycles identical
                 self.scheduler.complete(s)
                 self.kv.evict(s)
-        return True
-
-    def _reserve_chunk(self) -> None:
-        """Pre-reserve every position the next chunk can write (paged).
-
-        Each active slot gets pages covering ``pos + decode_chunk`` (capped
-        at ``max_len``) so the in-graph loop never needs a block. On
-        shortfall, the *youngest* admitted request is preempted — evicted
-        back to the queue head; it re-prefills over ``prompt + out`` later
-        and its greedy continuation is identical — and the round retries.
-        A single admitted request always fits (``num_blocks`` covers one
-        max-length request by construction), so the loop terminates.
-        """
-        while True:
-            short = False
-            for s, req in enumerate(self.scheduler.active):
-                if req is None:
-                    continue
-                target = min(
-                    int(self.kv.pos_host[s]) + self.decode_chunk, self.max_len
-                )
-                if not self.kv.reserve(s, target):
-                    short = True
-                    break
-            if not short:
-                return
-            victim = self.scheduler.youngest_active()
-            if sum(r is not None for r in self.scheduler.active) <= 1:
-                raise RuntimeError(
-                    "paged KV pool cannot hold a single request's chunk — "
-                    "num_blocks too small for max_len (validated at init; "
-                    "this indicates refcount leakage)"
-                )
-            self.scheduler.preempt(victim)
-            self.kv.evict(victim)
-            self.preemptions += 1
 
     def _maybe_finish(self, slot: int, req: Request) -> None:
         if (

@@ -2,18 +2,18 @@
 
 :class:`KVCache` is the original dense layout — ``(L, slots, max_len,
 KV, hd)`` trees where every slot pre-reserves ``max_len`` rows.
-Positions are *device state*: the decode megastep carries them through
-its on-device loop and hands the final vector back via :meth:`sync`; a
-host ``pos_host`` mirror exists only for admission bookkeeping
-(``full`` checks, evict).
+Positions are *device state*: both the decode megastep and the mixed
+prefill+decode chunk step carry them through their compiled bodies and
+hand the final vector back via :meth:`sync`; a host ``pos_host`` mirror
+exists only for admission bookkeeping (``full`` checks, evict, chunk
+planning).
 
-Prefill produces a ``(L, B, S_bucket, KV, hd)`` cache for a whole
-admission bucket; :meth:`splice_group` scatters every row of the bucket
-into its slot — k, v, *and* the position vector — in ONE jitted call
-(the seed version dispatched eager ``dynamic_update_slice`` per tree key
-per admission). Rows past the true prompt length contain pad garbage —
-exact anyway, because decode overwrites position ``p`` before
-``kv_valid_len`` ever reaches it (see transformer.prefill).
+All cache *writes* happen in-graph (DESIGN §11): prompt chunks land via
+``layers.chunk_cache_update`` / ``paged_chunk_cache_update`` inside the
+mixed step, decode tokens via ``cache_update`` / ``paged_cache_update``
+inside the megastep. The managers here only do placement — which blocks
+a slot owns — never data movement; the bucketed-prefill splice subsystem
+this replaces is gone.
 
 :class:`PagedKVCache` replaces the per-slot reservation with a shared
 block pool: ``(L, num_blocks, page_size, KV, hd)`` k/v arrays, a
@@ -21,8 +21,16 @@ per-slot block table mapping logical page → physical block, a host-side
 free-list with per-block refcounts, and a prefix map that lets
 same-tenant requests whose prompts share a page-aligned prefix point
 their leading table entries at the same refcounted blocks (DESIGN §10).
-Capacity is bounded by tokens actually in flight — ``num_blocks ×
-page_size`` — not by ``slots × max_len``.
+Because chunks fill pages over multiple steps, a slot carries TWO table
+rows: the read ``table`` (every page the slot attends through, shared
+pages included) and the ``wtable`` write table (only pages the slot
+*owns* — shared pages hold the sentinel so the chunk writer can never
+rewrite blocks another request attends to). Prefix pages register for
+dedup only once their contents are actually written
+(:meth:`mark_prefilled`), so a request admitted while its prefix twin is
+still mid-prefill never attends unwritten garbage. Capacity is bounded
+by tokens actually in flight — ``num_blocks × page_size`` — not by
+``slots × max_len``.
 """
 
 from __future__ import annotations
@@ -32,52 +40,23 @@ import jax.numpy as jnp
 import numpy as np
 
 
-@jax.jit
-def _splice_group(data_k, data_v, upd_k, upd_v, slots, plens, pos):
-    """Scatter a prefill bucket into the slot cache in one compiled call.
-
-    ``slots`` may carry out-of-range pad entries (bucket rows without a
-    request): ``mode="drop"`` discards their updates, so one compile per
-    (bucket-len, bucket-batch) shape serves any group size.
-    """
-    sb = upd_k.shape[2]
-    data_k = data_k.at[:, slots, :sb].set(upd_k.astype(data_k.dtype), mode="drop")
-    data_v = data_v.at[:, slots, :sb].set(upd_v.astype(data_v.dtype), mode="drop")
-    pos = pos.at[slots].set(plens, mode="drop")
-    return data_k, data_v, pos
-
-
 class KVCache:
     def __init__(self, model, slots: int, max_len: int):
         self.slots = slots
         self.max_len = max_len
         self.data = model.init_cache(slots, max_len)
-        self.pos = jnp.zeros((slots,), jnp.int32)  # device (megastep carry)
+        self.pos = jnp.zeros((slots,), jnp.int32)  # device (compiled-step carry)
         self.pos_host = np.zeros((slots,), np.int32)  # admission mirror
 
-    def splice_group(
-        self, pcache: dict, slots: np.ndarray, plens: np.ndarray
-    ) -> None:
-        """Splice prefill rows into slots: ``slots``/``plens`` are (B,)
-        int32 covering the whole (padded) prefill batch; pad rows carry an
-        out-of-range slot id (``self.slots``) and are dropped."""
-        self.data["k"], self.data["v"], self.pos = _splice_group(
-            self.data["k"], self.data["v"], pcache["k"], pcache["v"],
-            jnp.asarray(slots, jnp.int32), jnp.asarray(plens, jnp.int32),
-            self.pos,
-        )
-        real = slots < self.slots
-        self.pos_host[slots[real]] = plens[real]
-
     def sync(self, pos_dev: jax.Array, pos_np: np.ndarray) -> None:
-        """Adopt the megastep's final position state (device + fetched)."""
+        """Adopt a compiled step's final position state (device + mirror)."""
         self.pos = pos_dev
         self.pos_host[:] = pos_np
 
     def evict(self, slot: int) -> None:
         """Free a slot. Cache rows and the device position are left stale —
-        the next splice overwrites both, and decode never attends past a
-        slot's valid length."""
+        the next chunk step overwrites both, and attention never reaches
+        past a slot's valid length."""
         self.pos_host[slot] = 0
 
     def full(self, slot: int) -> bool:
@@ -87,42 +66,22 @@ class KVCache:
 # --------------------------------------------------------------- paged pool
 
 
-@jax.jit
-def _splice_group_paged(data_k, data_v, upd_k, upd_v, dst, slots, plens, pos):
-    """Scatter a prefill bucket into the block pool in one compiled call.
-
-    ``dst`` (B, n_pages) holds the physical destination block per logical
-    page; entries carrying the out-of-range sentinel (pad rows, pages of
-    other requests, *shared* prefix pages that must keep their existing
-    contents) are dropped. One compile per (bucket-len, bucket-batch,
-    n_pages) shape serves any group size.
-    """
-    ll, b, sb = upd_k.shape[:3]
-    page = data_k.shape[2]
-    n_pages = dst.shape[1]
-    pad = n_pages * page - sb
-    widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
-    upd_k = jnp.pad(upd_k, widths).astype(data_k.dtype)
-    upd_v = jnp.pad(upd_v, widths).astype(data_v.dtype)
-    upd_k = upd_k.reshape(ll, b * n_pages, page, *upd_k.shape[3:])
-    upd_v = upd_v.reshape(ll, b * n_pages, page, *upd_v.shape[3:])
-    data_k = data_k.at[:, dst.reshape(-1)].set(upd_k, mode="drop")
-    data_v = data_v.at[:, dst.reshape(-1)].set(upd_v, mode="drop")
-    pos = pos.at[slots].set(plens, mode="drop")
-    return data_k, data_v, pos
-
-
 class PagedKVCache:
     """Block-pool KV cache: per-slot block tables over shared pages.
 
     Device state: the ``(L, num_blocks, page_size, KV, hd)`` k/v pools and
-    the per-slot position vector (megastep carry, as in :class:`KVCache`).
-    Host state: the block table (pushed to device per decode chunk), the
-    free-list, per-block refcounts, and the prefix hash.
+    the per-slot position vector (compiled-step carry, as in
+    :class:`KVCache`). Host state: the read/write block tables (pushed to
+    device per step), the free-list, per-block refcounts, and the prefix
+    map.
 
     Unallocated table entries hold the out-of-range sentinel
     ``num_blocks``: in-graph cache writes drop through ``mode="drop"``,
     and attention gathers clamp it (the masked tail contributes zero).
+    The write table additionally carries the sentinel on *shared* prefix
+    pages — owned by whichever request first wrote them — so the mixed
+    chunk step reads through ``table`` but can only write through
+    ``wtable``.
     """
 
     def __init__(
@@ -139,9 +98,10 @@ class PagedKVCache:
                 f"request ({self.max_pages} pages of {page_size})"
             )
         self.data = model.init_paged_cache(num_blocks, page_size)
-        self.pos = jnp.zeros((slots,), jnp.int32)  # device (megastep carry)
+        self.pos = jnp.zeros((slots,), jnp.int32)  # device (compiled-step carry)
         self.pos_host = np.zeros((slots,), np.int32)  # admission mirror
         self.table = np.full((slots, self.max_pages), num_blocks, np.int32)
+        self.wtable = np.full((slots, self.max_pages), num_blocks, np.int32)
         self.alloc_count = np.zeros((slots,), np.int32)
         self.refcount = np.zeros((num_blocks,), np.int32)
         self._free = list(range(num_blocks - 1, -1, -1))  # pop() -> 0, 1, …
@@ -151,7 +111,13 @@ class PagedKVCache:
         # O(pages²) key material is noise next to one KV block
         self._prefix: dict[tuple, int] = {}
         self._block_key: dict[int, tuple] = {}  # shared block -> its key
-        self._table_dev = None  # cached device copy; invalidated on mutation
+        # chunked prefill fills pages over multiple steps, so a registered
+        # prefix block is only *attendable* once its chunk has landed:
+        # mark_prefilled flips the flag, admissions that would dedup an
+        # unwritten block are refused (head-of-line wait on the writer)
+        self._written = np.zeros((num_blocks,), np.bool_)
+        self._table_dev = None  # cached device copies; invalidated on mutation
+        self._wtable_dev = None
 
     # ------------------------------------------------------------- queries
 
@@ -170,12 +136,22 @@ class PagedKVCache:
         return self.pos_host[slot] >= self.max_len - 1
 
     def table_device(self) -> jax.Array:
-        """Block table as a device array; re-uploaded only after mutation."""
+        """Read table as a device array; re-uploaded only after mutation."""
         if self._table_dev is None:
             self._table_dev = jnp.asarray(self.table)
         return self._table_dev
 
+    def write_table_device(self) -> jax.Array:
+        """Write table as a device array; re-uploaded only after mutation."""
+        if self._wtable_dev is None:
+            self._wtable_dev = jnp.asarray(self.wtable)
+        return self._wtable_dev
+
     # ---------------------------------------------------------- allocation
+
+    def _dirty(self) -> None:
+        self._table_dev = None
+        self._wtable_dev = None
 
     def _release(self, blk: int) -> None:
         self.refcount[blk] -= 1
@@ -183,20 +159,30 @@ class PagedKVCache:
             key = self._block_key.pop(blk, None)
             if key is not None:
                 del self._prefix[key]
+            self._written[blk] = False
             self._free.append(blk)
 
-    def admit(self, slot: int, tokens, adapter_id: int):
-        """Place a prompt's pages; returns splice destinations or None.
+    def admit(self, slot: int, tokens, adapter_id: int) -> int | None:
+        """Place a prompt's pages; returns the number of leading prompt
+        tokens whose k/v are *already in the pool* (shared-prefix skip —
+        the chunk walk resumes after them), or None (fully rolled back)
+        when the pool cannot cover the prompt or a matching prefix block
+        is still being written.
 
         Full pages (``page_size`` tokens entirely inside the prompt) are
         looked up in the prefix map — keyed on ``(adapter_id, exact token
         prefix)`` so reuse never crosses tenants, whose deltas change
-        k/v — and reused with a refcount bump when present. Fresh pages
-        pop the free-list. Returns the (n_pages,) destination-block
-        vector for :meth:`splice_group` (sentinel on reused pages: the
-        splice must not rewrite blocks other requests already attend to),
-        or None — with every allocation rolled back — when the pool
-        cannot cover the prompt.
+        k/v — and reused with a refcount bump when present: the slot's
+        read table points at the shared block while its write table keeps
+        the sentinel (the chunk walk must never rewrite blocks other
+        requests already attend to; their contents are exactly what this
+        prompt's chunks would write). A hit on a block whose chunks have
+        NOT landed yet (the registering request is mid-prefill) refuses
+        the admission instead — the request waits at the queue head until
+        the writer's progress catches up, rather than attending unwritten
+        garbage. Fresh full pages register immediately but stay
+        unattendable until :meth:`mark_prefilled` flips their written
+        flag.
         """
         plen = len(tokens)
         n_pages = self.blocks_for(plen)
@@ -207,41 +193,65 @@ class PagedKVCache:
             )
         n_full = plen // self.page_size
         row = np.full((self.max_pages,), self.num_blocks, np.int32)
-        dst = np.full((n_pages,), self.num_blocks, np.int32)
+        wrow = np.full((self.max_pages,), self.num_blocks, np.int32)
         prefix: list[int] = []
+        shared_lead = 0  # leading pages resident in the pool, in tokens
+        chain_shared = True
         for j in range(n_pages):
+            key = None
             if j < n_full:
                 p0 = j * self.page_size
                 prefix.extend(int(t) for t in tokens[p0 : p0 + self.page_size])
                 key = (int(adapter_id), tuple(prefix))
                 shared = self._prefix.get(key)
                 if shared is not None:
+                    if not self._written[shared]:
+                        # writer still owes these chunks: wait, don't read
+                        for j2 in range(j):
+                            self._release(int(row[j2]))
+                        return None
                     self.refcount[shared] += 1
-                    row[j] = shared
+                    row[j] = shared  # read-only: wrow keeps the sentinel
+                    if chain_shared:
+                        shared_lead = (j + 1) * self.page_size
                     continue
+            chain_shared = False
             if not self._free:
                 for j2 in range(j):  # roll back: this request takes nothing
                     self._release(int(row[j2]))
                 return None
             blk = self._free.pop()
             self.refcount[blk] = 1
-            if j < n_full:
+            row[j] = blk
+            wrow[j] = blk
+            if key is not None:
                 self._prefix[key] = blk
                 self._block_key[blk] = key
-            row[j] = blk
-            dst[j] = blk
         self.table[slot] = row
+        self.wtable[slot] = wrow
         self.alloc_count[slot] = n_pages
-        self._table_dev = None
-        return dst
+        self._dirty()
+        return shared_lead
+
+    def mark_prefilled(self, slot: int, n_tokens: int) -> None:
+        """Flip the written flag on the slot's owned pages whose contents
+        the chunk walk has now fully landed (pages entirely below
+        ``n_tokens``) — from here on, same-tenant admissions may dedup
+        against and attend to them."""
+        page = self.page_size
+        wrow = self.wtable[slot]
+        for j in range(min(n_tokens // page, self.max_pages)):
+            if wrow[j] != self.num_blocks:
+                self._written[wrow[j]] = True
 
     def reserve(self, slot: int, target_len: int) -> bool:
-        """Extend a slot's table to cover ``target_len`` positions.
+        """Extend a slot's tables to cover ``target_len`` positions.
 
-        Called at chunk boundaries so the in-graph decode loop never
-        allocates: every position it can write this chunk already has a
-        physical block. Keeps partial progress on failure (the pages stay
-        owned by the slot; the engine preempts someone and retries).
+        Called at step boundaries so the compiled chunk/decode bodies
+        never allocate: every position they can write already has a
+        physical block (owned, so it lands in both tables). Keeps partial
+        progress on failure (the pages stay owned by the slot; the engine
+        preempts someone and retries).
         """
         need = self.blocks_for(target_len)
         while self.alloc_count[slot] < need:
@@ -250,28 +260,13 @@ class PagedKVCache:
             blk = self._free.pop()
             self.refcount[blk] = 1
             self.table[slot, self.alloc_count[slot]] = blk
+            self.wtable[slot, self.alloc_count[slot]] = blk
             self.alloc_count[slot] += 1
-            self._table_dev = None
+            self._dirty()
         return True
 
-    def splice_group(
-        self, pcache: dict, slots: np.ndarray, plens: np.ndarray,
-        dst_blocks: np.ndarray,
-    ) -> None:
-        """Splice prefill rows into the pool. ``dst_blocks`` (B, n_pages)
-        carries each bucket row's destination block per page (sentinel
-        entries — pads, shared pages — are dropped in-graph)."""
-        self.data["k"], self.data["v"], self.pos = _splice_group_paged(
-            self.data["k"], self.data["v"], pcache["k"], pcache["v"],
-            jnp.asarray(dst_blocks, jnp.int32),
-            jnp.asarray(slots, jnp.int32), jnp.asarray(plens, jnp.int32),
-            self.pos,
-        )
-        real = slots < self.slots
-        self.pos_host[slots[real]] = plens[real]
-
     def sync(self, pos_dev: jax.Array, pos_np: np.ndarray) -> None:
-        """Adopt the megastep's final position state (device + fetched)."""
+        """Adopt a compiled step's final position state (device + mirror)."""
         self.pos = pos_dev
         self.pos_host[:] = pos_np
 
@@ -282,6 +277,7 @@ class PagedKVCache:
         for j in range(int(self.alloc_count[slot])):
             self._release(int(self.table[slot, j]))
         self.table[slot] = self.num_blocks
+        self.wtable[slot] = self.num_blocks
         self.alloc_count[slot] = 0
         self.pos_host[slot] = 0
-        self._table_dev = None
+        self._dirty()

@@ -1,16 +1,26 @@
-"""FIFO request admission and slot assignment for the serving engine.
+"""FIFO request admission, slot assignment and chunk planning for serving.
 
 Host-side bookkeeping only — no jax. Requests queue in submit order; every
 admission round pops as many as there are free slots. Each request carries
 its tenant's ``adapter_id`` (0 = base model) and its own sampling
 temperature, both threaded into the jitted decode step as traced arrays.
 
+Admission no longer prefills (DESIGN §11): an admitted request enters its
+slot with ``prefilled = 0`` and a ``prefill_target`` of the full
+re-prefill basis ``prompt + out`` (out is empty on first entry; a
+preempted request resumes over everything it already generated). The
+engine's mixed chunk step then consumes the prompt ``prefill_chunk``
+tokens at a time — :meth:`chunk_plan` carves the next step's (slots, C)
+token buffer under the per-step token budget, decode slots riding along
+as degenerate one-token chunks.
+
 The paged engine adds two block-aware motions: admission takes a
 ``try_place`` callback so a request only leaves the queue when the block
 pool can hold its prompt (head-of-line FIFO: the first refusal stops the
 round), and :meth:`preempt` hands an admitted request back to the *front*
-of the queue when decode runs out of blocks mid-flight — it re-prefills
-later over ``prompt + out`` and continues exactly where it stopped.
+of the queue when decode or mid-prefill reservation runs out of blocks —
+its prefill progress resets and it re-prefills later over ``prompt +
+out``, continuing exactly where it stopped.
 """
 
 from __future__ import annotations
@@ -33,6 +43,16 @@ class Request:
     store_rev: int = 0
     out: list[int] = field(default_factory=list)
     done: bool = False
+    # chunked-prefill progress: basis tokens (prompt + out-at-admission)
+    # already written to KV, and the admission-time basis length. A slot
+    # is mid-prefill while prefilled < prefill_target; the step the two
+    # meet samples the request's next token (its *first* on fresh entry).
+    prefilled: int = 0
+    prefill_target: int = 0
+
+    @property
+    def mid_prefill(self) -> bool:
+        return self.prefilled < self.prefill_target
 
 
 class Scheduler:
@@ -66,12 +86,19 @@ class Scheduler:
         ``try_place(slot, req) -> bool`` (paged engine) reserves memory for
         the request; a False puts the request back at the queue head and
         ends the round — admitting around it would starve the head forever.
+        Admission stamps the chunked-prefill basis before placement: the
+        request re-enters with zero progress and a target of ``len(prompt
+        + out)`` (the last basis token is consumed as prefill input and
+        samples the next); ``try_place`` may then advance ``prefilled``
+        past a shared prefix whose pages are already resident.
         """
         out = []
         for slot in range(self.slots):
             if self.active[slot] is not None or not self._queue:
                 continue
             req = self._queue.popleft()
+            req.prefilled = 0
+            req.prefill_target = len(req.prompt) + len(req.out)
             if try_place is not None and not try_place(slot, req):
                 self._queue.appendleft(req)
                 break
@@ -81,9 +108,12 @@ class Scheduler:
 
     def preempt(self, slot: int) -> Request:
         """Evict an admitted request back to the queue *front* (it is older
-        than everything queued — rids are monotone) for later re-prefill."""
+        than everything queued — rids are monotone) for later re-prefill.
+        Mid-prefill victims lose their progress with their pages: the next
+        admission restarts the chunk walk from token zero."""
         req = self.active[slot]
         self.active[slot] = None
+        req.prefilled = 0
         self._queue.appendleft(req)
         return req
 
@@ -94,6 +124,65 @@ class Scheduler:
         if not slots:
             return None
         return max(slots, key=lambda s: self.active[s].rid)
+
+    def has_prefilling(self) -> bool:
+        """True while any admitted request still owes prompt chunks — the
+        engine then runs the mixed chunk step instead of the decode
+        megastep."""
+        return any(r is not None and r.mid_prefill for r in self.active)
+
+    def chunk_plan(self, budget: int, kv_pos) -> dict[str, np.ndarray]:
+        """Carve the next mixed step's (slots, budget) token buffer.
+
+        Prefilling slots consume their next basis chunk — oldest request
+        (lowest rid) first, total prefill tokens capped at ``budget`` per
+        step (bounded per-step latency: a step is never longer than budget
+        prefill tokens + one decode token per decode slot). Decode slots
+        carry their last sampled token as a one-token chunk at their
+        current cache position ``kv_pos``. ``emit`` marks the slots that
+        sample a real token this step: every decode slot, plus prefill
+        slots whose basis completes within the chunk. Stalled prefill
+        slots (budget exhausted) and empty slots ride along as ``q_len =
+        0`` no-ops whose position freezes at ``q_offset``.
+        """
+        n = self.slots
+        plan = {
+            "tokens": np.zeros((n, budget), np.int32),
+            "q_offset": np.zeros((n,), np.int32),
+            "q_len": np.zeros((n,), np.int32),
+            "last_idx": np.zeros((n,), np.int32),
+            "aid": np.zeros((n,), np.int32),
+            "temps": np.zeros((n,), np.float32),
+            "emit": np.zeros((n,), np.bool_),
+        }
+        left = budget
+        order = sorted(
+            (s for s, r in enumerate(self.active) if r is not None),
+            key=lambda s: self.active[s].rid,
+        )
+        for s in order:
+            req = self.active[s]
+            plan["aid"][s] = req.adapter_id
+            plan["temps"][s] = req.temperature
+            if req.mid_prefill:
+                take = min(req.prefill_target - req.prefilled, left)
+                plan["q_offset"][s] = req.prefilled
+                if take == 0:
+                    continue  # budget exhausted: frozen no-op this step
+                basis = req.prompt + req.out
+                plan["tokens"][s, :take] = basis[
+                    req.prefilled : req.prefilled + take
+                ]
+                plan["q_len"][s] = take
+                plan["last_idx"][s] = take - 1
+                plan["emit"][s] = req.prefilled + take == req.prefill_target
+                left -= take
+            else:
+                plan["tokens"][s, 0] = req.out[-1]
+                plan["q_offset"][s] = int(kv_pos[s])
+                plan["q_len"][s] = 1
+                plan["emit"][s] = True
+        return plan
 
     def slot_arrays(self) -> dict[str, np.ndarray]:
         """Per-slot state as dense arrays for the decode megastep.

@@ -80,8 +80,9 @@ def test_run_to_completion_returns_already_admitted():
     assert all(r.done and len(r.out) == 3 for r in reqs)
 
 
-def test_bucketed_prefill_matches_solo_across_lengths():
-    """Prompts spanning length buckets (16, 32) decode as if served alone."""
+def test_mixed_length_prompts_match_solo():
+    """Prompts spanning several lengths (all through the one-shape chunked
+    prefill) decode as if served alone."""
     cfg, m, params = _model()
     prompts = [[1, 5, 9], list(range(1, 21)), list(range(1, 18))]
 

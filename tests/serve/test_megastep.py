@@ -5,7 +5,8 @@ The megastep compiles up to ``decode_chunk`` tokens into one jitted call
 pin the contract: token-for-token greedy parity with the per-step loop
 across (plain, multi-tenant, int8-base) × (EOS mid-chunk, max_new
 mid-chunk, slot eviction + re-admission), exactly one device→host
-transfer per chunk, the cached adapter stack, and the one-call splice.
+transfer per chunk, the cached adapter stack, and the masked in-graph
+chunk writes that replaced the bucketed splice.
 """
 
 import jax
@@ -18,7 +19,6 @@ from repro.core.adapt import init_adapters
 from repro.kernels import ops
 from repro.models import get_model
 from repro.serve import AdapterStore, ServeEngine
-from repro.serve.kv_cache import KVCache
 
 _NO_EOS = 1 << 20  # outside any vocab: disables EOS termination
 _CACHE = {}
@@ -106,14 +106,15 @@ def test_megastep_cache_full_mid_chunk():
 
 
 def test_megastep_one_transfer_per_chunk(monkeypatch):
-    """The decode megastep performs exactly ONE device→host transfer per
-    chunk — the fetched (tokens, mask, positions) bundle."""
+    """Every compiled step performs exactly ONE device→host transfer —
+    the mixed prefill step fetches the sampled token vector, the decode
+    megastep the (tokens, mask, positions) bundle for the whole chunk."""
     cfg, m, params = _model()
     eng = ServeEngine(m, params, slots=2, max_len=64, eos_id=_NO_EOS,
                       decode_chunk=4)
     eng.submit([1, 5, 9, 2], max_new=40)
     eng.submit([1, 6, 9, 2], max_new=40)
-    eng.step()  # admission (its own transfer) + first chunk
+    eng.step()  # admission + the one mixed prefill step (first tokens out)
     calls = []
     real = jax.device_get
     monkeypatch.setattr(jax, "device_get", lambda x: (calls.append(1), real(x))[1])
@@ -123,7 +124,7 @@ def test_megastep_one_transfer_per_chunk(monkeypatch):
     assert len(calls) == 3
     assert eng.transfers - before == 3
     out = eng.scheduler.active[0].out
-    assert len(out) == 1 + 4 * 4  # prefill token + 4 chunks of 4
+    assert len(out) == 1 + 3 * 4  # first token (mixed step) + 3 chunks of 4
 
 
 def test_adapter_stack_cached_across_steps():
@@ -188,32 +189,48 @@ def test_remove_with_requests_in_flight_fails_loudly():
     assert len(eng3.run_to_completion()[0].out) == 3
 
 
-def test_splice_group_one_call_matches_rows():
-    """The grouped splice must write exactly the bucket's rows (pad rows
-    dropped) and keep the device position vector in sync with the host
-    mirror."""
-    cfg, m, params = _model()
-    kv = KVCache(m, slots=4, max_len=32)
-    L = cfg.num_layers
-    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+def test_chunk_cache_update_masks_pads_and_idle_slots():
+    """The in-graph chunk write must land exactly q_len rows per slot at
+    its q_offset; pad columns and idle (q_len = 0) slots drop instead of
+    corrupting neighbouring rows."""
+    from repro.models.layers import chunk_cache_update
+
     rng = np.random.default_rng(3)
-    pcache = {
-        key: jnp.asarray(rng.normal(size=(L, 4, 16, kvh, hd)), jnp.float32)
-        for key in ("k", "v")
-    }
-    slots = np.array([2, 0, 4, 4], np.int32)  # rows 2,3 are pads -> dropped
-    plens = np.array([5, 3, 0, 0], np.int32)
-    kv.splice_group(pcache, slots, plens)
-    np.testing.assert_array_equal(np.asarray(kv.pos), [3, 0, 5, 0])
-    np.testing.assert_array_equal(kv.pos_host, [3, 0, 5, 0])
-    np.testing.assert_allclose(
-        np.asarray(kv.data["k"][:, 2, :16]), np.asarray(pcache["k"][:, 0])
+    cache = jnp.zeros((4, 32, 2, 8), jnp.float32)
+    new = jnp.asarray(rng.normal(size=(4, 16, 2, 8)), jnp.float32)
+    q_offset = jnp.asarray([5, 0, 0, 30], jnp.int32)
+    q_len = jnp.asarray([3, 16, 0, 5], jnp.int32)  # slot 3 runs off the end
+    out = np.asarray(chunk_cache_update(cache, new, q_offset, q_len))
+    np.testing.assert_allclose(out[0, 5:8], np.asarray(new[0, :3]))
+    assert not out[0, :5].any() and not out[0, 8:].any()
+    np.testing.assert_allclose(out[1, :16], np.asarray(new[1]))
+    assert not out[2].any()  # idle slot: whole chunk dropped
+    np.testing.assert_allclose(out[3, 30:32], np.asarray(new[3, :2]))
+    assert not out[3, :30].any()  # rows past max_len dropped, none wrapped
+
+
+def test_paged_chunk_cache_update_respects_write_table():
+    """The paged chunk write routes through the *write* table: sentinel
+    pages (shared prefixes, unallocated tail) and pad columns drop; owned
+    pages land at (block, pos % page)."""
+    from repro.models.layers import paged_chunk_cache_update
+
+    rng = np.random.default_rng(4)
+    pool = jnp.zeros((6, 4, 2, 8), jnp.float32)  # 6 blocks of 4 tokens
+    new = jnp.asarray(rng.normal(size=(2, 8, 2, 8)), jnp.float32)
+    # slot 0 writes positions 2..7: page 0 is SHARED (sentinel in the
+    # write table) so positions 2..3 drop, pages 1 -> block 3 take 4..7
+    wtable = jnp.asarray([[6, 3, 6, 6], [1, 6, 6, 6]], jnp.int32)
+    q_offset = jnp.asarray([2, 0], jnp.int32)
+    q_len = jnp.asarray([6, 3], jnp.int32)
+    out = np.asarray(
+        paged_chunk_cache_update(pool, new, wtable, q_offset, q_len)
     )
-    np.testing.assert_allclose(
-        np.asarray(kv.data["v"][:, 0, :16]), np.asarray(pcache["v"][:, 1])
-    )
-    assert not np.asarray(kv.data["k"][:, 1]).any()  # untouched slot
-    assert not np.asarray(kv.data["k"][:, 3]).any()  # pad row dropped
+    np.testing.assert_allclose(out[3], np.asarray(new[0, 2:6]))  # pos 4..7
+    np.testing.assert_allclose(out[1, :3], np.asarray(new[1, :3]))
+    assert not out[1, 3:].any()  # pad column dropped
+    for blk in (0, 2, 4, 5):  # untouched pool blocks, incl. shared page 0
+        assert not out[blk].any()
 
 
 def test_int8_tenants_take_kernel_path_on_interpret():

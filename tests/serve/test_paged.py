@@ -172,22 +172,31 @@ def test_eviction_readmission_matches_uncontended():
 
 
 def test_paged_pool_refcounts_through_admit_reserve_evict():
-    """Direct PagedKVCache accounting: admit dedups shared pages, reserve
-    extends, evict releases — refcounts and the free-list stay exact."""
+    """Direct PagedKVCache accounting: admit dedups *written* shared
+    pages (refusing while the writer still owes chunks), reserve extends,
+    evict releases — refcounts and the free-list stay exact."""
     cfg, m, params = _model()
     kv = PagedKVCache(m, slots=3, max_len=32, page_size=4, num_blocks=12)
     toks = list(range(1, 10))  # 9 tokens: 2 full pages + 1 partial
-    dst0 = kv.admit(0, toks, adapter_id=1)
-    assert list(dst0 != kv.num_blocks).count(True) == 3  # all fresh
+    assert kv.admit(0, toks, adapter_id=1) == 0  # nothing resident yet
     assert kv.used_blocks == 3
-    # same tenant, same 8-token prefix: both full pages dedup
-    dst1 = kv.admit(1, toks[:8] + [99], adapter_id=1)
-    assert (dst1[:2] == kv.num_blocks).all()  # shared -> splice skips them
+    # same tenant, same 8-token prefix — but slot 0's chunks have not
+    # landed: the admission must WAIT, not attend unwritten blocks
+    assert kv.admit(1, toks[:8] + [99], adapter_id=1) is None
+    assert kv.used_blocks == 3  # refusal leaks nothing
+    kv.mark_prefilled(0, 5)  # first chunk landed: page 0 written only
+    assert kv.admit(1, toks[:8] + [99], adapter_id=1) is None
+    kv.mark_prefilled(0, 9)  # prefill complete: both full pages written
+    lead = kv.admit(1, toks[:8] + [99], adapter_id=1)
+    assert lead == 8  # the sharer's chunk walk skips the resident prefix
     assert kv.used_blocks == 4  # only the private partial page is new
     assert (kv.refcount[kv.table[0, :2]] == 2).all()
+    # shared pages are read-only for the sharer: write table keeps the
+    # sentinel there, private pages stay writable
+    assert (kv.wtable[1, :2] == kv.num_blocks).all()
+    assert kv.wtable[1, 2] == kv.table[1, 2] != kv.num_blocks
     # different tenant, same tokens: NO sharing (deltas change k/v)
-    dst2 = kv.admit(2, toks, adapter_id=2)
-    assert (dst2 != kv.num_blocks).all()
+    assert kv.admit(2, toks, adapter_id=2) == 0
     assert kv.used_blocks == 7
     # reserve decode room; evict returns everything
     assert kv.reserve(0, 16)  # 4 pages total for slot 0
@@ -238,7 +247,13 @@ def test_shared_prefix_costs_one_copy():
                       decode_chunk=2, paged=True, page_size=4, num_blocks=40)
     for i in range(4):
         eng.submit(sys_prompt + [30 + i], max_new=8)
+    # step 1 admits only the prefix *writer* (chunked prefill: the other
+    # three wait at the queue head until its pages are actually written);
+    # step 2 admits them all against the now-resident prefix
     eng.step()
+    assert sum(r is not None for r in eng.scheduler.active) == 1
+    eng.step()
+    assert sum(r is not None for r in eng.scheduler.active) == 4
     # unshared: 4 requests × 5 prompt pages (+ reserve) ≥ 20 blocks.
     # shared: 4 prefix pages + 4 private partial/reserve pages.
     assert eng.kv.used_blocks <= 4 + 4 * 2
@@ -279,8 +294,8 @@ def test_prefix_sharing_respects_tenants():
 
 
 def _args(**kw):
-    base = dict(decode_chunk=8, max_new=16, max_len=128, dense=False,
-                paged=False, page_size=None, num_blocks=None)
+    base = dict(decode_chunk=8, prefill_chunk=256, max_new=16, max_len=128,
+                dense=False, paged=False, page_size=None, num_blocks=None)
     base.update(kw)
     import argparse
 
@@ -295,6 +310,8 @@ def test_launch_flag_validation():
         launch_serve.validate_args(_args(dense=True, paged=True))
     with pytest.raises(SystemExit, match="decode-chunk"):
         launch_serve.validate_args(_args(decode_chunk=0))
+    with pytest.raises(SystemExit, match="prefill-chunk"):
+        launch_serve.validate_args(_args(prefill_chunk=0))
     with pytest.raises(SystemExit, match="power of two"):
         launch_serve.validate_args(_args(page_size=24))
     with pytest.raises(SystemExit, match="max-length"):
