@@ -24,10 +24,22 @@ reservation (requests × max_len) overflows the dense pool several times
 over, and K same-prefix same-tenant requests keep more logical tokens in
 flight than the pool physically stores (one refcounted prefix copy).
 
+The speculative section (DESIGN §12) benches the in-megastep drafters
+against their plain ``--draft off`` twins on longer decode windows,
+recording acceptance rate, drafted-vs-emitted counts and the
+spec-vs-plain tok/s ratio per configuration. The model drafters (merged
+and int8 self-draft) run on the standard window and document the
+backend economics — on this op-overhead-bound CPU oracle a same-size
+drafter pays ~k forwards to save k, so they land under 1x; the
+model-free ngram drafter (zero draft forwards) runs on a 4x window
+timed deep into generation, where greedy decode has settled into its
+attractor and lookup proposals land.
+
 Besides the ``name,us_per_call,derived`` CSV schema of benchmarks.run, the
 full grid lands in ``BENCH_serving.json`` (tok/s per configuration, the
-megastep-vs-per-token and paged-vs-dense ratios, and the chunked-vs-stop-
-the-world latency columns) so the perf trajectory is machine-readable.
+megastep-vs-per-token and paged-vs-dense ratios, the spec-decode columns,
+and the chunked-vs-stop-the-world latency columns) so the perf trajectory
+is machine-readable.
 """
 
 from __future__ import annotations
@@ -64,17 +76,18 @@ def _adapter(params, seed, k=2, scale=0.05):
 
 
 def _run_engine(m, params, *, slots, store, n_tenants, chunk, steps,
-                base_dtype="fp32", paged=False):
+                base_dtype="fp32", paged=False, max_len=MAX_LEN,
+                draft="off", spec_k=4, windows=3, warm_out=0):
     # eos outside the vocab: a greedy sample hitting the default eos_id
     # mid-window would idle its slot for the rest of the timed window
     eng = ServeEngine(
-        m, params, slots=slots, max_len=MAX_LEN, adapter_store=store,
+        m, params, slots=slots, max_len=max_len, adapter_store=store,
         decode_chunk=chunk, base_dtype=base_dtype, eos_id=1 << 20,
-        paged=paged,
+        paged=paged, draft=draft, spec_k=spec_k,
     )
     for i in range(slots):
         aid = 1 + i % n_tenants if n_tenants else 0
-        eng.submit([1, 3 + i, 7, 2 + i], max_new=MAX_LEN - 8, adapter_id=aid)
+        eng.submit([1, 3 + i, 7, 2 + i], max_new=max_len - 8, adapter_id=aid)
     # count tokens over a stable Request snapshot: in_flight() drops
     # completed requests, which would corrupt the count for long windows
     reqs = eng.scheduler.in_flight()
@@ -82,19 +95,50 @@ def _run_engine(m, params, *, slots, store, n_tenants, chunk, steps,
     while eng.scheduler.has_prefilling():
         eng.step()
     eng.step()  # first decode megastep: compile it outside the timed window
+    # ``warm_out`` > 0 decodes until the deepest slot has emitted that
+    # many tokens before timing: the ngram legs measure the steady-state
+    # regime where generation has settled into its attractor (the regime
+    # lookup drafting exists for) instead of the chaotic opening tokens
+    while warm_out and max(len(r.out) for r in reqs) < warm_out:
+        eng.step()
     # equal decode budget per config: ``steps`` per-token steps' worth
     n_calls = max(steps // chunk, 1)
-    tok0 = sum(len(r.out) for r in reqs)
-    t0 = time.perf_counter()
-    for _ in range(n_calls):
-        eng.step()
-    wall = time.perf_counter() - t0
-    toks = sum(len(r.out) for r in reqs) - tok0
-    return {
+    # best of ``windows`` timed windows: a single scheduler hiccup or GC
+    # pause on a shared box lands in ONE window and is discarded instead
+    # of inflating a 3-call average 5x (the PR-5 bench shipped a 22ms
+    # outlier row this way); min-wall is the structural cost
+    best = fallback = None
+    for _ in range(windows):
+        tok0 = sum(len(r.out) for r in reqs)
+        t0 = time.perf_counter()
+        for _ in range(n_calls):
+            eng.step()
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in reqs) - tok0
+        if not toks:
+            continue
+        fallback = fallback or (wall, toks)
+        # a window in which a slot completed times a partially idle
+        # engine (the scan still runs every round for the emptier batch):
+        # prefer all-slots-live windows, fall back if none survived
+        if sum(r is not None for r in eng.scheduler.active) < slots:
+            continue
+        if best is None or wall < best[0]:
+            best = (wall, toks)
+    wall, toks = best or fallback
+    res = {
         "us_per_call": wall / n_calls * 1e6,
         "tok_s": toks / wall,
         "tokens": toks,
     }
+    if draft != "off":
+        drafted = eng.spec_drafted
+        res.update(
+            drafted=drafted, accepted=eng.spec_accepted,
+            emitted=eng.spec_emitted,
+            acceptance=round(eng.spec_accepted / max(drafted, 1), 3),
+        )
+    return res
 
 
 def run(*, steps: int = 24) -> list[str]:
@@ -183,6 +227,76 @@ def run(*, steps: int = 24) -> list[str]:
             f"paged_vs_dense={ratio:.2f}x"
         )
 
+    # speculative decoding: drafter proposes k per round, full model
+    # verifies k+1 per slot in one chunk pass (DESIGN §12). Each spec
+    # megastep call emits up to chunk*(k+1) tokens per slot, so the legs
+    # run on longer windows than the main grid; every spec row carries
+    # acceptance + drafted/emitted counts and its tok/s ratio against the
+    # plain (--draft off) twin at the same slots/cache/tenants/window.
+    spec_records = []
+    spec_len = 2 * MAX_LEN
+
+    def spec_store(n_tenants):
+        s = AdapterStore()
+        for ad in adapters[:n_tenants]:
+            s.register(*ad)
+        return s
+
+    def spec_bench(slots, n_tenants, *, draft, paged=False, spec_k=4,
+                   max_len=spec_len, warm_out=0):
+        cache = "paged" if paged else "dense"
+        key = (slots, n_tenants, cache, max_len, warm_out)
+        store = spec_store(n_tenants) if n_tenants else None
+        if key not in plain_twins:
+            plain_twins[key] = _run_engine(
+                m, params, slots=slots, store=store,
+                n_tenants=n_tenants, chunk=8, steps=steps, paged=paged,
+                max_len=max_len, warm_out=warm_out,
+            )
+        base_r = plain_twins[key]
+        # 2 calls x 2 windows: a spec call can emit 8*(k+1) tokens per
+        # slot, so longer windows would exhaust the max_new budget
+        r = _run_engine(
+            m, params, slots=slots, store=store,
+            n_tenants=n_tenants, chunk=8, steps=16, paged=paged,
+            max_len=max_len, draft=draft, spec_k=spec_k, windows=2,
+            warm_out=warm_out,
+        )
+        ratio = r["tok_s"] / base_r["tok_s"]
+        rec = {"slots": slots, "tenants": n_tenants, "cache": cache,
+               "draft": draft, "spec_k": spec_k, "max_len": max_len,
+               "warm_out": warm_out,
+               "plain_tok_s": round(base_r["tok_s"], 1),
+               "spec_vs_plain_tok_s": round(ratio, 3), **r}
+        spec_records.append(rec)
+        out.append(
+            f"serve.spec.slots{slots}.{draft}{n_tenants}.{cache},"
+            f"{r['us_per_call']:.0f},tok_s={r['tok_s']:.1f}"
+            f"_accept={r['acceptance']:.2f}"
+            f"_drafted={r['drafted']}_emitted={r['emitted']}"
+            f"_vs_plain={ratio:.2f}x"
+        )
+        return rec
+
+    plain_twins = {}
+    for paged in (False, True):
+        for slots in (4, 8):
+            spec_bench(slots, 1, draft="merged", paged=paged)
+    # acceptance comparison: quantized self-draft (int8 drafts, fp32
+    # verifies) and a cross-tenant merged drafter (mean of 4 deltas
+    # drafting for per-tenant targets)
+    spec_bench(4, 1, draft="int8")
+    spec_bench(4, 4, draft="merged")
+    # model-free ngram drafter (zero draft forwards — the drafter that
+    # wins on this op-overhead-bound backend, where a same-size model
+    # drafter pays k forwards to save k): measured deep into generation
+    # (warm_out) where decode has settled into its attractor and lookup
+    # proposals actually land, on a 4x window so the deep regime exists
+    for paged in (False, True):
+        for slots_ in (4, 8):
+            spec_bench(slots_, 0, draft="ngram", paged=paged,
+                       max_len=4 * MAX_LEN, warm_out=220)
+
     # chunked admission: cost of admitting a mixed-length batch through
     # the one-shape mixed step (no per-bucket compiles)
     eng = ServeEngine(m, params, slots=4, max_len=MAX_LEN)
@@ -198,8 +312,8 @@ def run(*, steps: int = 24) -> list[str]:
     JSON_PATH.write_text(json.dumps(
         {"arch": cfg.name, "max_len": MAX_LEN, "decode_steps_budget": steps,
          "results": records, "speedups": ratios,
-         "paged_vs_dense": paged_ratios, "mixed_workload": mixed,
-         "capacity": capacity},
+         "paged_vs_dense": paged_ratios, "speculative": spec_records,
+         "mixed_workload": mixed, "capacity": capacity},
         indent=2,
     ))
     out.append(f"serve.json_written,0,{JSON_PATH}")

@@ -69,6 +69,19 @@ def main():
     for req in engine.run_to_completion():
         print(f"request {req.rid}: {req.out}")
 
+    # --- speculative decoding (DESIGN.md §12): an int8 self-draft of the
+    # merged model proposes spec_k tokens per round, the full model
+    # verifies them in one batched pass — greedy output is token-identical
+    # to the plain engine above (CLI twin: serve --draft int8 --spec-k 4)
+    spec = ServeEngine(model, merged, slots=2, max_len=64, decode_chunk=8,
+                       draft="int8", spec_k=4)
+    spec.submit([1, 17, 25], max_new=8)
+    spec.submit([1, 40, 41, 42], max_new=8)
+    for req in spec.run_to_completion():
+        print(f"request {req.rid} (drafted): {req.out}")
+    print(f"spec decode: {spec.spec_accepted}/{spec.spec_drafted} drafts "
+          f"accepted, {spec.spec_emitted} tokens emitted")
+
 
 if __name__ == "__main__":
     main()

@@ -1,10 +1,11 @@
 """Batched serving on the paged KV core: block-pool cache, block-aware
 continuous batching, chunked prefill fused into the serving step,
 multi-tenant adapters — staggered request arrival, shared-prefix reuse,
-per-slot NeuroAda deltas, all off ONE int8-packed frozen base
-(DESIGN.md §8/§10/§11; the CLI twin is
+per-slot NeuroAda deltas, all off ONE int8-packed frozen base — then the
+same workload again under speculative decoding with the merged
+mean-of-tenants drafter (DESIGN.md §8/§10/§11/§12; the CLI twin is
 ``python -m repro.launch.serve --base-dtype int8 --prefill-chunk 16
---adapters …``).
+--adapters … [--draft merged --spec-k 4]``).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -92,6 +93,28 @@ def main():
     for r in reqs:
         tenant = "base" if r.adapter_id == 0 else store.names[r.adapter_id - 1]
         print(f"  req{r.rid} [{tenant}] prompt={r.prompt} -> {r.out}")
+
+    # same workload with speculative decoding (DESIGN.md §12): the merged
+    # drafter (base + mean of the two tenants' deltas, adapter-free
+    # forward) proposes 4 tokens per round and the full model verifies
+    # them in one batched chunk pass. Greedy outputs are token-identical;
+    # the pool must fund the wider reserve horizon decode_chunk*(k+1)
+    # (CLI twin: serve --draft merged --spec-k 4 --adapters …)
+    spec = ServeEngine(model, params, slots=6, max_len=128,
+                       adapter_store=store, decode_chunk=8,
+                       prefill_chunk=16, paged=True, page_size=16,
+                       num_blocks=48, draft="merged", spec_k=4)
+    for p, aid in zip(prompts, ids):
+        spec.submit(p, max_new=16, adapter_id=aid)
+    t0 = time.perf_counter()
+    spec_reqs = spec.run_to_completion()
+    dt_spec = time.perf_counter() - t0
+    match = [r.out for r in spec_reqs] == [r.out for r in reqs]
+    rate = spec.spec_accepted / max(spec.spec_drafted, 1)
+    print(f"speculative twin: outputs identical: {match}, "
+          f"{spec.spec_accepted}/{spec.spec_drafted} drafts accepted "
+          f"({rate:.0%}), {sum(len(r.out) for r in spec_reqs)} tokens "
+          f"in {dt_spec:.2f}s")
 
 
 if __name__ == "__main__":

@@ -100,6 +100,40 @@ python -m repro.launch.serve --arch qwen2-1.5b --reduced \
 diff "$tmpdir/serve_chunked.out" "$tmpdir/serve_chunked_dense.out"
 echo "chunked-prefill parity OK"
 
+echo "== speculative decoding (drafted greedy output must match --draft off, timed) =="
+# the merged drafter (base + mean of tenant deltas) proposes 4 tokens per
+# round and the full model verifies them in one batched chunk pass; greedy
+# outputs must be token-for-token identical to plain decode. Timed so a
+# per-round recompile or a drafter-cache regression shows up in CI logs.
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,17,25;1,40,41,42" --max-new 8 \
+    --decode-chunk 8 --draft off | grep '^req' > "$tmpdir/serve_nospec.out"
+time python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,17,25;1,40,41,42" --max-new 8 \
+    --decode-chunk 8 --draft merged --spec-k 4 \
+    | tee "$tmpdir/serve_spec_full.out" | grep '^req' > "$tmpdir/serve_spec.out"
+diff "$tmpdir/serve_nospec.out" "$tmpdir/serve_spec.out"
+grep -q '^spec\[merged k=4\]' "$tmpdir/serve_spec_full.out"
+# the model-free ngram drafter (zero draft forwards) must also be
+# token-identical — no adapters required, proposals come from each
+# stream's own committed tokens
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,17,25;1,40,41,42" --max-new 8 \
+    --decode-chunk 8 --draft ngram --spec-k 4 \
+    | grep '^req' > "$tmpdir/serve_ngram.out"
+diff "$tmpdir/serve_nospec.out" "$tmpdir/serve_ngram.out"
+# bad spec flag combos die with a readable SystemExit up front
+if python -m repro.launch.serve --spec-k 0 2>/dev/null; then
+    echo "expected --spec-k 0 to be rejected" >&2; exit 1
+fi
+if python -m repro.launch.serve --draft merged 2>/dev/null; then
+    echo "expected --draft merged without --adapters to be rejected" >&2; exit 1
+fi
+echo "speculative-decode parity OK"
+
 echo "== quantized-base e2e (adapt -> 2 train steps -> export -> serve int8) =="
 # the frozen base lives in int8 through BOTH training and serving: only the
 # sparse (idx, val) bypass pairs train, and two tenants then share the one

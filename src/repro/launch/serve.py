@@ -15,8 +15,13 @@ The engine defaults to the paged KV cache (block pool + block tables +
 shared-prefix reuse, DESIGN §10); ``--dense`` restores the dense
 slots×max_len layout. Prefill is chunked into the serving step
 (``--prefill-chunk`` tokens per mixed step, DESIGN §11): a long prompt
-never stalls the other streams' decode. Flag combinations are validated
-up front with
+never stalls the other streams' decode. ``--draft
+{int8,nf4,merged,ngram}`` turns on speculative decoding inside the
+decode megastep (DESIGN §12):
+a cheap drafter proposes ``--spec-k`` tokens per slot per round, the
+full model verifies all k+1 positions in one batched chunk pass, and
+greedy outputs stay token-identical to ``--draft off``. Flag
+combinations are validated up front with
 readable ``SystemExit`` messages — a bad ``--page-size`` should not
 surface as a jit-time shape error three layers down.
 """
@@ -43,6 +48,20 @@ def validate_args(args) -> None:
         )
     if args.max_new < 1:
         raise SystemExit(f"--max-new must be >= 1, got {args.max_new}")
+    from repro.serve import DRAFT_MODES
+
+    if args.draft not in DRAFT_MODES:
+        raise SystemExit(
+            f"--draft {args.draft!r} must be one of {', '.join(DRAFT_MODES)}"
+        )
+    if args.spec_k < 1:
+        raise SystemExit(f"--spec-k must be >= 1, got {args.spec_k}")
+    if args.draft == "merged" and not args.adapters:
+        raise SystemExit(
+            "--draft merged drafts with the mean of the registered tenants "
+            "and so needs --adapters; use --draft int8/nf4 for a "
+            "single-model (quantized self-draft) setup"
+        )
     if args.dense:
         if args.paged:
             raise SystemExit("--paged and --dense are mutually exclusive")
@@ -112,6 +131,19 @@ def main(argv=None):
                     help="KV pool size in blocks (default: slots × "
                          "ceil(max_len / page_size), the dense-equivalent "
                          "token budget)")
+    ap.add_argument("--draft", default="off",
+                    help="speculative decoding drafter (DESIGN §12): "
+                         "int8/nf4 = quantized self-draft of the frozen "
+                         "base, merged = base + mean of tenant deltas "
+                         "(needs --adapters), ngram = model-free prompt "
+                         "lookup (zero draft forwards; wins wherever "
+                         "verification is cheap and output repetitive), "
+                         "off = plain decode. Greedy outputs are "
+                         "token-identical to --draft off")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per speculative round; the full "
+                         "model verifies all k+1 positions in one batched "
+                         "chunk pass")
     args = ap.parse_args(argv)
     validate_args(args)
 
@@ -152,6 +184,7 @@ def main(argv=None):
         paged=not args.dense,
         page_size=16 if args.page_size is None else args.page_size,
         num_blocks=args.num_blocks,
+        draft=args.draft, spec_k=args.spec_k,
     )
     prompts = [p for p in args.prompts.split(";") if p]
     n_tenants = store.num_adapters if store is not None else 0
@@ -169,6 +202,12 @@ def main(argv=None):
     for req in engine.run_to_completion():
         tenant = "base" if req.adapter_id == 0 else f"tenant{req.adapter_id}"
         print(f"req{req.rid} [{tenant}]: prompt={req.prompt} -> {req.out}")
+    if args.draft != "off" and engine.spec_drafted:
+        rate = engine.spec_accepted / engine.spec_drafted
+        print(f"spec[{args.draft} k={args.spec_k}]: "
+              f"drafted={engine.spec_drafted} "
+              f"accepted={engine.spec_accepted} ({rate:.0%}) "
+              f"emitted={engine.spec_emitted}")
 
 
 if __name__ == "__main__":

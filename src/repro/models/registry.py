@@ -55,6 +55,16 @@ class Model:
             )
         return self.mod.prefill_chunk(self.cfg, params, adapters, cache, batch)
 
+    def verify_chunk(self, params, adapters, cache, batch):
+        """Speculative-decoding verification: the mixed-chunk forward with
+        per-position logits — the full model scores every slot's k+1
+        drafted positions in one batched call (KV-cache LMs only)."""
+        if not hasattr(self.mod, "verify_chunk"):
+            raise ValueError(
+                f"family {self.cfg.family!r} has no chunked verification"
+            )
+        return self.mod.verify_chunk(self.cfg, params, adapters, cache, batch)
+
     def init_cache(self, batch: int, max_len: int):
         return self.mod.init_cache(self.cfg, batch, max_len)
 

@@ -298,25 +298,10 @@ def prefill(cfg, params, adapters, batch):
     return logits, {"k": ck, "v": cv}
 
 
-def prefill_chunk(cfg, params, adapters, cache, batch):
-    """Mixed prefill+decode chunk step against a live KV cache (DESIGN §11).
-
-    Every serving slot contributes one row of a (B, C) token chunk:
-    prefilling slots carry their next ``q_len`` prompt tokens, decode
-    slots the degenerate chunk ``q_len = 1`` (their last sampled token),
-    idle slots ``q_len = 0``. Each layer writes the chunk's k/v into the
-    cache *first* (pads and idle rows drop; paged writes route through
-    the write table so shared prefix pages are never rewritten), then
-    attends with the two-sided mask — intra-chunk causal from
-    ``q_offset`` plus the post-write frontier ``q_offset + q_len``.
-    Logits are gathered at ``last_idx`` (the row's final real token), so
-    a slot whose prompt completes this chunk samples its first token in
-    the same compiled step that decode slots sample their next.
-
-    batch: {"tokens": (B, C) int32, "q_offset": (B,) int32,
-    "q_len": (B,) int32, "last_idx": (B,) int32,
-    ["block_table"/"write_table": (B, n_pages) int32 — paged serving]}.
-    """
+def _chunk_forward(cfg, params, adapters, cache, batch):
+    """Shared body of :func:`prefill_chunk` / :func:`verify_chunk`: run a
+    (B, C) token chunk through the layer stack against a live KV cache,
+    returning the full (B, C, D) hidden states and the updated cache."""
     dt = compute_dtype(cfg)
     tokens = batch["tokens"]
     q_offset = batch["q_offset"]
@@ -353,10 +338,50 @@ def prefill_chunk(cfg, params, adapters, cache, batch):
     h, (ck, cv) = jax.lax.scan(
         body, h, (blocks, a_blocks, cache["k"], cache["v"])
     )
+    return h, {"k": ck, "v": cv}
+
+
+def prefill_chunk(cfg, params, adapters, cache, batch):
+    """Mixed prefill+decode chunk step against a live KV cache (DESIGN §11).
+
+    Every serving slot contributes one row of a (B, C) token chunk:
+    prefilling slots carry their next ``q_len`` prompt tokens, decode
+    slots the degenerate chunk ``q_len = 1`` (their last sampled token),
+    idle slots ``q_len = 0``. Each layer writes the chunk's k/v into the
+    cache *first* (pads and idle rows drop; paged writes route through
+    the write table so shared prefix pages are never rewritten), then
+    attends with the two-sided mask — intra-chunk causal from
+    ``q_offset`` plus the post-write frontier ``q_offset + q_len``.
+    Logits are gathered at ``last_idx`` (the row's final real token), so
+    a slot whose prompt completes this chunk samples its first token in
+    the same compiled step that decode slots sample their next.
+
+    batch: {"tokens": (B, C) int32, "q_offset": (B,) int32,
+    "q_len": (B,) int32, "last_idx": (B,) int32,
+    ["block_table"/"write_table": (B, n_pages) int32 — paged serving]}.
+    """
+    h, cache = _chunk_forward(cfg, params, adapters, cache, batch)
     hs = jnp.take_along_axis(h, batch["last_idx"][:, None, None], axis=1)
-    h = rms_norm(hs, params["final_norm"], cfg.norm_eps)
-    logits = _head_logits(cfg, params, adapters, h)[:, 0]
-    return logits, {"k": ck, "v": cv}
+    hs = rms_norm(hs, params["final_norm"], cfg.norm_eps)
+    logits = _head_logits(cfg, params, adapters, hs)[:, 0]
+    return logits, cache
+
+
+def verify_chunk(cfg, params, adapters, cache, batch):
+    """Speculative-decoding verification pass (DESIGN §12).
+
+    The same mixed-chunk forward as :func:`prefill_chunk` — each slot's
+    ``[last token, draft_1 … draft_k]`` column writes k/v at ``q_offset +
+    i`` and attends through the two-sided chunk mask — but the head runs
+    at EVERY chunk position instead of gathering one row, so the full
+    model scores all k+1 speculative positions of every slot in one
+    batched call. Returns ((B, C, V) logits, cache); rows at or beyond a
+    slot's ``q_len`` are garbage the caller must mask (their writes
+    already dropped in-graph).
+    """
+    h, cache = _chunk_forward(cfg, params, adapters, cache, batch)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return _head_logits(cfg, params, adapters, h), cache
 
 
 def decode_step(cfg, params, adapters, cache, batch):

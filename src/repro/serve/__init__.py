@@ -16,19 +16,25 @@ kv_cache  — the dense slot cache (``KVCache``) and the paged block pool
             refcounts, shared-prefix page dedup gated on written pages);
 sampler   — greedy/temperature/top-k/top-p fused into the jitted calls;
 adapters  — tenant registry of unmerged NeuroAda deltas (stacked once,
-            cached until register/remove).
+            cached until register/remove);
+draft     — drafter construction for speculative decoding (DESIGN §12):
+            quantized self-draft or the merged mean-of-tenants model.
 """
 
 from repro.serve.adapters import AdapterStore
+from repro.serve.draft import DRAFT_MODES, build_draft_params
 from repro.serve.engine import ServeEngine
-from repro.serve.kv_cache import KVCache, PagedKVCache
+from repro.serve.kv_cache import DraftKVCache, KVCache, PagedKVCache
 from repro.serve.sampler import Sampler
 from repro.serve.scheduler import Request, Scheduler
 
 __all__ = [
     "AdapterStore",
+    "DRAFT_MODES",
+    "DraftKVCache",
     "KVCache",
     "PagedKVCache",
+    "build_draft_params",
     "Request",
     "Sampler",
     "Scheduler",

@@ -163,6 +163,13 @@ class AdapterStore:
         self._stacked = None
         self.removals += 1
 
+    def tenant_deltas(self) -> list[tuple]:
+        """Every tenant's raw ``(indices, values)`` tree pair, in id order
+        (1-based ids; the implicit base is not included). The speculative
+        drafter builder folds the mean of these into the base
+        (``serve.draft.build_draft_params``)."""
+        return list(zip(self._indices, self._values))
+
     def stacked(self):
         """(idx_tree, val_tree) of adapter stacks, N = num_adapters + 1
         (row 0 = base, zero values): ``blocks`` leaves are (L, N, k, d_out),

@@ -40,6 +40,21 @@ With ``decode_chunk=1`` the megastep reproduces the per-token loop
 exactly (same tokens, same Request lifecycle), so chunking is a pure
 throughput knob (see DESIGN §9).
 
+With ``draft != "off"`` (DESIGN §12) the decode megastep runs
+**speculative** rounds instead of single-token iterations: a cheap
+drafter (quantized self-draft via :mod:`repro.serve.draft`, the merged
+mean-of-tenants model, or the model-free ``ngram`` prompt lookup that
+costs zero draft forwards) proposes ``spec_k`` tokens per slot — a
+model drafter from its own dense KV scratch, ngram from the slot's
+committed token history — the full model scores all k+1 positions as ONE
+verify chunk through the §11 chunk forward, and rejection sampling
+commits a verified prefix — exact greedy token-match on temp-0 slots, so
+greedy outputs are token-identical to plain decode. Rollback is a pure
+per-slot position rewind: step boundaries pre-reserve the
+``decode_chunk × (spec_k + 1)`` horizon, so every row a rejected draft
+wrote is already owned and simply gets overwritten. Still one jitted
+call and ONE device→host transfer per megastep.
+
 With ``paged=True`` (DESIGN §10) the dense slot cache becomes a shared
 block pool: capacity is ``num_blocks × page_size`` tokens actually in
 flight, not ``slots × max_len`` reservations. Admission is block-aware
@@ -60,7 +75,7 @@ import numpy as np
 
 from repro.core.delta import BatchedDelta
 from repro.serve.adapters import AdapterStore
-from repro.serve.kv_cache import KVCache, PagedKVCache
+from repro.serve.kv_cache import DraftKVCache, KVCache, PagedKVCache
 from repro.serve.sampler import Sampler
 from repro.serve.scheduler import Request, Scheduler
 
@@ -88,6 +103,8 @@ class ServeEngine:
         paged: bool = False,
         page_size: int = 16,
         num_blocks: int | None = None,
+        draft: str = "off",
+        spec_k: int = 4,
     ):
         if model.cfg.family not in ("dense", "moe", "vlm"):
             # engine currently drives KV-cache LMs; SSM/hybrid/encdec decode
@@ -100,9 +117,20 @@ class ServeEngine:
         if paged and (page_size < 1 or page_size & (page_size - 1)):
             raise ValueError(f"page_size must be a power of two, got {page_size}")
         from repro.peft import BASE_DTYPES, quantize_base
+        from repro.serve.draft import DRAFT_MODES, build_draft_params
 
         if base_dtype not in BASE_DTYPES:
             raise ValueError(f"base_dtype {base_dtype!r} not in {BASE_DTYPES}")
+        if draft not in DRAFT_MODES:
+            raise ValueError(f"draft {draft!r} not in {DRAFT_MODES}")
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        if draft == "merged" and (
+            adapter_store is None or adapter_store.num_adapters == 0
+        ):
+            raise ValueError(
+                "draft='merged' needs an adapter store with registered tenants"
+            )
         if base_dtype != "fp32":
             # one quantized base serves every tenant: the decode/prefill
             # matmuls run the fused dequant path, tenant deltas apply on
@@ -124,9 +152,17 @@ class ServeEngine:
         # per decode slot. One compiled shape serves every prompt length.
         self.prefill_chunk = min(prefill_chunk, max_len)
         self.paged = paged
+        self.draft = draft
+        self.spec_k = spec_k
         self.transfers = 0  # device→host fetches: one per compiled step
         self.preemptions = 0  # block-pool OOM evictions (paged only)
         self.preemptions_mid_prefill = 0  # … of which mid-prefill victims
+        # speculative-decoding telemetry: raw drafter proposals across all
+        # live slots, full-model acceptances, and tokens actually emitted
+        # through the spec path (emitted ≤ accepted + 1 per slot-round)
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
 
         self.scheduler = Scheduler(slots)
         if paged:
@@ -139,6 +175,22 @@ class ServeEngine:
         else:
             self.kv = KVCache(model, slots, max_len)
         self.sampler = Sampler(model.cfg.vocab_size, top_k=top_k, top_p=top_p)
+
+        # speculative decoding (DESIGN §12): the drafter is derived from
+        # the served params once at construction — a quantized self-draft
+        # (shared outright when the base is already packed in the same
+        # scheme) or the merged mean-of-tenants model — and keeps its own
+        # dense KV scratch advanced lock-step with the verified frontier.
+        if draft in ("int8", "nf4", "merged"):
+            self.draft_params = build_draft_params(
+                self.params, draft, store=adapter_store, quant_block=quant_block
+            )
+            self.draft_kv = DraftKVCache(model, slots, max_len)
+        else:
+            # off, or the model-free ngram drafter: no params, no scratch —
+            # ngram proposals come from the slot's own committed tokens
+            self.draft_params = None
+            self.draft_kv = None
 
         L = model.cfg.num_layers
         eos, mlen, chunk = eos_id, max_len, decode_chunk
@@ -263,6 +315,323 @@ class ServeEngine:
                 key,
             )
 
+        K = spec_k
+
+        def spec_chunkstep(p, dp, adapters, table, wtable, cache, dcache,
+                           tokens, q_offset, q_len, last_idx, temps, key):
+            """Mixed prefill+decode step with the drafter riding along.
+
+            The drafter consumes the SAME (slots, C) token buffer into its
+            own dense KV scratch — its logits are dead code XLA prunes, so
+            drafting adds one cache-write pass to prefill, not a second
+            head. Still one compiled call, one host transfer: by the time
+            decode starts, the drafter's cache mirrors every verified
+            position (prefix-share fast-forward is disabled under
+            drafting for exactly this reason — see ``_try_place``).
+            """
+            batch = {"tokens": tokens, "q_offset": q_offset,
+                     "q_len": q_len, "last_idx": last_idx}
+            if table is not None:
+                batch["block_table"] = table
+                batch["write_table"] = wtable
+            logits, cache = model.prefill_chunk(p, adapters, cache, batch)
+            dbatch = {"tokens": tokens, "q_offset": q_offset,
+                      "q_len": q_len, "last_idx": last_idx}
+            _, dcache = model.prefill_chunk(dp, None, dcache, dbatch)
+            toks = self.sampler(logits, temps, key)
+            return cache, dcache, q_offset + q_len, toks
+
+        def spec_chunkstep_plain(p, dp, cache, dcache, *args):
+            return spec_chunkstep(p, dp, None, None, None, cache, dcache, *args)
+
+        def spec_chunkstep_ad(p, dp, aidx, aval, aid, cache, dcache, *args):
+            adapters = batched_adapters(aidx, aval, aid)
+            return spec_chunkstep(
+                p, dp, adapters, None, None, cache, dcache, *args
+            )
+
+        def spec_chunkstep_paged_plain(p, dp, table, wtable, cache, dcache,
+                                       *args):
+            return spec_chunkstep(
+                p, dp, None, table, wtable, cache, dcache, *args
+            )
+
+        def spec_chunkstep_paged_ad(p, dp, aidx, aval, aid, table, wtable,
+                                    cache, dcache, *args):
+            adapters = batched_adapters(aidx, aval, aid)
+            return spec_chunkstep(
+                p, dp, adapters, table, wtable, cache, dcache, *args
+            )
+
+        def spec_verify_round(p, adapters, table, cache, tok, pos, active,
+                              remaining, temps, d_t, q_t, k_acc, k_res):
+            """Shared verify/accept/commit half of one speculative round
+            (DESIGN §12), drafter-agnostic: takes the (S, K) proposals
+            ``d_t`` and their drafter distributions ``q_t`` from whichever
+            drafter produced them.
+
+            ``q_t`` is the drafter's (S, K, V) distribution tensor, or
+            ``None`` for a deterministic drafter (ngram): a deterministic
+            proposal's distribution is the one-hot δ_d, so q(d) ≡ 1 and
+            the gather is skipped — the accept rule degenerates to
+            u < p(d) and the residual max(0, p − δ_d) to p with the d
+            column zeroed.
+
+            (1) The full model scores [tok, d_1..d_K] as ONE verify chunk —
+            k/v for all K+1 positions land in pre-reserved rows/pages in
+            the same pass; q_len clamps at the cache edge so no row writes
+            past max_len (emission never reaches the clamped rows: the
+            cache-full trigger fires first), and paged writes go through
+            the READ table — verify rows are decode-region positions the
+            slot owns, never shared prefix pages. (2) Standard rejection
+            sampling accepts a prefix (u·q(d) < p(d), exact greedy
+            token-match when temp = 0 via one-hot distributions), the
+            first rejection resamples from max(0, p−q), a full accept
+            draws the bonus from row K. (3) The host-lifecycle stop
+            conditions (EOS | max_new | cache full) replay per emitted
+            token, truncating the commit at the first trigger exactly
+            where the per-token loop stops. Rollback is a per-slot ``pos``
+            advance of n_emit ≤ K+1: the rejected suffix's rows sit beyond
+            the new frontier in rows the slot already owns, unobservable
+            until overwritten — no table edit, no allocation, no
+            device→host traffic.
+            """
+            C = K + 1
+            S = d_t.shape[0]
+            ctokens = jnp.concatenate([tok[:, None], d_t], axis=1)
+            q_len = jnp.where(active, jnp.minimum(C, mlen - pos), 0)
+            vbatch = {"tokens": ctokens, "q_offset": pos, "q_len": q_len}
+            if table is not None:
+                vbatch["block_table"] = table
+                vbatch["write_table"] = table
+            vlogits, cache = model.verify_chunk(p, adapters, cache, vbatch)
+            p_t = self.sampler.probs(
+                vlogits.reshape(S * C, -1), jnp.repeat(temps, C)
+            ).reshape(S, C, -1)  # target distribution at every position
+
+            # rejection-sample an accepted prefix: a = |accepted|
+            u = jax.random.uniform(k_acc, (S, K))
+            p_d = jnp.take_along_axis(p_t[:, :K], d_t[..., None], -1)[..., 0]
+            if q_t is None:
+                acc = u < p_d  # q(d) ≡ 1 for a deterministic drafter
+            else:
+                q_d = jnp.take_along_axis(q_t, d_t[..., None], -1)[..., 0]
+                acc = u * jnp.maximum(q_d, 1e-30) < p_d
+            a = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+
+            # ONE replacement draw per slot, from row a — only the first
+            # rejected column's residual is ever consumed, and at a full
+            # accept (a = K) row K *is* the bonus row, so a single (S, V)
+            # categorical replaces the per-column (S, K, V) machinery. The
+            # residual max(0, p−q) normalised (equal dists degenerate to
+            # p); q one-hot means p with the d column zeroed.
+            rows = jnp.arange(S)
+            p_sel = p_t[rows, a]
+            if q_t is None:
+                # scatter 0 at the rejected proposal; a = K drops (no-op)
+                d_rej = jnp.where(
+                    a < K, d_t[rows, jnp.minimum(a, K - 1)], p_t.shape[-1]
+                )
+                res = p_sel.at[rows, d_rej].set(0.0, mode="drop")
+            else:
+                q_sel = jnp.where(
+                    (a < K)[:, None], q_t[rows, jnp.minimum(a, K - 1)], 0.0
+                )
+                res = jnp.maximum(p_sel - q_sel, 0.0)
+            res = jnp.where(
+                jnp.sum(res, axis=-1, keepdims=True) > 0, res, p_sel
+            )
+            repl = jax.random.categorical(k_res, jnp.log(res)).astype(
+                jnp.int32
+            )
+
+            # candidate stream: accepted drafts then the correction
+            idxs = jnp.arange(C)[None, :]
+            d_pad = jnp.concatenate(
+                [d_t, jnp.zeros((S, 1), jnp.int32)], axis=1
+            )
+            cand = jnp.where(idxs < a[:, None], d_pad, repl[:, None])
+            # stop triggers replayed per emitted token, post-advance — the
+            # same EOS | max_new | cache-full order as the per-token body;
+            # the triggering token IS emitted, then everything after it in
+            # the round is rolled back too
+            j1 = idxs + 1
+            trig = (
+                (cand == eos)
+                | (remaining[:, None] - j1 <= 0)
+                | (pos[:, None] + j1 >= mlen - 1)
+            )
+            can = (idxs <= a[:, None]) & active[:, None]
+            hit = can & trig
+            before = jnp.cumsum(hit.astype(jnp.int32), axis=1)
+            emit = can & (before - hit.astype(jnp.int32) == 0)
+            n_emit = jnp.sum(emit.astype(jnp.int32), axis=1)
+
+            last = jnp.take_along_axis(
+                cand, jnp.maximum(n_emit - 1, 0)[:, None], axis=1
+            )[:, 0]
+            tok = jnp.where(n_emit > 0, last, tok)
+            pos = pos + n_emit  # the rollback: rejected rows sit beyond
+            remaining = remaining - n_emit
+            active = active & ~jnp.any(hit & emit, axis=1)
+            return cache, tok, pos, active, remaining, (cand, emit, a)
+
+        def spec_megastep(p, dp, adapters, table, cache, dcache, tok, pos,
+                          active, remaining, temps, key):
+            """Compiled speculative decode loop: ``chunk`` draft/verify
+            rounds per call (DESIGN §12), model drafter.
+
+            Each round, the drafter runs K+1 one-token steps from the
+            verified frontier, proposing d_1..d_K and recording its
+            sampling distribution per proposal (the K+1-th step only
+            back-fills d_K's k/v so an all-accept round leaves no hole),
+            then hands them to the shared verify/accept/commit half. Ys
+            per round: (slots, K+1) candidate tokens + emit mask,
+            acceptance counts, and the round-entry live mask — with the
+            final positions and survivor mask, the megastep's single host
+            transfer.
+            """
+
+            def round_body(carry, k_t):
+                cache, dcache, tok, pos, active, remaining = carry
+                live = active
+                k_draft, k_acc, k_res = jax.random.split(k_t, 3)
+
+                def draft_body(c, k_i):
+                    dcache, dtok, dpos = c
+                    dl, dcache = model.decode_step(
+                        dp, None, dcache, {"token": dtok, "pos": dpos}
+                    )
+                    p_d = self.sampler.probs(dl, temps)
+                    nxt = self.sampler(dl, temps, k_i)
+                    return (dcache, nxt, dpos + 1), (nxt, p_d)
+
+                (dcache, _, _), (drafts, p_draft) = jax.lax.scan(
+                    draft_body, (dcache, tok, pos),
+                    jax.random.split(k_draft, K + 1),
+                )
+                d_t = drafts[:K].T  # (S, K); the K+1-th is cache-fill only
+                q_t = p_draft[:K].transpose(1, 0, 2)  # (S, K, V)
+                cache, tok, pos, active, remaining, ys = spec_verify_round(
+                    p, adapters, table, cache, tok, pos, active, remaining,
+                    temps, d_t, q_t, k_acc, k_res,
+                )
+                return (
+                    (cache, dcache, tok, pos, active, remaining),
+                    (*ys, live),
+                )
+
+            keys = jax.random.split(key, chunk)
+            (cache, dcache, tok, pos, active, remaining), ys = jax.lax.scan(
+                round_body, (cache, dcache, tok, pos, active, remaining), keys
+            )
+            toks, emits, accs, lives = ys
+            return cache, dcache, pos, active, toks, emits, accs, lives
+
+        def ngram_megastep(p, adapters, table, cache, hist, tok, pos,
+                           active, remaining, temps, key):
+            """Compiled speculative decode loop, model-free ngram drafter
+            (prompt lookup, DESIGN §12): drafting costs ZERO forwards, so
+            a round is one batched verify pass for up to K+1 tokens.
+
+            ``hist`` is the (slots, max_len) committed token sequence
+            (prompt + emitted), aligned with ``pos``: hist[s, pos[s]] is
+            the slot's current input token. Each round matches the most
+            recent *earlier* occurrence j of the current token and
+            proposes the continuation hist[j+1..] — wrapped with period
+            pos − j where it runs past the frontier, so a period-p cycle
+            (the attractor greedy decode settles into) extrapolates to a
+            full K-token window instead of stalling at the p known
+            followers. Deterministic proposal → the drafter distribution
+            is a one-hot, so the accept rule degenerates to u < p(d) on
+            sampled rows and exact token-match on greedy rows; the output
+            distribution stays exactly the target's. Committed tokens
+            append to hist in-graph, so later rounds in the same call
+            match against them too. No match proposes token 0 — it simply
+            gets rejected and the round still emits the verified
+            correction.
+            """
+            idx_h = jnp.arange(mlen)
+
+            def round_body(carry, k_t):
+                cache, hist, tok, pos, active, remaining = carry
+                live = active
+                k_acc, k_res = jax.random.split(k_t)
+                # most recent j < pos with hist[j] == current token; the
+                # continuation hist[j+1 .. j+K] wraps with period pos − j
+                # past the frontier: a period-p cycle's nearest match sits
+                # only p back with p known followers, and the wrap
+                # extrapolates the cycle to the full K-token window
+                eq = (hist == tok[:, None]) & (idx_h[None, :] < pos[:, None])
+                j = jnp.max(jnp.where(eq, idx_h[None, :], -1), axis=1)
+                period = jnp.maximum(pos - j, 1)
+                cols = j[:, None] + 1 + jnp.mod(
+                    jnp.arange(K)[None, :], period[:, None]
+                )
+                d_t = jnp.where(
+                    (j >= 0)[:, None],
+                    jnp.take_along_axis(
+                        hist, jnp.clip(cols, 0, mlen - 1), axis=1
+                    ),
+                    0,
+                )
+                pos0 = pos
+                cache, tok, pos, active, remaining, ys = spec_verify_round(
+                    p, adapters, table, cache, tok, pos, active, remaining,
+                    temps, d_t, None, k_acc, k_res,
+                )
+                cand, emit, a = ys
+                # append the committed tokens at pos0+1.. so later rounds
+                # (and the next match) see them; non-emitted columns drop
+                S = d_t.shape[0]
+                wpos = jnp.where(
+                    emit, pos0[:, None] + 1 + jnp.arange(K + 1)[None, :], mlen
+                )
+                hist = hist.at[jnp.arange(S)[:, None], wpos].set(
+                    cand, mode="drop"
+                )
+                return (
+                    (cache, hist, tok, pos, active, remaining),
+                    (*ys, live),
+                )
+
+            keys = jax.random.split(key, chunk)
+            (cache, hist, tok, pos, active, remaining), ys = jax.lax.scan(
+                round_body, (cache, hist, tok, pos, active, remaining), keys
+            )
+            toks, emits, accs, lives = ys
+            return cache, pos, active, toks, emits, accs, lives
+
+        def spec_megastep_plain(p, dp, cache, dcache, *args):
+            return spec_megastep(p, dp, None, None, cache, dcache, *args)
+
+        def spec_megastep_ad(p, dp, aidx, aval, aid, cache, dcache, *args):
+            adapters = batched_adapters(aidx, aval, aid)
+            return spec_megastep(p, dp, adapters, None, cache, dcache, *args)
+
+        def spec_megastep_paged_plain(p, dp, table, cache, dcache, *args):
+            return spec_megastep(p, dp, None, table, cache, dcache, *args)
+
+        def spec_megastep_paged_ad(p, dp, aidx, aval, aid, table, cache,
+                                   dcache, *args):
+            adapters = batched_adapters(aidx, aval, aid)
+            return spec_megastep(p, dp, adapters, table, cache, dcache, *args)
+
+        def ngram_megastep_plain(p, cache, hist, *args):
+            return ngram_megastep(p, None, None, cache, hist, *args)
+
+        def ngram_megastep_ad(p, aidx, aval, aid, cache, hist, *args):
+            adapters = batched_adapters(aidx, aval, aid)
+            return ngram_megastep(p, adapters, None, cache, hist, *args)
+
+        def ngram_megastep_paged_plain(p, table, cache, hist, *args):
+            return ngram_megastep(p, None, table, cache, hist, *args)
+
+        def ngram_megastep_paged_ad(p, aidx, aval, aid, table, cache, hist,
+                                    *args):
+            adapters = batched_adapters(aidx, aval, aid)
+            return ngram_megastep(p, adapters, table, cache, hist, *args)
+
         self._chunkstep_plain = jax.jit(chunkstep_plain)
         self._chunkstep_ad = jax.jit(chunkstep_ad)
         self._chunkstep_paged_plain = jax.jit(chunkstep_paged_plain)
@@ -271,6 +640,23 @@ class ServeEngine:
         self._megastep_ad = jax.jit(megastep_ad)
         self._megastep_paged_plain = jax.jit(megastep_paged_plain)
         self._megastep_paged_ad = jax.jit(megastep_paged_ad)
+        if draft == "ngram":
+            # model-free drafter: no drafter cache to feed, so mixed
+            # prefill+decode steps stay on the PLAIN chunkstep graphs —
+            # only the decode megastep family is speculative
+            self._ngram_megastep_plain = jax.jit(ngram_megastep_plain)
+            self._ngram_megastep_ad = jax.jit(ngram_megastep_ad)
+            self._ngram_megastep_paged_plain = jax.jit(ngram_megastep_paged_plain)
+            self._ngram_megastep_paged_ad = jax.jit(ngram_megastep_paged_ad)
+        elif draft != "off":
+            self._spec_chunkstep_plain = jax.jit(spec_chunkstep_plain)
+            self._spec_chunkstep_ad = jax.jit(spec_chunkstep_ad)
+            self._spec_chunkstep_paged_plain = jax.jit(spec_chunkstep_paged_plain)
+            self._spec_chunkstep_paged_ad = jax.jit(spec_chunkstep_paged_ad)
+            self._spec_megastep_plain = jax.jit(spec_megastep_plain)
+            self._spec_megastep_ad = jax.jit(spec_megastep_ad)
+            self._spec_megastep_paged_plain = jax.jit(spec_megastep_paged_plain)
+            self._spec_megastep_paged_ad = jax.jit(spec_megastep_paged_ad)
 
     # ------------------------------------------------------------- intake
 
@@ -331,11 +717,20 @@ class ServeEngine:
         if shared_lead is None:
             return False
         if not self.kv.reserve(
-            slot, min(len(toks) + self.decode_chunk, self.max_len)
+            slot, min(len(toks) + self._decode_horizon(), self.max_len)
         ):
             self.kv.evict(slot)  # full rollback: prompt pages + partials
             return False
-        req.prefilled = min(shared_lead, req.prefill_target - 1)
+        if self.draft_kv is None:
+            req.prefilled = min(shared_lead, req.prefill_target - 1)
+        # under MODEL drafting the chunk walk re-runs shared-prefix
+        # tokens: the main cache's writes on shared pages drop through the
+        # write-table sentinel (their contents are already exact), but the
+        # drafter's dense scratch has no block sharing and must ingest
+        # every basis token itself or it drafts against holes. Correctness
+        # would survive a cold drafter — acceptance would not. The ngram
+        # drafter has no scratch (proposals come from the token history),
+        # so it keeps the fast-forward.
         return True
 
     def _admit(self) -> None:
@@ -363,6 +758,8 @@ class ServeEngine:
             return False
         if self.scheduler.has_prefilling():
             self._chunk_step(k_step)
+        elif self.draft != "off":
+            self._spec_decode_step(k_step)
         else:
             self._decode_step(k_step)
         return True
@@ -378,27 +775,30 @@ class ServeEngine:
             self._reserve(1)
         plan = self.scheduler.chunk_plan(self.prefill_chunk, self.kv.pos_host)
         stacked = self.store.stacked() if self.store is not None else None
-        args = (
-            self.kv.data, jnp.asarray(plan["tokens"]),
+        spec = self.draft_kv is not None  # ngram prefills like plain
+        lead = [self.params]
+        if spec:
+            lead.append(self.draft_params)
+        if stacked is not None:
+            lead += [*stacked, jnp.asarray(plan["aid"])]
+        if self.paged:
+            lead += [self.kv.table_device(), self.kv.write_table_device()]
+        caches = [self.kv.data, self.draft_kv.data] if spec else [self.kv.data]
+        fn = getattr(
+            self,
+            ("_spec_chunkstep" if spec else "_chunkstep")
+            + ("_paged" if self.paged else "")
+            + ("_ad" if stacked is not None else "_plain"),
+        )
+        out = fn(
+            *lead, *caches, jnp.asarray(plan["tokens"]),
             jnp.asarray(plan["q_offset"]), jnp.asarray(plan["q_len"]),
             jnp.asarray(plan["last_idx"]), jnp.asarray(plan["temps"]), key,
         )
-        if self.paged:
-            tables = (self.kv.table_device(), self.kv.write_table_device())
-            if stacked is None:
-                out = self._chunkstep_paged_plain(self.params, *tables, *args)
-            else:
-                out = self._chunkstep_paged_ad(
-                    self.params, *stacked, jnp.asarray(plan["aid"]), *tables,
-                    *args,
-                )
-        elif stacked is None:
-            out = self._chunkstep_plain(self.params, *args)
+        if spec:
+            self.kv.data, self.draft_kv.data, pos_dev, toks_dev = out
         else:
-            out = self._chunkstep_ad(
-                self.params, *stacked, jnp.asarray(plan["aid"]), *args
-            )
-        self.kv.data, pos_dev, toks_dev = out
+            self.kv.data, pos_dev, toks_dev = out
         # ONE device→host transfer for the whole mixed step: the sampled
         # token vector. Positions advance deterministically to
         # q_offset + q_len, so the host mirrors them without a fetch.
@@ -415,6 +815,17 @@ class ServeEngine:
             if plan["emit"][s]:
                 req.out.append(int(toks[s]))
                 self._maybe_finish(s, req)
+
+    def _decode_horizon(self) -> int:
+        """Worst-case per-megastep position advance of one decode slot:
+        one token per scan step plain; K accepted drafts + the bonus per
+        round speculative. Step boundaries pre-reserve pages to this
+        horizon so the compiled bodies never allocate — which is exactly
+        what makes speculative rejection free: every row a rejected draft
+        wrote is already owned, so rollback is a position rewind."""
+        if self.draft == "off":
+            return self.decode_chunk
+        return self.decode_chunk * (self.spec_k + 1)
 
     def _reserve(self, horizon: int) -> None:
         """Pre-reserve every position the next compiled step can write
@@ -498,6 +909,77 @@ class ServeEngine:
             if req is not None and not active_np[s]:
                 # the in-graph mask already encodes EOS/max_new/cache-full;
                 # completing off it keeps host and device lifecycles identical
+                self.scheduler.complete(s)
+                self.kv.evict(s)
+
+    def _spec_decode_step(self, key) -> None:
+        """One speculative decode megastep (DESIGN §12): ``decode_chunk``
+        draft/verify/accept rounds over all active slots in one compiled
+        call, then replay the (round, slot, K+1) emission bundle into the
+        Request lifecycle exactly like the plain megastep replays its
+        (chunk, slots) matrix."""
+        if self.paged:
+            self._reserve(self._decode_horizon())
+        st = self.scheduler.slot_arrays()
+        stacked = self.store.stacked() if self.store is not None else None
+        ngram = self.draft == "ngram"
+        lead = [self.params] if ngram else [self.params, self.draft_params]
+        if stacked is not None:
+            lead += [*stacked, jnp.asarray(st["aid"])]
+        if self.paged:
+            lead.append(self.kv.table_device())
+        fn = getattr(
+            self,
+            ("_ngram_megastep" if ngram else "_spec_megastep")
+            + ("_paged" if self.paged else "")
+            + ("_ad" if stacked is not None else "_plain"),
+        )
+        if ngram:
+            # rebuild the token history on the host: hist[s, :len(seq)] is
+            # the committed sequence, and pos[s] == len(seq) - 1 at every
+            # decode boundary (the current input token is seq[-1]) — the
+            # invariant the in-graph matcher and appender rely on
+            hist = np.zeros((self.slots, self.max_len), np.int32)
+            for s, req in enumerate(self.scheduler.active):
+                if req is not None:
+                    seq = req.prompt + req.out
+                    hist[s, : len(seq)] = seq
+            caches = [self.kv.data, jnp.asarray(hist)]
+        else:
+            caches = [self.kv.data, self.draft_kv.data]
+        out = fn(
+            *lead, *caches,
+            jnp.asarray(st["tokens"]), self.kv.pos,
+            jnp.asarray(st["active"]), jnp.asarray(st["remaining"]),
+            jnp.asarray(st["temps"]), key,
+        )
+        if ngram:
+            self.kv.data, pos_dev = out[0], out[1]
+            fetched = out[1:]
+        else:
+            self.kv.data, self.draft_kv.data, pos_dev = out[0], out[1], out[2]
+            fetched = out[2:]
+        # still ONE device→host transfer for the whole megastep: positions,
+        # survivor mask, candidate tokens + emit mask, acceptance counts,
+        # round-entry live masks — one fetch of the bundle
+        pos_np, active_np, toks, emits, accs, lives = jax.device_get(fetched)
+        self.transfers += 1
+        self.kv.sync(pos_dev, pos_np)
+        for r in range(self.decode_chunk):
+            for s, req in enumerate(self.scheduler.active):
+                if req is None:
+                    continue
+                if lives[r, s]:
+                    req.spec_drafted += self.spec_k
+                    req.spec_accepted += int(accs[r, s])
+                    self.spec_drafted += self.spec_k
+                    self.spec_accepted += int(accs[r, s])
+                for j in range(self.spec_k + 1):
+                    if emits[r, s, j]:
+                        req.out.append(int(toks[r, s, j]))
+                        self.spec_emitted += 1
+        for s, req in enumerate(self.scheduler.active):
+            if req is not None and not active_np[s]:
                 self.scheduler.complete(s)
                 self.kv.evict(s)
 

@@ -63,6 +63,25 @@ class KVCache:
         return self.pos_host[slot] >= self.max_len - 1
 
 
+class DraftKVCache:
+    """Drafter-side KV state for speculative decoding (DESIGN §12).
+
+    Always the dense ``(L, slots, max_len, KV, hd)`` layout, even when the
+    main cache is paged: the drafter's k/v are scratch — rebuilt from
+    scratch on every (re-)admission by the mixed chunk step and advanced
+    lock-step with the verified frontier — so they need no sharing, no
+    block accounting, and no eviction. Positions are not tracked here:
+    the drafter always mirrors the engine's per-slot ``pos``; rows at or
+    beyond a slot's frontier are stale and unobservable (the same
+    overwrite-before-attend invariant as :class:`KVCache`), which is
+    exactly what makes speculative rollback free — rejected draft rows
+    are simply overwritten by the next round.
+    """
+
+    def __init__(self, model, slots: int, max_len: int):
+        self.data = model.init_cache(slots, max_len)
+
+
 # --------------------------------------------------------------- paged pool
 
 

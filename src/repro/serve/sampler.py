@@ -31,10 +31,13 @@ class Sampler:
         self.top_k = top_k
         self.top_p = top_p
 
-    def __call__(
-        self, logits: jax.Array, temps: jax.Array, key: jax.Array
-    ) -> jax.Array:
-        """logits (B, V_padded), temps (B,), key -> sampled tokens (B,) int32."""
+    def _filtered(
+        self, logits: jax.Array, temps: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        """Shared filter pipeline: (B, V_padded) logits -> the (B, vocab)
+        temperature-scaled, top-k/top-p-filtered logits the categorical
+        draw uses, plus the (B,) greedy argmax (computed post-top_k, where
+        it is invariant: the top-1 always survives both filters)."""
         lg = logits[:, : self.vocab_size].astype(jnp.float32)
         if self.top_k and self.top_k < self.vocab_size:
             kth = jax.lax.top_k(lg, self.top_k)[0][:, -1:]
@@ -52,5 +55,28 @@ class Sampler:
                 jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True
             )
             scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
+        return scaled, greedy
+
+    def __call__(
+        self, logits: jax.Array, temps: jax.Array, key: jax.Array
+    ) -> jax.Array:
+        """logits (B, V_padded), temps (B,), key -> sampled tokens (B,) int32."""
+        scaled, greedy = self._filtered(logits, temps)
         sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
-        return jnp.where(temps > 0.0, sampled, greedy)
+        return jnp.where(temps.astype(jnp.float32) > 0.0, sampled, greedy)
+
+    def probs(self, logits: jax.Array, temps: jax.Array) -> jax.Array:
+        """The (B, vocab) distribution ``__call__`` draws from, in closed
+        form: softmax of the filtered temperature-scaled logits for
+        sampled rows, a one-hot at the argmax for greedy (temp = 0) rows.
+
+        The speculative accept/resample path (DESIGN §12) consumes this
+        for both drafter and target: the rejection rule ``u·q(d) < p(d)``
+        then degenerates to exact greedy token-match on temp-0 rows
+        (one-hot q and p make the ratio 0 or 1), so one code path serves
+        greedy and stochastic slots.
+        """
+        scaled, greedy = self._filtered(logits, temps)
+        p = jax.nn.softmax(scaled, axis=-1)
+        onehot = jax.nn.one_hot(greedy, self.vocab_size, dtype=p.dtype)
+        return jnp.where(temps.astype(jnp.float32)[:, None] > 0.0, p, onehot)

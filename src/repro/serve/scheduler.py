@@ -49,6 +49,12 @@ class Request:
     # meet samples the request's next token (its *first* on fresh entry).
     prefilled: int = 0
     prefill_target: int = 0
+    # speculative-decoding telemetry (draft != "off" engines only): raw
+    # drafter proposals made for this request and how many the full model
+    # accepted — len(out) is the emitted count, so acceptance rate and
+    # drafted-vs-emitted both fall out without extra bookkeeping
+    spec_drafted: int = 0
+    spec_accepted: int = 0
 
     @property
     def mid_prefill(self) -> bool:

@@ -295,7 +295,8 @@ def test_prefix_sharing_respects_tenants():
 
 def _args(**kw):
     base = dict(decode_chunk=8, prefill_chunk=256, max_new=16, max_len=128,
-                dense=False, paged=False, page_size=None, num_blocks=None)
+                dense=False, paged=False, page_size=None, num_blocks=None,
+                draft="off", spec_k=4, adapters="")
     base.update(kw)
     import argparse
 

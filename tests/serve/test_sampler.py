@@ -72,6 +72,34 @@ def test_top_p_composes_with_top_k():
     np.testing.assert_allclose(freq[:3], kept[:3] / kept[:3].sum(), atol=0.03)
 
 
+def test_probs_is_the_sampled_distribution():
+    """``probs`` must be the closed form of what ``__call__`` draws: the
+    spec-decode accept rule consumes it for drafter and target, so any
+    drift between the two would silently bias acceptance. Checked under
+    the composed top_k+top_p filter against both the analytic nucleus and
+    the empirical sampling frequencies."""
+    s = Sampler(8, top_k=4, top_p=0.9)
+    logits = jnp.log(jnp.asarray(PROBS))[None]
+    p = np.asarray(s.probs(logits, jnp.ones((1,))))[0]
+    np.testing.assert_allclose(p.sum(), 1.0, atol=1e-6)
+    assert (p[3:] == 0.0).all()  # top_k kills 4..7, the nucleus kills 3
+    kept = PROBS[:3] / PROBS[:3].sum()
+    np.testing.assert_allclose(p[:3], kept, atol=1e-6)
+    np.testing.assert_allclose(_freq(s, logits, jnp.ones((1,))), p, atol=0.03)
+
+
+def test_probs_greedy_rows_are_one_hot():
+    """temp=0 rows collapse to a one-hot at the argmax — exactly the
+    distribution greedy ``__call__`` realises, which is what makes the
+    spec-decode rejection rule degenerate to token-match on greedy
+    slots."""
+    s = Sampler(8, top_p=0.6)
+    logits = jnp.log(jnp.tile(PROBS, (2, 1)))
+    p = np.asarray(s.probs(jnp.asarray(logits), jnp.asarray([0.0, 1.0])))
+    assert p[0, 0] == 1.0 and p[0, 1:].sum() == 0.0
+    assert 0.0 < p[1, 0] < 1.0  # sampled row keeps the full nucleus
+
+
 def test_top_p_validation():
     with pytest.raises(ValueError):
         Sampler(8, top_p=1.5)
