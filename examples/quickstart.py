@@ -62,12 +62,20 @@ def main():
     print(f"answer accuracy: {np.mean(pred == test['answer']):.1%}")
 
     # --- Phase 3: merge and serve (zero inference overhead) ------------
+    # metrics=True turns on the serving observability layer (DESIGN.md
+    # §13): counters/gauges/latency histograms derived host-side, free of
+    # extra device transfers (CLI twin: serve --metrics-out metrics.prom)
     merged = trainer.merged_params()
-    engine = ServeEngine(model, merged, slots=2, max_len=64)
+    engine = ServeEngine(model, merged, slots=2, max_len=64, metrics=True)
     engine.submit([1, 17, 25], max_new=8)
     engine.submit([1, 40, 41, 42], max_new=8)
     for req in engine.run_to_completion():
         print(f"request {req.rid}: {req.out}")
+    snap = engine.metrics.snapshot()
+    print(f"served {int(snap['serve_requests_finished_total']['series'][0]['value'])} "
+          f"requests in {int(engine.metrics.value('serve_transfers_total'))} "
+          f"compiled steps; ttft p50 "
+          f"{engine.metrics.get('serve_ttft_seconds').quantile(0.5)*1e3:.1f}ms")
 
     # --- speculative decoding (DESIGN.md §12): an int8 self-draft of the
     # merged model proposes spec_k tokens per round, the full model

@@ -5,7 +5,11 @@ per-slot NeuroAda deltas, all off ONE int8-packed frozen base — then the
 same workload again under speculative decoding with the merged
 mean-of-tenants drafter (DESIGN.md §8/§10/§11/§12; the CLI twin is
 ``python -m repro.launch.serve --base-dtype int8 --prefill-chunk 16
---adapters … [--draft merged --spec-k 4]``).
+--adapters … [--draft merged --spec-k 4]``). The whole run is observed
+through the §13 layer: metrics registry + request-lifecycle tracer, with
+the per-tenant token split and pool/prefix series read back from the
+registry at the end (CLI twin: ``--metrics-out metrics.prom --trace-out
+trace.json``, then load trace.json in Perfetto).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -17,6 +21,7 @@ import jax
 from repro.configs import get_config, reduced
 from repro.core.adapt import init_adapters
 from repro.models import get_model
+from repro.obs import Tracer
 from repro.peft import quantize_base
 from repro.quant import tree_bytes
 from repro.serve import AdapterStore, ServeEngine
@@ -54,7 +59,8 @@ def main():
     engine = ServeEngine(model, params, slots=6, max_len=128,
                          adapter_store=store, decode_chunk=8,
                          prefill_chunk=16,
-                         paged=True, page_size=16, num_blocks=32)
+                         paged=True, page_size=16, num_blocks=32,
+                         metrics=True, tracer=Tracer())
     system = list(range(1, 17))  # 16-token "system prompt" = 1 full page
     prompts = [
         system + [10, 11, 12],
@@ -93,6 +99,22 @@ def main():
     for r in reqs:
         tenant = "base" if r.adapter_id == 0 else store.names[r.adapter_id - 1]
         print(f"  req{r.rid} [{tenant}] prompt={r.prompt} -> {r.out}")
+
+    # the observability layer saw all of it (DESIGN.md §13): per-tenant
+    # token split, prefix dedup and latency quantiles from the registry,
+    # the per-request lifecycle (admission, chunked prefill, preempt/
+    # re-prefill, finish) from the tracer — zero extra device transfers
+    reg = engine.metrics
+    split = {
+        t: int(reg.value("serve_tenant_tokens_total", t))
+        for t in ("0", "1", "2")
+    }
+    print(f"tenant token split {split}, prefix pages "
+          f"hit={int(reg.value('serve_prefix_pages_hit_total'))} "
+          f"fresh={int(reg.value('serve_prefix_pages_fresh_total'))}, "
+          f"ttft p50 {reg.get('serve_ttft_seconds').quantile(0.5)*1e3:.1f}ms, "
+          f"{len(engine.tracer)} trace events "
+          f"(Tracer.write('trace.json') -> Perfetto)")
 
     # same workload with speculative decoding (DESIGN.md §12): the merged
     # drafter (base + mean of the two tenants' deltas, adapter-free

@@ -134,6 +134,60 @@ if python -m repro.launch.serve --draft merged 2>/dev/null; then
 fi
 echo "speculative-decode parity OK"
 
+echo "== observability (metrics + trace dumps parse, key series balance) =="
+# a short serve with --metrics-out/--trace-out: the Prometheus dump and the
+# Chrome trace must both parse, requests_finished must equal submitted, and
+# the paged pool must drain to zero. SMOKE_OBS_DIR persists the two files
+# past the tmpdir trap so CI can upload them as artifacts.
+obsdir="${SMOKE_OBS_DIR:-$tmpdir/obs}"
+mkdir -p "$obsdir"
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,17,25;1,40,41,42" --max-new 8 \
+    --metrics-out "$obsdir/serve_metrics.prom" \
+    --trace-out "$obsdir/serve_trace.json" --metrics-every 2 \
+    | tee "$tmpdir/serve_obs.out"
+grep -q '^\[metrics\] ' "$tmpdir/serve_obs.out"
+python - "$obsdir/serve_metrics.prom" "$obsdir/serve_trace.json" <<'EOF'
+import json
+import sys
+
+text = open(sys.argv[1]).read()
+
+
+def series(name):
+    """Sum every sample of one family (labels folded together)."""
+    tot = 0.0
+    for line in text.splitlines():
+        if line.startswith("#"):
+            continue
+        head, _, val = line.rpartition(" ")
+        if head == name or head.startswith(name + "{"):
+            tot += float(val)
+    return tot
+
+
+sub = series("serve_requests_submitted_total")
+fin = series("serve_requests_finished_total")
+assert sub == fin == 3, (sub, fin)
+assert series("serve_ttft_seconds_count") == 3
+assert series("serve_transfers_total") > 0
+assert series("serve_pool_blocks_used") == 0  # drained on exit
+doc = json.load(open(sys.argv[2]))
+evs = doc["traceEvents"]
+assert evs, "empty trace"
+names = {e["name"] for e in evs}
+for must in ("submit", "queued", "admitted", "first_token", "finish"):
+    assert must in names, f"missing {must} events"
+assert sum(e["name"] == "finish" for e in evs) == 3
+print(f"obs OK: {len(evs)} trace events, submitted=finished={int(sub)}")
+EOF
+# a bad obs path dies up front with a readable SystemExit
+if python -m repro.launch.serve --metrics-out /no/such/dir/m.prom 2>/dev/null; then
+    echo "expected bad --metrics-out parent to be rejected" >&2; exit 1
+fi
+echo "observability OK"
+
 echo "== quantized-base e2e (adapt -> 2 train steps -> export -> serve int8) =="
 # the frozen base lives in int8 through BOTH training and serving: only the
 # sparse (idx, val) bypass pairs train, and two tenants then share the one

@@ -24,11 +24,21 @@ greedy outputs stay token-identical to ``--draft off``. Flag
 combinations are validated up front with
 readable ``SystemExit`` messages — a bad ``--page-size`` should not
 surface as a jit-time shape error three layers down.
+
+Observability (DESIGN §13): ``--metrics-out m.prom`` (Prometheus text;
+``.json`` for the snapshot form) and ``--trace-out t.json`` (Chrome
+trace-event JSON, Perfetto-loadable; ``.jsonl`` for line-delimited)
+dump the run's metrics registry and request-lifecycle trace on exit;
+``--metrics-every N`` prints a one-line metrics digest every N serve
+steps; ``--profile-dir d/`` wraps the run in a ``jax.profiler`` trace
+capture for TensorBoard/XProf. All of it is host-side — the one
+device→host transfer per megastep is unchanged.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 
@@ -62,6 +72,35 @@ def validate_args(args) -> None:
             "and so needs --adapters; use --draft int8/nf4 for a "
             "single-model (quantized self-draft) setup"
         )
+    if args.metrics_every < 0:
+        raise SystemExit(
+            f"--metrics-every must be >= 0, got {args.metrics_every}"
+        )
+    has_prompts = any(p for p in args.prompts.split(";") if p)
+    if not has_prompts:
+        for flag, val in (
+            ("--metrics-out", args.metrics_out),
+            ("--trace-out", args.trace_out),
+            ("--profile-dir", args.profile_dir),
+        ):
+            if val:
+                raise SystemExit(
+                    f"{flag} needs a serve run to observe; --prompts is empty"
+                )
+    if args.profile_dir:
+        parent = os.path.dirname(os.path.abspath(args.profile_dir))
+        if not os.path.isdir(parent):
+            raise SystemExit(
+                f"--profile-dir parent {parent!r} does not exist"
+            )
+    for flag, path in (
+        ("--metrics-out", args.metrics_out),
+        ("--trace-out", args.trace_out),
+    ):
+        if path:
+            parent = os.path.dirname(os.path.abspath(path))
+            if not os.path.isdir(parent):
+                raise SystemExit(f"{flag} parent {parent!r} does not exist")
     if args.dense:
         if args.paged:
             raise SystemExit("--paged and --dense are mutually exclusive")
@@ -80,6 +119,27 @@ def validate_args(args) -> None:
             f"request: --max-len {args.max_len} needs {min_blocks} pages "
             f"of {page}"
         )
+
+
+def _metrics_line(engine, step: int) -> str:
+    """One-line digest of the live registry for ``--metrics-every``."""
+    v = engine.metrics.value
+    fin = engine.metrics.get("serve_requests_finished_total")
+    sub = engine.metrics.get("serve_requests_submitted_total")
+    line = (
+        f"[metrics] step={step}"
+        f" finished={int(fin.total)}/{int(sub.total)}"
+        f" queue={int(v('serve_queue_depth'))}"
+        f" active={int(v('serve_slots_active'))}"
+        f" transfers={int(v('serve_transfers_total'))}"
+        f" compiles={int(v('serve_jit_compiles'))}"
+    )
+    if engine.paged:
+        line += (
+            f" pool={int(v('serve_pool_blocks_used'))}"
+            f"/{int(v('serve_pool_blocks_used') + v('serve_pool_blocks_free'))}"
+        )
+    return line
 
 
 def main(argv=None):
@@ -144,6 +204,20 @@ def main(argv=None):
                     help="drafted tokens per speculative round; the full "
                          "model verifies all k+1 positions in one batched "
                          "chunk pass")
+    ap.add_argument("--metrics-out", default="",
+                    help="dump the metrics registry here on exit: .json = "
+                         "snapshot (nested, with histogram p50/p95), any "
+                         "other extension = Prometheus text exposition")
+    ap.add_argument("--trace-out", default="",
+                    help="dump the request-lifecycle trace here on exit: "
+                         ".jsonl = one event per line, any other extension "
+                         "= Chrome trace-event JSON (load in Perfetto)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print a one-line metrics digest every N serve "
+                         "steps (0 = off)")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler device trace of the run "
+                         "into this directory (TensorBoard/XProf)")
     args = ap.parse_args(argv)
     validate_args(args)
 
@@ -176,6 +250,11 @@ def main(argv=None):
             aid = store.register(*load_adapter(path), name=path)
             print(f"tenant {aid}: {path}")
 
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
     engine = ServeEngine(
         model, params, slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
@@ -185,6 +264,7 @@ def main(argv=None):
         page_size=16 if args.page_size is None else args.page_size,
         num_blocks=args.num_blocks,
         draft=args.draft, spec_k=args.spec_k,
+        tracer=tracer,
     )
     prompts = [p for p in args.prompts.split(";") if p]
     n_tenants = store.num_adapters if store is not None else 0
@@ -199,7 +279,20 @@ def main(argv=None):
     for p, aid in zip(prompts, ids):
         engine.submit([int(t) for t in p.split(",") if t],
                       max_new=args.max_new, adapter_id=aid)
-    for req in engine.run_to_completion():
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
+    try:
+        reqs = engine.scheduler.in_flight()
+        steps = 0
+        while engine.step():
+            steps += 1
+            if args.metrics_every and steps % args.metrics_every == 0:
+                print(_metrics_line(engine, steps))
+    finally:
+        if args.profile_dir:
+            jax.profiler.stop_trace()
+            print(f"device profile captured to {args.profile_dir}")
+    for req in reqs:
         tenant = "base" if req.adapter_id == 0 else f"tenant{req.adapter_id}"
         print(f"req{req.rid} [{tenant}]: prompt={req.prompt} -> {req.out}")
     if args.draft != "off" and engine.spec_drafted:
@@ -208,6 +301,17 @@ def main(argv=None):
               f"drafted={engine.spec_drafted} "
               f"accepted={engine.spec_accepted} ({rate:.0%}) "
               f"emitted={engine.spec_emitted}")
+    if args.metrics_out:
+        if args.metrics_out.endswith(".json"):
+            text = engine.metrics.dump_json()
+        else:
+            text = engine.metrics.expose()
+        with open(args.metrics_out, "w") as f:
+            f.write(text)
+        print(f"metrics written to {args.metrics_out}")
+    if args.trace_out:
+        tracer.write(args.trace_out)
+        print(f"trace written to {args.trace_out} ({len(tracer)} events)")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,12 @@ adapters  — tenant registry of unmerged NeuroAda deltas (stacked once,
             cached until register/remove);
 draft     — drafter construction for speculative decoding (DESIGN §12):
             quantized self-draft or the merged mean-of-tenants model.
+
+Observability (DESIGN §13) plugs in via ``ServeEngine(metrics=...,
+tracer=...)``: a ``repro.obs`` metrics registry (TTFT/ITL histograms,
+queue/pool gauges, per-tenant counters) and a request-lifecycle tracer,
+both derived host-side so the one-transfer-per-step contract holds with
+instrumentation on.
 """
 
 from repro.serve.adapters import AdapterStore

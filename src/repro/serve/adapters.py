@@ -45,6 +45,12 @@ class AdapterStore:
         self.names: list[str] = []
         self._stacked: tuple | None = None
         self._base = base_params
+        # observability tally: full re-stacks of the tenant tree (each is
+        # O(total adapter bytes) of host work + a device upload). The
+        # engine mirrors this into ``serve_adapter_stack_builds_total`` —
+        # a value climbing with step count is the per-step re-stack
+        # regression the identity test also pins.
+        self.stack_builds = 0
         # bumped on every remove(): ids shift, so engines stamp requests
         # with the revision they validated against and refuse to decode a
         # request whose revision is stale (silent cross-tenant serving)
@@ -182,6 +188,7 @@ class AdapterStore:
         if not self._indices:
             return None
         if self._stacked is None:
+            self.stack_builds += 1
             base_idx = self._indices[0]
             base_val = jax.tree.map(
                 lambda v: None if v is None else jnp.zeros_like(v),

@@ -65,15 +65,30 @@ write — preempting the *youngest* request back to the queue head on OOM
 (mid-prefill victims included: they re-prefill over ``prompt + out``
 later and continue identically) — and both the read and write block
 tables ride the compiled steps as device state.
+
+Observability (DESIGN §13) is host-side by construction: every counter,
+gauge, histogram and trace span derives from state a compiled step
+already hands back in its one device→host bundle (emitted tokens,
+positions, survivor masks, acceptance counts) or from pure host
+bookkeeping (queue depth, pool free-list, wall clocks). Instrumentation
+therefore cannot change the ONE-transfer-per-megastep contract — the
+transfer-counting tests run with metrics and tracing enabled — and it
+adds no traced inputs, so the compiled graphs are byte-identical with
+observability on or off (the compile-count regression test pins that).
+``metrics=False`` swaps in the no-op registry; ``tracer=None`` (the
+default) skips lifecycle tracing entirely.
 """
 
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.delta import BatchedDelta
+from repro.obs import MetricsRegistry, NullRegistry, Tracer
 from repro.serve.adapters import AdapterStore
 from repro.serve.kv_cache import DraftKVCache, KVCache, PagedKVCache
 from repro.serve.sampler import Sampler
@@ -105,6 +120,8 @@ class ServeEngine:
         num_blocks: int | None = None,
         draft: str = "off",
         spec_k: int = 4,
+        metrics: "MetricsRegistry | bool | None" = None,
+        tracer: Tracer | None = None,
     ):
         if model.cfg.family not in ("dense", "moe", "vlm"):
             # engine currently drives KV-cache LMs; SSM/hybrid/encdec decode
@@ -154,15 +171,18 @@ class ServeEngine:
         self.paged = paged
         self.draft = draft
         self.spec_k = spec_k
-        self.transfers = 0  # device→host fetches: one per compiled step
-        self.preemptions = 0  # block-pool OOM evictions (paged only)
-        self.preemptions_mid_prefill = 0  # … of which mid-prefill victims
-        # speculative-decoding telemetry: raw drafter proposals across all
-        # live slots, full-model acceptances, and tokens actually emitted
-        # through the spec path (emitted ≤ accepted + 1 per slot-round)
-        self.spec_drafted = 0
-        self.spec_accepted = 0
-        self.spec_emitted = 0
+        # one metrics registry per engine unless the caller shares one;
+        # ``metrics=False`` swaps in the no-op registry (bench baseline).
+        # The former ad-hoc tallies (transfers, preemptions, spec counts)
+        # live in the registry now, re-exported as read-only properties.
+        if metrics is None or metrics is True:
+            self.metrics = MetricsRegistry()
+        elif metrics is False:
+            self.metrics = NullRegistry()
+        else:
+            self.metrics = metrics
+        self.tracer = tracer
+        self._queued_ts: dict[int, float] = {}  # rid -> tracer enqueue ts
 
         self.scheduler = Scheduler(slots)
         if paged:
@@ -632,31 +652,285 @@ class ServeEngine:
             adapters = batched_adapters(aidx, aval, aid)
             return ngram_megastep(p, adapters, table, cache, hist, *args)
 
-        self._chunkstep_plain = jax.jit(chunkstep_plain)
-        self._chunkstep_ad = jax.jit(chunkstep_ad)
-        self._chunkstep_paged_plain = jax.jit(chunkstep_paged_plain)
-        self._chunkstep_paged_ad = jax.jit(chunkstep_paged_ad)
-        self._megastep_plain = jax.jit(megastep_plain)
-        self._megastep_ad = jax.jit(megastep_ad)
-        self._megastep_paged_plain = jax.jit(megastep_paged_plain)
-        self._megastep_paged_ad = jax.jit(megastep_paged_ad)
+        # every compiled step function registers here by name: the jit
+        # caches are the source of truth for compile counting
+        # (``compile_counts`` sums their entry counts — a cache that grows
+        # after warmup is a recompile regression).
+        self._jitted: dict[str, object] = {}
+
+        def _jit(name, fn):
+            j = jax.jit(fn)
+            self._jitted[name] = j
+            return j
+
+        self._chunkstep_plain = _jit("chunkstep_plain", chunkstep_plain)
+        self._chunkstep_ad = _jit("chunkstep_ad", chunkstep_ad)
+        self._chunkstep_paged_plain = _jit(
+            "chunkstep_paged_plain", chunkstep_paged_plain
+        )
+        self._chunkstep_paged_ad = _jit("chunkstep_paged_ad", chunkstep_paged_ad)
+        self._megastep_plain = _jit("megastep_plain", megastep_plain)
+        self._megastep_ad = _jit("megastep_ad", megastep_ad)
+        self._megastep_paged_plain = _jit(
+            "megastep_paged_plain", megastep_paged_plain
+        )
+        self._megastep_paged_ad = _jit("megastep_paged_ad", megastep_paged_ad)
         if draft == "ngram":
             # model-free drafter: no drafter cache to feed, so mixed
             # prefill+decode steps stay on the PLAIN chunkstep graphs —
             # only the decode megastep family is speculative
-            self._ngram_megastep_plain = jax.jit(ngram_megastep_plain)
-            self._ngram_megastep_ad = jax.jit(ngram_megastep_ad)
-            self._ngram_megastep_paged_plain = jax.jit(ngram_megastep_paged_plain)
-            self._ngram_megastep_paged_ad = jax.jit(ngram_megastep_paged_ad)
+            self._ngram_megastep_plain = _jit(
+                "ngram_megastep_plain", ngram_megastep_plain
+            )
+            self._ngram_megastep_ad = _jit("ngram_megastep_ad", ngram_megastep_ad)
+            self._ngram_megastep_paged_plain = _jit(
+                "ngram_megastep_paged_plain", ngram_megastep_paged_plain
+            )
+            self._ngram_megastep_paged_ad = _jit(
+                "ngram_megastep_paged_ad", ngram_megastep_paged_ad
+            )
         elif draft != "off":
-            self._spec_chunkstep_plain = jax.jit(spec_chunkstep_plain)
-            self._spec_chunkstep_ad = jax.jit(spec_chunkstep_ad)
-            self._spec_chunkstep_paged_plain = jax.jit(spec_chunkstep_paged_plain)
-            self._spec_chunkstep_paged_ad = jax.jit(spec_chunkstep_paged_ad)
-            self._spec_megastep_plain = jax.jit(spec_megastep_plain)
-            self._spec_megastep_ad = jax.jit(spec_megastep_ad)
-            self._spec_megastep_paged_plain = jax.jit(spec_megastep_paged_plain)
-            self._spec_megastep_paged_ad = jax.jit(spec_megastep_paged_ad)
+            self._spec_chunkstep_plain = _jit(
+                "spec_chunkstep_plain", spec_chunkstep_plain
+            )
+            self._spec_chunkstep_ad = _jit("spec_chunkstep_ad", spec_chunkstep_ad)
+            self._spec_chunkstep_paged_plain = _jit(
+                "spec_chunkstep_paged_plain", spec_chunkstep_paged_plain
+            )
+            self._spec_chunkstep_paged_ad = _jit(
+                "spec_chunkstep_paged_ad", spec_chunkstep_paged_ad
+            )
+            self._spec_megastep_plain = _jit(
+                "spec_megastep_plain", spec_megastep_plain
+            )
+            self._spec_megastep_ad = _jit("spec_megastep_ad", spec_megastep_ad)
+            self._spec_megastep_paged_plain = _jit(
+                "spec_megastep_paged_plain", spec_megastep_paged_plain
+            )
+            self._spec_megastep_paged_ad = _jit(
+                "spec_megastep_paged_ad", spec_megastep_paged_ad
+            )
+        self._obs_init()
+
+    # ------------------------------------------------ observability (§13)
+
+    def _obs_init(self) -> None:
+        """Bind every metric child once: the hot path touches pre-bound
+        instruments only (a float add, or a bisect for histograms) —
+        never a registry lookup. All series share the ``serve_`` prefix;
+        per-step-kind series carry ``kind`` ∈ mixed|decode|spec, request
+        series ``tenant`` (adapter id as a string, ``0`` = base)."""
+        reg = self.metrics
+        self._c_transfers = reg.counter(
+            "serve_transfers_total",
+            "Device-to-host fetches (exactly one per compiled step).",
+        )
+        steps = reg.counter(
+            "serve_steps_total", "Compiled serving steps.", labels=("kind",)
+        )
+        toks = reg.counter(
+            "serve_tokens_total", "Tokens emitted.", labels=("kind",)
+        )
+        secs = reg.histogram(
+            "serve_step_seconds", "Compiled-step wall time.", labels=("kind",)
+        )
+        kinds = ("mixed", "decode", "spec")
+        self._c_step = {k: steps.labels(k) for k in kinds}
+        self._c_tokens = {k: toks.labels(k) for k in kinds}
+        self._h_step = {k: secs.labels(k) for k in kinds}
+        self._c_submitted = reg.counter(
+            "serve_requests_submitted_total",
+            "Requests accepted by submit().",
+            labels=("tenant",),
+        )
+        self._c_admitted = reg.counter(
+            "serve_requests_admitted_total",
+            "Queue-to-slot admissions (re-admissions after preemption "
+            "included).",
+            labels=("tenant",),
+        )
+        self._c_finished = reg.counter(
+            "serve_requests_finished_total",
+            "Completed requests by termination reason.",
+            labels=("tenant", "reason"),
+        )
+        pre = reg.counter(
+            "serve_preemptions_total",
+            "Block-pool OOM evictions back to the queue head.",
+            labels=("phase",),
+        )
+        self._c_preempt = {
+            "decode": pre.labels("decode"),
+            "prefill": pre.labels("prefill"),
+        }
+        self._c_tenant_tokens = reg.counter(
+            "serve_tenant_tokens_total",
+            "Tokens emitted per tenant (adapter id 0 = base).",
+            labels=("tenant",),
+        )
+        self._h_ttft = reg.histogram(
+            "serve_ttft_seconds", "Submit-to-first-token latency."
+        )
+        self._h_itl = reg.histogram(
+            "serve_itl_seconds",
+            "Inter-token latency (host arrival; tokens sharing a "
+            "megastep split its wall evenly).",
+        )
+        self._g_queue = reg.gauge(
+            "serve_queue_depth", "Requests waiting for a slot."
+        )
+        self._g_active = reg.gauge(
+            "serve_slots_active", "Slots holding an admitted request."
+        )
+        self._g_tenants = reg.gauge(
+            "serve_tenants_registered", "Adapters in the tenant store."
+        )
+        self._g_compiles = reg.gauge(
+            "serve_jit_compiles",
+            "Compiled variants across all step functions (jit cache "
+            "entries); flat after warmup.",
+        )
+        self._g_stack_builds = reg.gauge(
+            "serve_adapter_stack_builds",
+            "Full tenant-tree re-stacks (should track register/remove "
+            "count, not step count).",
+        )
+        if self.paged:
+            self._g_pool_used = reg.gauge(
+                "serve_pool_blocks_used", "KV pool blocks allocated."
+            )
+            self._g_pool_free = reg.gauge(
+                "serve_pool_blocks_free", "KV pool blocks on the free list."
+            )
+            self._g_pool_shared = reg.gauge(
+                "serve_pool_shared_blocks",
+                "Blocks referenced by >1 slot (live prefix reuse).",
+            )
+            self._c_prefix_hit = reg.counter(
+                "serve_prefix_pages_hit_total",
+                "Admission prompt pages dedup'd against resident blocks.",
+            )
+            self._c_prefix_fresh = reg.counter(
+                "serve_prefix_pages_fresh_total",
+                "Admission prompt pages freshly allocated.",
+            )
+            self._scraped_prefix = (0, 0)
+        if self.draft != "off":
+            self._c_spec_drafted = reg.counter(
+                "serve_spec_drafted_total", "Drafter proposals (all slots)."
+            )
+            self._c_spec_accepted = reg.counter(
+                "serve_spec_accepted_total", "Proposals the verifier accepted."
+            )
+            self._c_spec_emitted = reg.counter(
+                "serve_spec_emitted_total",
+                "Tokens emitted through the speculative path.",
+            )
+            self._h_spec_accept = reg.histogram(
+                "serve_spec_accept_len",
+                "Accepted-prefix length per live slot-round (0..spec_k).",
+                buckets=tuple(float(i) for i in range(self.spec_k + 1)),
+            )
+
+    def _update_gauges(self) -> None:
+        """Refresh the point-in-time gauges after a step (pure host state:
+        queue depth, slot occupancy, pool free-list, jit cache sizes —
+        no device traffic)."""
+        self._g_queue.set(self.scheduler.queue_depth)
+        self._g_active.set(sum(r is not None for r in self.scheduler.active))
+        self._g_compiles.set(self.compile_count())
+        if self.store is not None:
+            self._g_tenants.set(self.store.num_adapters)
+            self._g_stack_builds.set(self.store.stack_builds)
+        if self.paged:
+            self._g_pool_used.set(self.kv.used_blocks)
+            self._g_pool_free.set(self.kv.free_blocks)
+            self._g_pool_shared.set(self.kv.shared_blocks)
+            hits, fresh = self.kv.prefix_page_hits, self.kv.prefix_page_fresh
+            h0, f0 = self._scraped_prefix
+            self._c_prefix_hit.inc(hits - h0)
+            self._c_prefix_fresh.inc(fresh - f0)
+            self._scraped_prefix = (hits, fresh)
+
+    def compile_counts(self) -> dict[str, int]:
+        """Per-step-function jit cache sizes. Every entry is one traced
+        compilation; a steady-state engine compiles each live variant
+        once, so totals must be flat across steps after warmup (the
+        regression test drives mixed, decode and spec steps and asserts
+        exactly that)."""
+        out = {}
+        for name, fn in self._jitted.items():
+            size = getattr(fn, "_cache_size", None)
+            out[name] = int(size()) if size is not None else 0
+        return out
+
+    def compile_count(self) -> int:
+        return sum(self.compile_counts().values())
+
+    def _emit_token(self, req: Request, tok: int, kind: str, now: float) -> None:
+        """Append one emitted token and record its latency metrics: the
+        first token per request observes TTFT, later ones ITL (tokens
+        sharing one compiled step land host-side together and split the
+        gap evenly via the caller's ``now`` spreading)."""
+        req.out.append(tok)
+        if len(req.out) == 1:
+            self._h_ttft.observe(now - req.t_submit)
+            if self.tracer is not None:
+                self.tracer.instant(req.rid, "first_token")
+        elif req.t_last:
+            self._h_itl.observe(now - req.t_last)
+        req.t_last = now
+        self._c_tenant_tokens.labels(str(req.adapter_id)).inc()
+
+    def _finish(self, slot: int, req: Request) -> None:
+        """Complete a request: classify the termination reason the same
+        way the in-graph mask fired it (EOS | max_new | cache full, in
+        that order), count it, trace it, free the slot."""
+        if req.out and req.out[-1] == self.eos_id:
+            reason = "eos"
+        elif len(req.out) >= req.max_new:
+            reason = "max_new"
+        else:
+            reason = "cache_full"
+        self._c_finished.labels(str(req.adapter_id), reason).inc()
+        if self.tracer is not None:
+            self.tracer.instant(
+                req.rid, "finish", reason=reason, tokens=len(req.out)
+            )
+        self.scheduler.complete(slot)
+        self.kv.evict(slot)
+
+    # ---------------------------------------- registry-backed telemetry
+
+    @property
+    def transfers(self) -> int:
+        """Device→host fetches: one per compiled step (registry-backed;
+        the transfer-counting tests pin it against ``jax.device_get``)."""
+        return int(self._c_transfers.value)
+
+    @property
+    def preemptions(self) -> int:
+        """Block-pool OOM evictions (paged only), all phases."""
+        return int(
+            self._c_preempt["decode"].value + self._c_preempt["prefill"].value
+        )
+
+    @property
+    def preemptions_mid_prefill(self) -> int:
+        """… of which the victim was still mid-prefill."""
+        return int(self._c_preempt["prefill"].value)
+
+    @property
+    def spec_drafted(self) -> int:
+        return int(self._c_spec_drafted.value) if self.draft != "off" else 0
+
+    @property
+    def spec_accepted(self) -> int:
+        return int(self._c_spec_accepted.value) if self.draft != "off" else 0
+
+    @property
+    def spec_emitted(self) -> int:
+        return int(self._c_spec_emitted.value) if self.draft != "off" else 0
 
     # ------------------------------------------------------------- intake
 
@@ -676,10 +950,20 @@ class ServeEngine:
                 f"adapter_id {adapter_id} not registered (have {n_reg} + base)"
             )
         temp = self.temperature if temperature is None else temperature
-        return self.scheduler.submit(
+        rid = self.scheduler.submit(
             prompt, max_new, adapter_id=adapter_id, temperature=temp,
             store_rev=self.store.removals if self.store is not None else 0,
         )
+        self._c_submitted.labels(str(adapter_id)).inc()
+        self._g_queue.set(self.scheduler.queue_depth)
+        if self.tracer is not None:
+            ts = self.tracer.now()
+            self.tracer.instant(
+                rid, "submit", ts=ts, prompt_tokens=len(prompt),
+                max_new=max_new, tenant=adapter_id,
+            )
+            self._queued_ts[rid] = ts
+        return rid
 
     def _check_adapter_ids(self) -> None:
         """Requests freeze their adapter id at submit; a store.remove()
@@ -738,7 +1022,21 @@ class ServeEngine:
         zero prefill progress — the mixed chunk steps that follow consume
         their prompts ``prefill_chunk`` tokens at a time. No compilation,
         no splice, no pow2 buckets: admission is pure bookkeeping."""
-        self.scheduler.admissible(self._try_place if self.paged else None)
+        placed = self.scheduler.admissible(
+            self._try_place if self.paged else None
+        )
+        for slot, req in placed:
+            self._c_admitted.labels(str(req.adapter_id)).inc()
+            if self.tracer is not None:
+                now = self.tracer.now()
+                t_q = self._queued_ts.pop(req.rid, now)
+                self.tracer.span(req.rid, "queued", t_q, now)
+                self.tracer.instant(
+                    req.rid, "admitted", ts=now, slot=slot,
+                    resume=bool(req.out),
+                    prefill_target=req.prefill_target,
+                    prefilled=req.prefilled,
+                )
 
     # --------------------------------------------------------------- step
 
@@ -756,12 +1054,21 @@ class ServeEngine:
         self._admit()
         if not self.scheduler.has_active():
             return False
+        t0 = time.perf_counter()
         if self.scheduler.has_prefilling():
+            kind = "mixed"
             self._chunk_step(k_step)
         elif self.draft != "off":
+            kind = "spec"
             self._spec_decode_step(k_step)
         else:
+            kind = "decode"
             self._decode_step(k_step)
+        # step accounting is pure host arithmetic on the clocks and
+        # free-lists the step already maintained — no device traffic
+        self._h_step[kind].observe(time.perf_counter() - t0)
+        self._c_step[kind].inc()
+        self._update_gauges()
         return True
 
     # ------------------------------------------------- mixed chunk step
@@ -771,6 +1078,7 @@ class ServeEngine:
         plan, pre-reserve the positions it writes (paged), run the one
         compiled mixed graph, then replay emissions into the Request
         lifecycle and register freshly written prefix pages for dedup."""
+        tr0 = self.tracer.now() if self.tracer is not None else 0.0
         if self.paged:
             self._reserve(1)
         plan = self.scheduler.chunk_plan(self.prefill_chunk, self.kv.pos_host)
@@ -803,18 +1111,33 @@ class ServeEngine:
         # token vector. Positions advance deterministically to
         # q_offset + q_len, so the host mirrors them without a fetch.
         toks = jax.device_get(toks_dev)
-        self.transfers += 1
+        self._c_transfers.inc()
         self.kv.sync(pos_dev, plan["q_offset"] + plan["q_len"])
+        now = time.perf_counter()
+        tr1 = self.tracer.now() if self.tracer is not None else 0.0
+        n_emit = 0
         for s, req in enumerate(self.scheduler.active):
             if req is None:
                 continue
-            if plan["q_len"][s] and req.mid_prefill:
-                req.prefilled += int(plan["q_len"][s])
+            take = int(plan["q_len"][s])
+            if take and req.mid_prefill:
+                if self.tracer is not None:
+                    self.tracer.span(
+                        req.rid, "prefill_chunk", tr0, tr1, tokens=take,
+                        offset=int(plan["q_offset"][s]),
+                    )
+                req.prefilled += take
                 if self.paged:
                     self.kv.mark_prefilled(s, req.prefilled)
+            elif take and self.tracer is not None:
+                # decode slot riding the mixed step as a one-token chunk
+                self.tracer.span(req.rid, "decode", tr0, tr1, tokens=1,
+                                 mixed=True)
             if plan["emit"][s]:
-                req.out.append(int(toks[s]))
+                n_emit += 1
+                self._emit_token(req, int(toks[s]), "mixed", now)
                 self._maybe_finish(s, req)
+        self._c_tokens["mixed"].inc(n_emit)
 
     def _decode_horizon(self) -> int:
         """Worst-case per-megastep position advance of one decode slot:
@@ -861,17 +1184,26 @@ class ServeEngine:
                 "num_blocks too small for max_len (validated at init; "
                 "this indicates refcount leakage)"
             )
-        if self.scheduler.active[victim].mid_prefill:
-            self.preemptions_mid_prefill += 1
+        req = self.scheduler.active[victim]
+        phase = "prefill" if req.mid_prefill else "decode"
+        self._c_preempt[phase].inc()
+        if self.tracer is not None:
+            now = self.tracer.now()
+            self.tracer.instant(
+                req.rid, "preempt", phase=phase, slot=victim,
+                tokens_done=len(req.out),
+            )
+            # re-queued at the front: the next "queued" span starts here
+            self._queued_ts[req.rid] = now
         self.scheduler.preempt(victim)
         self.kv.evict(victim)
-        self.preemptions += 1
 
     # ---------------------------------------------------- decode megastep
 
     def _decode_step(self, key) -> None:
         """One decode megastep over all active slots: up to
         ``decode_chunk`` tokens per slot in one compiled call."""
+        tr0 = self.tracer.now() if self.tracer is not None else 0.0
         if self.paged:
             self._reserve(self.decode_chunk)
         st = self.scheduler.slot_arrays()
@@ -899,18 +1231,29 @@ class ServeEngine:
         # ONE device→host transfer for the whole chunk (all slots, all
         # steps): emitted tokens + mask, final positions, survivor mask.
         pos_np, active_np, toks, emits = jax.device_get(out[1:])
-        self.transfers += 1
+        self._c_transfers.inc()
+        now = time.perf_counter()
+        tr1 = self.tracer.now() if self.tracer is not None else 0.0
         self.kv.sync(pos_dev, pos_np)
+        n_emit = 0
         for t in range(self.decode_chunk):
             for s, req in enumerate(self.scheduler.active):
                 if req is not None and emits[t, s]:
-                    req.out.append(int(toks[t, s]))
+                    self._emit_token(req, int(toks[t, s]), "decode", now)
+                    n_emit += 1
+        self._c_tokens["decode"].inc(n_emit)
+        if self.tracer is not None:
+            for s, req in enumerate(self.scheduler.active):
+                if req is not None:
+                    self.tracer.span(
+                        req.rid, "decode", tr0, tr1,
+                        tokens=int(emits[:, s].sum()),
+                    )
         for s, req in enumerate(self.scheduler.active):
             if req is not None and not active_np[s]:
                 # the in-graph mask already encodes EOS/max_new/cache-full;
                 # completing off it keeps host and device lifecycles identical
-                self.scheduler.complete(s)
-                self.kv.evict(s)
+                self._finish(s, req)
 
     def _spec_decode_step(self, key) -> None:
         """One speculative decode megastep (DESIGN §12): ``decode_chunk``
@@ -918,6 +1261,7 @@ class ServeEngine:
         call, then replay the (round, slot, K+1) emission bundle into the
         Request lifecycle exactly like the plain megastep replays its
         (chunk, slots) matrix."""
+        tr0 = self.tracer.now() if self.tracer is not None else 0.0
         if self.paged:
             self._reserve(self._decode_horizon())
         st = self.scheduler.slot_arrays()
@@ -963,25 +1307,45 @@ class ServeEngine:
         # survivor mask, candidate tokens + emit mask, acceptance counts,
         # round-entry live masks — one fetch of the bundle
         pos_np, active_np, toks, emits, accs, lives = jax.device_get(fetched)
-        self.transfers += 1
+        self._c_transfers.inc()
+        now = time.perf_counter()
+        tr1 = self.tracer.now() if self.tracer is not None else 0.0
         self.kv.sync(pos_dev, pos_np)
+        n_emit = 0
+        slot_rounds = [0] * self.slots
+        slot_tokens = [0] * self.slots
+        slot_accepted = [0] * self.slots
         for r in range(self.decode_chunk):
             for s, req in enumerate(self.scheduler.active):
                 if req is None:
                     continue
                 if lives[r, s]:
+                    acc = int(accs[r, s])
                     req.spec_drafted += self.spec_k
-                    req.spec_accepted += int(accs[r, s])
-                    self.spec_drafted += self.spec_k
-                    self.spec_accepted += int(accs[r, s])
+                    req.spec_accepted += acc
+                    self._c_spec_drafted.inc(self.spec_k)
+                    self._c_spec_accepted.inc(acc)
+                    self._h_spec_accept.observe(acc)
+                    slot_rounds[s] += 1
+                    slot_accepted[s] += acc
                 for j in range(self.spec_k + 1):
                     if emits[r, s, j]:
-                        req.out.append(int(toks[r, s, j]))
-                        self.spec_emitted += 1
+                        self._emit_token(req, int(toks[r, s, j]), "spec", now)
+                        self._c_spec_emitted.inc()
+                        n_emit += 1
+                        slot_tokens[s] += 1
+        self._c_tokens["spec"].inc(n_emit)
+        if self.tracer is not None:
+            for s, req in enumerate(self.scheduler.active):
+                if req is not None:
+                    self.tracer.span(
+                        req.rid, "spec_round", tr0, tr1,
+                        rounds=slot_rounds[s], accepted=slot_accepted[s],
+                        tokens=slot_tokens[s],
+                    )
         for s, req in enumerate(self.scheduler.active):
             if req is not None and not active_np[s]:
-                self.scheduler.complete(s)
-                self.kv.evict(s)
+                self._finish(s, req)
 
     def _maybe_finish(self, slot: int, req: Request) -> None:
         if (
@@ -989,8 +1353,7 @@ class ServeEngine:
             or len(req.out) >= req.max_new
             or self.kv.full(slot)
         ):
-            self.scheduler.complete(slot)
-            self.kv.evict(slot)
+            self._finish(slot, req)
 
     def run_to_completion(self) -> list[Request]:
         """Drain everything in flight: queued AND already-admitted active

@@ -137,6 +137,13 @@ class PagedKVCache:
         self._written = np.zeros((num_blocks,), np.bool_)
         self._table_dev = None  # cached device copies; invalidated on mutation
         self._wtable_dev = None
+        # shared-prefix accounting (DESIGN §13): full prompt pages that
+        # dedup'd against a resident block vs pages freshly allocated at
+        # admission. Plain host ints at the allocation site — the engine
+        # scrapes the deltas into its metrics registry per step, so the
+        # pool itself stays dependency-free.
+        self.prefix_page_hits = 0
+        self.prefix_page_fresh = 0
 
     # ------------------------------------------------------------- queries
 
@@ -147,6 +154,13 @@ class PagedKVCache:
     @property
     def used_blocks(self) -> int:
         return self.num_blocks - len(self._free)
+
+    @property
+    def shared_blocks(self) -> int:
+        """Blocks currently referenced by more than one slot (live
+        prefix reuse — the pool-occupancy gauges report this so the
+        dedup win is visible at serve time, not just in the bench)."""
+        return int((self.refcount > 1).sum())
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
@@ -215,6 +229,7 @@ class PagedKVCache:
         wrow = np.full((self.max_pages,), self.num_blocks, np.int32)
         prefix: list[int] = []
         shared_lead = 0  # leading pages resident in the pool, in tokens
+        n_hit = 0  # full pages dedup'd against resident blocks
         chain_shared = True
         for j in range(n_pages):
             key = None
@@ -231,6 +246,7 @@ class PagedKVCache:
                         return None
                     self.refcount[shared] += 1
                     row[j] = shared  # read-only: wrow keeps the sentinel
+                    n_hit += 1
                     if chain_shared:
                         shared_lead = (j + 1) * self.page_size
                     continue
@@ -249,6 +265,9 @@ class PagedKVCache:
         self.table[slot] = row
         self.wtable[slot] = wrow
         self.alloc_count[slot] = n_pages
+        # tally only on success: a rolled-back admission took nothing
+        self.prefix_page_hits += n_hit
+        self.prefix_page_fresh += n_pages - n_hit
         self._dirty()
         return shared_lead
 

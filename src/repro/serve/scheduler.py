@@ -25,6 +25,7 @@ out``, continuing exactly where it stopped.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -43,6 +44,12 @@ class Request:
     store_rev: int = 0
     out: list[int] = field(default_factory=list)
     done: bool = False
+    # observability stamps (host wall clock): submission time — the TTFT
+    # baseline — and the arrival of the request's latest emitted token
+    # batch, from which the engine derives inter-token latency. Written
+    # by the scheduler/engine, read by the metrics layer (DESIGN §13).
+    t_submit: float = 0.0
+    t_last: float = 0.0
     # chunked-prefill progress: basis tokens (prompt + out-at-admission)
     # already written to KV, and the admission-time basis length. A slot
     # is mid-prefill while prefilled < prefill_target; the step the two
@@ -81,10 +88,17 @@ class Scheduler:
     ) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(
-            Request(rid, list(prompt), max_new, adapter_id, temperature, store_rev)
+        req = Request(
+            rid, list(prompt), max_new, adapter_id, temperature, store_rev
         )
+        req.t_submit = time.perf_counter()
+        self._queue.append(req)
         return rid
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting for a slot (the admission backlog gauge)."""
+        return len(self._queue)
 
     def admissible(self, try_place=None) -> list[tuple[int, Request]]:
         """Pop queued requests into free slots (FIFO); returns (slot, req).

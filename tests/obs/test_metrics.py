@@ -1,0 +1,175 @@
+"""Metrics registry semantics: instruments, labels, exposition, snapshot.
+
+The exposition test is a GOLDEN test — byte-exact Prometheus text format
+0.0.4 output for a small registry — because the format is consumed by
+external scrapers that the repo cannot patch; drift here is a breaking
+change even when every number is right.
+"""
+
+import json
+
+import pytest
+
+from repro.obs import (
+    LATENCY_BUCKETS,
+    MetricsRegistry,
+    NullRegistry,
+    percentile,
+)
+
+
+def test_counter_monotone():
+    reg = MetricsRegistry()
+    c = reg.counter("hits_total", "Hits.")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+
+
+def test_gauge_set_inc_dec():
+    reg = MetricsRegistry()
+    g = reg.gauge("depth", "Depth.")
+    g.set(4)
+    g.inc()
+    g.dec(2)
+    assert g.value == 3.0
+
+
+def test_labels_children_independent():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "Requests.", labels=("tenant",))
+    c.labels("0").inc()
+    c.labels("1").inc(4)
+    # bound children are cached: same handle both times
+    assert c.labels("1") is c.labels("1")
+    assert c.labels("0").value == 1
+    assert c.labels("1").value == 4
+    assert c.total == 5
+    assert reg.value("req_total", "1") == 4
+    assert reg.value("req_total", "9") == 0  # never-bound child reads 0
+    with pytest.raises(ValueError, match="takes labels"):
+        c.labels("a", "b")
+
+
+def test_registration_idempotent_and_conflicts_loud():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "X.")
+    assert reg.counter("x_total") is a
+    assert reg.get("x_total") is a
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("x_total", labels=("k",))
+
+
+def test_histogram_buckets_and_quantile():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "Latency.", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.1, 0.5, 5.0, 50.0):
+        h.observe(v)
+    # bisect_left puts an observation equal to a bound IN that bucket
+    # (Prometheus `le` semantics); the last slot is the implied +Inf
+    assert h._counts == [2, 1, 1, 1]
+    assert h.count == 5
+    assert h.sum == pytest.approx(55.65)
+    assert 0.0 < h.quantile(0.5) <= 1.0
+    with pytest.raises(ValueError, match="strictly increase"):
+        reg.histogram("bad", buckets=(1.0, 1.0))
+    with pytest.raises(ValueError, match="quantile"):
+        h.quantile(1.5)
+    assert reg.histogram("empty", buckets=(1.0,)).quantile(0.9) == 0.0
+
+
+def test_histogram_labeled_children_get_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("t", "T.", labels=("kind",), buckets=(1.0, 2.0))
+    h.labels("a").observe(1.5)
+    assert h.labels("a").buckets == (1.0, 2.0)
+    assert h.labels("a")._counts == [0, 1, 0]
+    assert h.labels("b")._counts == [0, 0, 0]
+
+
+def test_percentile_exact_nearest_rank():
+    assert percentile([3, 1, 2], 0.0) == 1
+    assert percentile([3, 1, 2], 0.5) == 2
+    assert percentile([3, 1, 2], 1.0) == 3  # clamped to last
+    assert percentile([7.0], 0.95) == 7.0
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 0.5)
+    with pytest.raises(ValueError, match="quantile"):
+        percentile([1], 2.0)
+
+
+def test_default_latency_buckets_shape():
+    assert len(LATENCY_BUCKETS) == 18
+    assert LATENCY_BUCKETS[0] == pytest.approx(1e-4)
+    assert all(b < c for b, c in zip(LATENCY_BUCKETS, LATENCY_BUCKETS[1:]))
+
+
+def test_prometheus_exposition_golden():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "Requests.", labels=("tenant",))
+    c.labels("1").inc(2)
+    c.labels("0").inc()
+    reg.gauge("depth", "Queue depth.").set(3)
+    h = reg.histogram("lat", "Latency.", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    assert reg.expose() == (
+        "# HELP req_total Requests.\n"
+        "# TYPE req_total counter\n"
+        'req_total{tenant="0"} 1\n'
+        'req_total{tenant="1"} 2\n'
+        "# HELP depth Queue depth.\n"
+        "# TYPE depth gauge\n"
+        "depth 3\n"
+        "# HELP lat Latency.\n"
+        "# TYPE lat histogram\n"
+        'lat_bucket{le="0.1"} 1\n'
+        'lat_bucket{le="1"} 2\n'
+        'lat_bucket{le="+Inf"} 3\n'
+        "lat_sum 5.55\n"
+        "lat_count 3\n"
+    )
+
+
+def test_exposition_escapes_label_values():
+    reg = MetricsRegistry()
+    reg.counter("c_total", "C.", labels=("p",)).labels('a"b\\c\nd').inc()
+    line = reg.expose().splitlines()[2]
+    assert line == 'c_total{p="a\\"b\\\\c\\nd"} 1'
+
+
+def test_snapshot_and_dump_json():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "Requests.", labels=("tenant",)).labels("1").inc()
+    h = reg.histogram("lat", "Latency.", buckets=(1.0, 2.0))
+    h.observe(0.5)
+    h.observe(1.5)
+    snap = json.loads(reg.dump_json())  # JSON-able end to end
+    assert snap["req_total"]["type"] == "counter"
+    assert snap["req_total"]["series"] == [
+        {"labels": {"tenant": "1"}, "value": 1.0}
+    ]
+    lat = snap["lat"]["series"][0]
+    assert lat["counts"] == [1, 1, 0]
+    assert lat["count"] == 2
+    assert "p50" in lat and "p95" in lat
+
+
+def test_null_registry_is_inert():
+    reg = NullRegistry()
+    assert reg.enabled is False and MetricsRegistry.enabled is True
+    c = reg.counter("x", "X.", labels=("k",))
+    # the full instrument surface is accepted and does nothing
+    c.labels("a").inc(5)
+    reg.gauge("g").set(9)
+    reg.histogram("h").observe(1.0)
+    assert c.value == 0.0 and c.total == 0.0
+    assert reg.value("x", "a") == 0.0
+    assert reg.get("x") is None
+    assert reg.expose() == ""
+    assert reg.snapshot() == {}
+    assert json.loads(reg.dump_json()) == {}

@@ -1,0 +1,107 @@
+"""Tracer semantics and export schemas.
+
+The Chrome export test pins the trace-event JSON contract (``ph`` codes,
+µs timestamps, pid/tid mapping, thread_name metadata) because the files
+are loaded by external viewers (Perfetto, chrome://tracing) the repo
+cannot patch. Ordering matters: events must appear in recording order so
+a preempted request's re-prefill reads left to right.
+"""
+
+import json
+
+from pytest import approx
+
+from repro.obs import Tracer
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0  # seconds; tracer zeroes against construction time
+
+    def __call__(self):
+        return self.t
+
+
+def _tracer():
+    clk = FakeClock()
+    return Tracer(clock=clk), clk
+
+
+def test_now_is_microseconds_since_construction():
+    tr, clk = _tracer()
+    assert tr.now() == 0.0
+    clk.t += 0.0025
+    assert tr.now() == approx(2500.0)
+
+
+def test_record_and_query():
+    tr, clk = _tracer()
+    tr.instant(0, "submit", prompt_tokens=3)
+    clk.t += 0.001
+    t0 = tr.now()
+    clk.t += 0.002
+    tr.span(0, "queued", t0, tr.now())
+    tr.instant(1, "submit")
+    assert len(tr) == 3
+    assert [e["name"] for e in tr.events_for(0)] == ["submit", "queued"]
+    span = tr.events_for(0)[1]
+    assert span["ph"] == "X"
+    assert span["ts"] == approx(1000.0)
+    assert span["dur"] == approx(2000.0)
+    # clock skew never yields a negative duration
+    tr.span(0, "weird", 500.0, 400.0)
+    assert tr.events_for(0)[-1]["dur"] == 0.0
+
+
+def test_empty_tracer_is_still_a_tracer():
+    # engines guard with `is not None`, not truthiness: a Tracer with no
+    # events yet is falsy via __len__, which must never disable recording
+    tr, _ = _tracer()
+    assert len(tr) == 0 and not tr
+    tr.instant(0, "submit")
+    assert len(tr) == 1
+
+
+def test_chrome_export_schema():
+    tr, clk = _tracer()
+    tr.instant(7, "submit", tenant=0)
+    clk.t += 0.001
+    tr.span(7, "prefill_chunk", 0.0, tr.now(), tokens=4)
+    tr.instant(9, "submit")
+    doc = tr.to_chrome()
+    doc = json.loads(json.dumps(doc))  # must be JSON-able end to end
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    # one thread_name metadata event per rid, emitted before its first event
+    names = [(e["ph"], e["name"], e["tid"]) for e in evs]
+    assert names == [
+        ("M", "thread_name", 7),
+        ("i", "submit", 7),
+        ("X", "prefill_chunk", 7),
+        ("M", "thread_name", 9),
+        ("i", "submit", 9),
+    ]
+    assert evs[0]["args"] == {"name": "req7"}
+    inst = evs[1]
+    assert inst["pid"] == 0 and inst["s"] == "t" and "dur" not in inst
+    span = evs[2]
+    assert span["dur"] == approx(1000.0) and span["args"] == {"tokens": 4}
+
+
+def test_jsonl_export_one_event_per_line():
+    tr, _ = _tracer()
+    tr.instant(0, "submit")
+    tr.instant(1, "submit")
+    lines = tr.to_jsonl().splitlines()
+    assert len(lines) == 2
+    assert [json.loads(ln)["rid"] for ln in lines] == [0, 1]
+
+
+def test_write_picks_format_by_extension(tmp_path):
+    tr, _ = _tracer()
+    tr.instant(0, "submit")
+    chrome, jsonl = tmp_path / "t.json", tmp_path / "t.jsonl"
+    tr.write(chrome)
+    tr.write(jsonl)
+    assert "traceEvents" in json.loads(chrome.read_text())
+    assert json.loads(jsonl.read_text().strip())["name"] == "submit"

@@ -296,7 +296,9 @@ def test_prefix_sharing_respects_tenants():
 def _args(**kw):
     base = dict(decode_chunk=8, prefill_chunk=256, max_new=16, max_len=128,
                 dense=False, paged=False, page_size=None, num_blocks=None,
-                draft="off", spec_k=4, adapters="")
+                draft="off", spec_k=4, adapters="",
+                prompts="1,17,25;1,40,41,42", metrics_out="", trace_out="",
+                metrics_every=0, profile_dir="")
     base.update(kw)
     import argparse
 
@@ -327,6 +329,35 @@ def test_launch_flag_validation():
     with pytest.raises(SystemExit, match="power of two"):
         launch_serve.main(["--arch", "qwen2-1.5b", "--reduced",
                            "--page-size", "12"])
+
+
+def test_launch_obs_flag_validation(tmp_path):
+    """The observability flags reject nonsense before compilation: dump
+    paths whose parent doesn't exist, obs outputs with nothing to serve,
+    a negative digest interval."""
+    launch_serve.validate_args(_args(metrics_out=str(tmp_path / "m.prom"),
+                                     trace_out=str(tmp_path / "t.json"),
+                                     metrics_every=2,
+                                     profile_dir=str(tmp_path / "prof")))
+    with pytest.raises(SystemExit, match="metrics-every"):
+        launch_serve.validate_args(_args(metrics_every=-1))
+    gone = str(tmp_path / "no" / "such" / "dir")
+    with pytest.raises(SystemExit, match="profile-dir parent"):
+        launch_serve.validate_args(_args(profile_dir=gone + "/p"))
+    with pytest.raises(SystemExit, match="metrics-out parent"):
+        launch_serve.validate_args(_args(metrics_out=gone + "/m.prom"))
+    with pytest.raises(SystemExit, match="trace-out parent"):
+        launch_serve.validate_args(_args(trace_out=gone + "/t.json"))
+    # observing an empty run is a flag error, not a silent empty file
+    for kw in ({"metrics_out": str(tmp_path / "m.prom")},
+               {"trace_out": str(tmp_path / "t.json")},
+               {"profile_dir": str(tmp_path)}):
+        with pytest.raises(SystemExit, match="prompts is empty"):
+            launch_serve.validate_args(_args(prompts="", **kw))
+    # and through the real CLI parser
+    with pytest.raises(SystemExit, match="metrics-every"):
+        launch_serve.main(["--arch", "qwen2-1.5b", "--reduced",
+                           "--metrics-every", "-3"])
 
 
 def test_paged_engine_rejects_bad_config():
