@@ -45,7 +45,11 @@ is machine-readable.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -315,13 +319,14 @@ def run(*, steps: int = 24) -> list[str]:
     mixed = _mixed_workload(m, params, out)
     capacity = _capacity_demo(m, params, out)
     observability = _obs_overhead(m, params, out)
+    sharded = _sharded_section(out)
 
     JSON_PATH.write_text(json.dumps(
         {"arch": cfg.name, "max_len": MAX_LEN, "decode_steps_budget": steps,
          "results": records, "speedups": ratios,
          "paged_vs_dense": paged_ratios, "speculative": spec_records,
          "mixed_workload": mixed, "capacity": capacity,
-         "observability": observability},
+         "observability": observability, "sharded": sharded},
         indent=2,
     ))
     out.append(f"serve.json_written,0,{JSON_PATH}")
@@ -562,6 +567,94 @@ def _obs_overhead(m, params, out):
         "trace_events": len(eng_on.tracer),
         "metric_series": len(eng_on.metrics.snapshot()),
     }
+
+
+_SHARDED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax, json, time
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import get_model
+    from repro.serve import ServeEngine
+
+    # compute-heavier than the oracle-reduced dims: at d_model=64 every
+    # op is launch overhead and the collectives' fixed cost swamps the
+    # split compute (~0.35x); at 256/1024 the matmuls amortize it and the
+    # second host device genuinely parallelizes (>1x on 2 forced devices)
+    cfg = reduced(get_config("qwen2-1.5b")).replace(
+        dtype="float32", d_model=256, num_heads=8, num_kv_heads=4,
+        d_ff=1024, vocab_size=4096,
+    )
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+
+    def run_one(tp):
+        mesh = make_serve_mesh(tp) if tp > 1 else None
+        eng = ServeEngine(m, params, slots=4, max_len=128, decode_chunk=8,
+                          paged=True, eos_id=1 << 20, mesh=mesh)
+        for i in range(4):
+            eng.submit([1, 3 + i, 7, 2 + i], max_new=120)
+        reqs = eng.scheduler.in_flight()
+        eng.step()
+        while eng.scheduler.has_prefilling():
+            eng.step()
+        eng.step()  # compile the decode megastep outside the window
+        best = None
+        for _ in range(3):
+            tok0 = sum(len(r.out) for r in reqs)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                eng.step()
+            wall = time.perf_counter() - t0
+            toks = sum(len(r.out) for r in reqs) - tok0
+            if toks and (best is None or wall < best[0]):
+                best = (wall, toks)
+        wall, toks = best
+        return {
+            "tok_s": round(toks / wall, 1),
+            "pool_bytes": eng.kv.pool_bytes(),
+            "pool_bytes_per_shard": eng.kv.pool_bytes_per_shard(),
+            "tp": int(eng.metrics.value("serve_tp_size")),
+            "transfers": eng.transfers,
+        }
+
+    res = {"tp1": run_one(1), "tp2": run_one(2)}
+    res["tok_s_ratio_tp2_vs_tp1"] = round(
+        res["tp2"]["tok_s"] / res["tp1"]["tok_s"], 3
+    )
+    print("RESULT:" + json.dumps(res))
+    """
+)
+
+
+def _sharded_section(out):
+    """Tensor-parallel serving (DESIGN §14) in a subprocess: the device
+    count is process-global, so tp=1 and tp=2 both run under the SAME
+    forced-2-device host platform — the tok/s ratio compares identical
+    XLA runtimes, isolating the cost of the collectives. The structural
+    claim is the pool partition: per-shard bytes = total / TP."""
+    env = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    if proc.returncode != 0:
+        out.append("serve.sharded.tp2,0,FAILED")
+        return {"error": proc.stderr[-1000:]}
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    res = json.loads(line[len("RESULT:"):])
+    res["claim"] = (
+        "per-shard KV pool bytes = unsharded / TP; greedy tokens "
+        "identical to tp=1 (pinned by tests/serve/test_sharded.py)"
+    )
+    out.append(
+        f"serve.sharded.tp2,0,tok_s={res['tp2']['tok_s']}"
+        f"_ratio={res['tok_s_ratio_tp2_vs_tp1']}"
+        f"_shard_bytes={res['tp2']['pool_bytes_per_shard']}"
+    )
+    return res
 
 
 if __name__ == "__main__":

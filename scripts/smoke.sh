@@ -83,6 +83,28 @@ if python -m repro.launch.serve --page-size 12 2>/dev/null; then
 fi
 echo "paged-vs-dense parity OK"
 
+echo "== tensor-parallel serving (--tp 2 greedy output must match --tp 1) =="
+# two forced host devices: the TP engine shards the base Megatron-style,
+# partitions the KV pool along the kv-head axis, and must be externally
+# invisible — token-for-token identical output, same CLI
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,17,25;1,40,41,42" --max-new 8 \
+    --tp 1 | grep '^req' > "$tmpdir/serve_tp1.out"
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,17,25;1,40,41,42" --max-new 8 \
+    --tp 2 | grep '^req' > "$tmpdir/serve_tp2.out"
+diff "$tmpdir/serve_tp1.out" "$tmpdir/serve_tp2.out"
+# a tp that does not divide the local devices dies with a readable
+# SystemExit before any compilation
+if python -m repro.launch.serve --reduced --tp 7 2>/dev/null; then
+    echo "expected --tp 7 on 1 device to be rejected" >&2; exit 1
+fi
+echo "tensor-parallel parity OK"
+
 echo "== chunked prefill (long prompt admitted mid-decode, timed) =="
 # two short streams decode while a 56-token prompt is consumed in 8-token
 # chunks through the mixed step; greedy output must be token-identical to

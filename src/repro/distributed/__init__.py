@@ -9,7 +9,12 @@ from repro.distributed.fault import NanGuard, StragglerMonitor
 from repro.distributed.sharding import (
     adapter_shardings,
     batch_specs,
+    cache_shardings,
+    canonical_axes,
+    canonical_spec,
     data_axes,
+    delta_spec_from,
+    kv_axis_spec,
     needs_fsdp,
     param_shardings,
     spec_for_param,
@@ -17,7 +22,9 @@ from repro.distributed.sharding import (
 
 __all__ = [
     "NanGuard", "StragglerMonitor", "adapter_shardings", "batch_specs",
+    "cache_shardings", "canonical_axes", "canonical_spec",
     "clear_activation_sharding", "constrain", "constrain_inner",
-    "constrain_moe", "data_axes", "needs_fsdp", "param_shardings",
-    "set_activation_sharding", "spec_for_param",
+    "constrain_moe", "data_axes", "delta_spec_from", "kv_axis_spec",
+    "needs_fsdp", "param_shardings", "set_activation_sharding",
+    "spec_for_param",
 ]

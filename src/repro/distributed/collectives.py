@@ -1,11 +1,24 @@
-"""Gradient-compression hooks.
+"""Collectives: TP-serving shard_map plumbing + gradient-compression hooks.
 
-NeuroAda's primary distributed dividend is *structural* gradient
-compression: the data-parallel all-reduce carries (…, k, d_out) delta
-grads — k/d_in of dense traffic (4096× for LLaMA-7B at k=1). This module
-adds an *optional* second stage — error-feedback int8 quantisation — for
-the baselines (full/masked) whose grads are still dense, and for NeuroAda
-at large k.
+**Serving (DESIGN §14).** The sharded engine leans on GSPMD for every
+dense collective — row-parallel o/down matmuls psum their partial sums,
+the vocab-sharded head all-gathers at the sampler's argmax — but the
+Pallas kernels are opaque to the partitioner, so their sharded dispatch
+wraps each kernel in :func:`tp_shard_map` over the ``model`` axis: every
+shard runs the SAME grid shape on its local kv-head (or d_out-column)
+slice, and the merge is absorbed by the first row-parallel matmul after
+the kernel (no collective inside the mapped body). Per-megastep
+collective inventory, all GSPMD-inserted: one psum per o-proj and one
+per down-proj per layer, one logits all-gather per sampled position —
+identical across the mixed/plain/spec/ngram megastep kinds because they
+all bottom out in the same chunk/decode forwards.
+
+**Training.** NeuroAda's primary distributed dividend is *structural*
+gradient compression: the data-parallel all-reduce carries (…, k, d_out)
+delta grads — k/d_in of dense traffic (4096× for LLaMA-7B at k=1). This
+module adds an *optional* second stage — error-feedback int8
+quantisation — for the baselines (full/masked) whose grads are still
+dense, and for NeuroAda at large k.
 
 ``quantize``/``dequantize`` are pure and run *before* the pjit-inserted
 all-reduce when applied inside a shard_map'd grad step; used standalone
@@ -20,6 +33,32 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+
+def tp_shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map a kernel body over the serving mesh.
+
+    ``check_rep=False``: the bodies are opaque Pallas calls (or their
+    interpret twins) — replication checking cannot see through them, and
+    every output is explicitly spec'd anyway."""
+    return shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def tp_psum(x: jax.Array, axis_name: str = "model") -> jax.Array:
+    """Merge row-parallel partial sums inside a shard_map body."""
+    return jax.lax.psum(x, axis_name)
+
+
+def tp_all_gather(
+    x: jax.Array, axis: int = -1, axis_name: str = "model"
+) -> jax.Array:
+    """Rebuild a full tensor from per-shard slices (tiled along ``axis``)
+    inside a shard_map body — e.g. vocab-sharded logits before a host
+    fetch that wants the whole row."""
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
 
 
 class EFState(NamedTuple):

@@ -35,6 +35,61 @@ def clear_activation_sharding() -> None:
     set_activation_sharding(None, None, batch_div=1, seq_div=1)
 
 
+def snapshot() -> dict:
+    """Copy of the full sharding context (activation + serve) — lets a
+    scoped user (the TP serving engine wraps every compiled call) restore
+    whatever a trainer in the same process had configured."""
+    return {**_STATE, **_SERVE}
+
+
+def restore(state: dict) -> None:
+    _STATE.update({k: state[k] for k in _STATE})
+    _SERVE.update({k: state[k] for k in _SERVE})
+
+
+# ------------------------------------------------- serving mesh (TP serve)
+
+# Set (scoped) by the sharded ServeEngine around its compiled calls; model
+# code and the kernel dispatch layer read it at trace time. ``mesh`` is a
+# concrete jax Mesh with a "model" axis; ``tp`` its size. None/1 = the
+# single-device engine, in which case every hook below is a no-op.
+_SERVE = {"mesh": None, "tp": 1}
+
+
+def set_serve_mesh(mesh) -> None:
+    tp = 1
+    if mesh is not None and "model" in mesh.axis_names:
+        tp = int(mesh.shape["model"])
+    _SERVE.update(mesh=mesh, tp=tp)
+
+
+def clear_serve_mesh() -> None:
+    _SERVE.update(mesh=None, tp=1)
+
+
+def serve_mesh():
+    return _SERVE["mesh"]
+
+
+def serve_tp() -> int:
+    return _SERVE["tp"]
+
+
+def constrain_kv(x: jax.Array) -> jax.Array:
+    """Pin a serving cache leaf (…, KV, hd) to its kv-head sharding so
+    GSPMD carries the partitioned pool through scan carries and megastep
+    outputs instead of rematerialising a replicated copy. No-op without a
+    serve mesh or when KV % tp != 0 (the reduced single-device configs)."""
+    if _SERVE["mesh"] is None or _SERVE["tp"] <= 1 or x.ndim < 2:
+        return x
+    kv = x.shape[-2]
+    if kv % _SERVE["tp"] or kv < _SERVE["tp"]:
+        return x
+    spec = [None] * x.ndim
+    spec[-2] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
 def constrain(h: jax.Array) -> jax.Array:
     """h (B, S, D) -> sharding-constrained h (sequence-parallel layout)."""
     if _STATE["variant"] == "none":

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.adapt import path_str
+from repro.quant.qtensor import QuantizedTensor
 
 COL_KEYS = {
     "wq", "wk", "wv", "wgate", "wup", "in_proj", "dt_proj", "head",
@@ -44,16 +45,28 @@ def data_axes(mesh: Mesh):
     return dp if dp else None
 
 
+def canonical_axes(axes):
+    """ONE canonical form for a spec entry: a single axis is always the
+    bare name (``'x'``, never ``('x',)``). P('x') and P(('x',)) compare
+    unequal across jax versions while meaning the same placement, and
+    specs are compared structurally in tests and at jit cache keys — so
+    every rule funnels through here before landing in a PartitionSpec."""
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
+
+
+def canonical_spec(spec: P) -> P:
+    """Normalize every entry of a PartitionSpec to the canonical form."""
+    return P(*(canonical_axes(e) for e in spec))
+
+
 def _put(spec: list, dim: int, axes, shape, mesh: Mesh):
     """Assign axes to dim if divisible, else leave replicated."""
     if axes is None:
         return
     if shape[dim] % _axis_size(mesh, axes) == 0:
-        # bare name for a single axis: P('x') vs P(('x',)) compare unequal
-        # across jax versions, and specs are compared structurally in tests.
-        if isinstance(axes, tuple) and len(axes) == 1:
-            axes = axes[0]
-        spec[dim] = axes
+        spec[dim] = canonical_axes(axes)
 
 
 def spec_for_param(
@@ -129,6 +142,34 @@ def needs_fsdp(params, mesh: Mesh, hbm_budget_bytes: float = 8 * 2**30) -> bool:
     return total / tp > hbm_budget_bytes
 
 
+def _is_param_leaf(x):
+    return x is None or isinstance(x, QuantizedTensor)
+
+
+def _fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Re-fit a spec to a concrete shape: entries whose axis size no longer
+    divides the dim (packed layouts) fall back to replicated, per-dim."""
+    out = [None] * len(shape)
+    for dim, axes in enumerate(tuple(spec)[: len(shape)]):
+        _put(out, dim, axes, shape, mesh)
+    return P(*out)
+
+
+def qt_shardings(qt: QuantizedTensor, spec: P, mesh: Mesh) -> QuantizedTensor:
+    """Shardings for a packed (quantized) leaf: the *logical* spec re-fit
+    to the packed ``data`` and blockwise ``scales`` shapes. d_out (the TP
+    col/row axis's partner in serving) survives packing unchanged, so a
+    col-parallel spec shards both children; a dim packing made
+    non-divisible (nf4's halved d_in under row-parallel) replicates that
+    dim only. The result is itself a QuantizedTensor pytree node, so
+    ``jax.device_put(params, shardings)`` maps child-for-child."""
+    return QuantizedTensor(
+        NamedSharding(mesh, _fit_spec(spec, qt.data.shape, mesh)),
+        NamedSharding(mesh, _fit_spec(spec, qt.scales.shape, mesh)),
+        qt.qdtype, qt.block, qt.dtype_name,
+    )
+
+
 def param_shardings(params, mesh: Mesh, family: str, *, fsdp: bool | None = None):
     if fsdp is None:
         fsdp = needs_fsdp(params, mesh)
@@ -137,36 +178,55 @@ def param_shardings(params, mesh: Mesh, family: str, *, fsdp: bool | None = None
         if leaf is None:
             return None
         name = path_str(path)
-        return NamedSharding(
-            mesh, spec_for_param(name, leaf.shape, mesh, family, fsdp=fsdp)
-        )
+        spec = spec_for_param(name, leaf.shape, mesh, family, fsdp=fsdp)
+        if isinstance(leaf, QuantizedTensor):
+            # rules fire on the LOGICAL shape (shared with the dense
+            # path), then re-fit to the packed children
+            return qt_shardings(leaf, spec, mesh)
+        return NamedSharding(mesh, spec)
 
-    return jax.tree_util.tree_map_with_path(one, params)
+    return jax.tree_util.tree_map_with_path(one, params, is_leaf=_is_param_leaf)
 
 
 def delta_spec_from(wspec: P, idx_shape: tuple[int, ...]) -> P:
-    """Delta (…, k, d_out) inherits the host matrix's d_out sharding."""
-    parts = list(wspec) + [None] * (len(idx_shape) - len(wspec))
-    spec = list(parts[: len(idx_shape)])
+    """Delta (…, k, d_out) inherits the host matrix's d_out sharding.
+
+    Handles both ranks a delta comes in: training deltas mirror the
+    weight's rank (the d_in entry simply drops — a delta has no d_in
+    axis), and the serving store's tenant stacks carry one extra N axis
+    inserted after the layer axis ((L, N, k, d_out) blocks, (N, k, V)
+    untied heads, (L, N, E, k, F) expert stacks). The weight's leading
+    entries are therefore RIGHT-aligned against the delta's leading
+    dims: an expert-parallel axis stays on E under the tenant-axis
+    shift, and the slack lands on the layer axis, which no rule ever
+    shards."""
     wlist = list(wspec)
-    spec = [None] * len(idx_shape)
-    # leading stack dims copy the weight's leading spec entries
-    lead = len(idx_shape) - 2
-    for i in range(min(lead, max(len(wlist) - 2, 0))):
-        spec[i] = wlist[i]
+    spec: list = [None] * len(idx_shape)
+    lead = len(idx_shape) - 2  # dims before the (k, d_out) tail
+    wlead = wlist[:-2] if len(wlist) >= 2 else []
+    if lead > 0 and wlead:
+        use = wlead[-lead:]
+        off = lead - len(use)
+        for j, ax in enumerate(use):
+            spec[off + j] = ax
     spec[-2] = None  # k axis
     spec[-1] = wlist[-1] if wlist else None  # d_out axis
-    return P(*spec)
+    return canonical_spec(P(*spec))
 
 
 def adapter_shardings(params, indices, mesh: Mesh, family: str, *, fsdp: bool | None = None):
-    """Shardings for (indices, values) trees given the param tree."""
+    """Shardings for (indices, values) trees given the param tree.
+
+    Quantized bases participate too: a QuantizedTensor leaf contributes
+    its LOGICAL shape, so a tenant delta inherits exactly the d_out
+    sharding its packed host matrix carries."""
     if fsdp is None:
         fsdp = needs_fsdp(params, mesh)
-    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_p = jax.tree_util.tree_flatten_with_path(params, is_leaf=_is_param_leaf)[0]
     specs = {
         path_str(p): spec_for_param(path_str(p), l.shape, mesh, family, fsdp=fsdp)
         for p, l in flat_p
+        if l is not None
     }
 
     def one(path, leaf):
@@ -184,6 +244,39 @@ def like_tree(template_shardings, tree):
     return jax.tree.map(
         lambda s, _: s, template_shardings, tree, is_leaf=lambda x: x is None
     )
+
+
+# ------------------------------------------------------- serving KV caches
+
+
+def kv_axis_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Partition a serving cache leaf along its kv-head axis.
+
+    Both layouts put kv-heads second-to-last — dense slot cache
+    ``(L, B, Smax, KV, hd)`` and paged block pool ``(L, N, P, KV, hd)`` —
+    which is also the axis the decode/prefill kernel grids already
+    iterate, so each TP shard holds (and attends) only its own kv-head
+    slice of every page. Falls back to replicated when KV % tp != 0."""
+    spec: list = [None] * len(shape)
+    if "model" in mesh.axis_names:
+        _put(spec, -2, "model", shape, mesh)
+    return P(*spec)
+
+
+def cache_shardings(cache, mesh: Mesh):
+    """NamedShardings for a serving cache tree: ``k``/``v`` leaves shard
+    on the kv-head axis, everything else (positions, conv/ssm state)
+    replicates."""
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        key = path_str(path).split("/")[-1]
+        if key in ("k", "v"):
+            return NamedSharding(mesh, kv_axis_spec(leaf.shape, mesh))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache)
 
 
 # ------------------------------------------------------------ batch / cache

@@ -258,3 +258,64 @@ def paged_decode_attention_pallas(
         interpret=interpret,
     )(tbl, vl, qg, k_pool, v_pool)
     return out.reshape(b, 1, h, hd)
+
+
+# --------------------------------------------------- TP-sharded dispatch
+
+
+def decode_attention_sharded(
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_valid_len, mesh,
+    *, interpret: bool = False,
+) -> jax.Array:
+    """Tensor-parallel dispatch of :func:`decode_attention_pallas`.
+
+    The kernel grid is (slot, kv-head, KV-chunk) — kv-heads are embarrassingly
+    parallel — so each TP shard runs the SAME kernel on its local kv-head
+    slice of q and the cache (q heads group-major: head h serves kv-head
+    h // G, so the (B, 1, H, hd) query splits along H exactly like the
+    cache splits along Hkv). Output stays head-sharded; the row-parallel
+    o-proj psum right after absorbs the merge, so no collective runs here.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.collectives import tp_shard_map
+
+    vl = jnp.broadcast_to(jnp.asarray(kv_valid_len), (q.shape[0],))
+
+    def body(q_l, k_l, v_l, vl_l):
+        return decode_attention_pallas(q_l, k_l, v_l, vl_l, interpret=interpret)
+
+    h = P(None, None, "model", None)
+    return tp_shard_map(
+        body, mesh, in_specs=(h, h, h, P(None)), out_specs=h
+    )(q, k, v, vl)
+
+
+def paged_decode_attention_sharded(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
+    kv_valid_len, mesh, *, interpret: bool = False,
+) -> jax.Array:
+    """Tensor-parallel dispatch of :func:`paged_decode_attention_pallas`.
+
+    The block pool partitions along its kv-head axis (every shard holds
+    ALL pages, but only its head slice of each — the ÷TP capacity win),
+    the block table and valid lengths replicate, and each shard sweeps
+    its local pool with the same (slot, kv-head, page) grid.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.collectives import tp_shard_map
+
+    vl = jnp.broadcast_to(jnp.asarray(kv_valid_len), (q.shape[0],))
+
+    def body(q_l, k_l, v_l, t_l, vl_l):
+        return paged_decode_attention_pallas(
+            q_l, k_l, v_l, t_l, vl_l, interpret=interpret
+        )
+
+    h = P(None, None, "model", None)
+    pool = P(None, None, "model", None)
+    return tp_shard_map(
+        body, mesh,
+        in_specs=(h, pool, pool, P(None, None), P(None)), out_specs=h,
+    )(q, k_pool, v_pool, table, vl)

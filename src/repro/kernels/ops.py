@@ -24,14 +24,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import context as tp_ctx
 from repro.kernels import ref
 from repro.kernels.decode_attention import (
     decode_attention_pallas,
+    decode_attention_sharded,
     paged_decode_attention_pallas,
+    paged_decode_attention_sharded,
 )
 from repro.kernels.fused_linear import fused_linear_pallas
-from repro.kernels.prefill_attention import paged_prefill_attention_pallas
-from repro.kernels.quant_linear import fused_linear_q_pallas
+from repro.kernels.prefill_attention import (
+    paged_prefill_attention_pallas,
+    paged_prefill_attention_sharded,
+)
+from repro.kernels.quant_linear import fused_linear_q_pallas, matmul_q_cols_sharded
 from repro.kernels.sparse_delta import (
     sparse_delta_batched_pallas,
     sparse_delta_dval_pallas,
@@ -313,12 +319,20 @@ def fused_linear_q(
     return y.reshape(*lead, qw.shape[-1])
 
 
-def matmul_q(x: jax.Array, w) -> jax.Array:
+def matmul_q(x: jax.Array, w, *, tp_col_sharded: bool = False) -> jax.Array:
     """x @ W for a plain *or* quantized W (no bypass; serving base matmul).
 
     With a QuantizedTensor on the Pallas backends this runs the fused
     dequant×matmul kernel with a zero bypass; on jnp it dequantizes and
     lets XLA fuse. Plain arrays pass straight to ``jnp.dot``.
+
+    ``tp_col_sharded=True`` promises W is column-parallel over the serving
+    mesh's ``model`` axis (the vocab-sharded head is the one call site):
+    under a TP serve mesh the quantized kernel then dispatches through its
+    shard_map wrapper, each shard sweeping its local d_out columns. The
+    flag exists because a matmul can't infer col-vs-row placement from the
+    operand at trace time — the caller knows the placement rule, so the
+    caller says so.
     """
     if not isinstance(w, QuantizedTensor):
         return jnp.dot(x, w)
@@ -327,6 +341,14 @@ def matmul_q(x: jax.Array, w) -> jax.Array:
     lead = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
     n = w.shape[-1]
+    if tp_col_sharded:
+        mesh = tp_ctx.serve_mesh()
+        tp = tp_ctx.serve_tp()
+        if mesh is not None and tp > 1 and n % tp == 0:
+            y = matmul_q_cols_sharded(
+                x2d, w, mesh, interpret=_backend == "pallas_interpret"
+            )
+            return y.reshape(*lead, n)
     # a zero bypass rides the fused kernel through the custom-VJP wrapper,
     # so the path stays differentiable (dx only) on the Pallas backends —
     # e.g. LoRA or untied-head training on a quantized base
@@ -337,6 +359,22 @@ def matmul_q(x: jax.Array, w) -> jax.Array:
 
 
 # ------------------------------------------------------------ decode attention
+
+
+def _serve_mesh_for_kv(num_kv_heads: int):
+    """The serving mesh, when a Pallas kernel should dispatch through its
+    shard_map wrapper: a TP serve mesh is live and the kv-head axis splits
+    evenly across it. Returns None on the jnp backend (GSPMD partitions
+    the oracle einsums itself) and for non-divisible head counts (the
+    engine validates up front, so that's only reachable from ad-hoc
+    callers — they get the replicated kernel, still correct)."""
+    mesh = tp_ctx.serve_mesh()
+    tp = tp_ctx.serve_tp()
+    if mesh is None or tp <= 1 or _backend == "jnp":
+        return None
+    if num_kv_heads % tp:
+        return None
+    return mesh
 
 
 def decode_attention(
@@ -352,6 +390,12 @@ def decode_attention(
     """
     if _backend == "jnp":
         return ref.decode_attention_ref(q, k, v, kv_valid_len)
+    mesh = _serve_mesh_for_kv(k.shape[-2])
+    if mesh is not None:
+        return decode_attention_sharded(
+            q, k, v, kv_valid_len, mesh,
+            interpret=_backend == "pallas_interpret",
+        )
     return decode_attention_pallas(
         q, k, v, kv_valid_len, interpret=_backend == "pallas_interpret"
     )
@@ -371,6 +415,12 @@ def paged_decode_attention(
     """
     if _backend == "jnp":
         return ref.paged_decode_attention_ref(q, k_pool, v_pool, table, kv_valid_len)
+    mesh = _serve_mesh_for_kv(k_pool.shape[-2])
+    if mesh is not None:
+        return paged_decode_attention_sharded(
+            q, k_pool, v_pool, table, kv_valid_len, mesh,
+            interpret=_backend == "pallas_interpret",
+        )
     return paged_decode_attention_pallas(
         q, k_pool, v_pool, table, kv_valid_len,
         interpret=_backend == "pallas_interpret",
@@ -393,6 +443,12 @@ def prefill_attention(
     if _backend == "jnp":
         return ref.paged_prefill_attention_ref(
             q, k_pool, v_pool, table, q_offset, kv_valid_len
+        )
+    mesh = _serve_mesh_for_kv(k_pool.shape[-2])
+    if mesh is not None:
+        return paged_prefill_attention_sharded(
+            q, k_pool, v_pool, table, q_offset, kv_valid_len, mesh,
+            interpret=_backend == "pallas_interpret",
         )
     return paged_prefill_attention_pallas(
         q, k_pool, v_pool, table, q_offset, kv_valid_len,

@@ -176,3 +176,40 @@ def paged_prefill_attention_pallas(
     )(tbl, qoff, vl, qg, k_pool, v_pool)
     out = out.reshape(b, hkv, c, g, hd).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, c, h, hd)
+
+
+# --------------------------------------------------- TP-sharded dispatch
+
+
+def paged_prefill_attention_sharded(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
+    q_offset, kv_valid_len, mesh, *, interpret: bool = False,
+) -> jax.Array:
+    """Tensor-parallel dispatch of :func:`paged_prefill_attention_pallas`.
+
+    Same partition as the decode twin: the (B, C, H, hd) query chunk
+    splits along H (group-major, so head h's kv-head h // G lands on the
+    same shard), the pool along its kv-head axis; table / q_offset /
+    kv_valid_len replicate as scalar-prefetch operands. Each shard runs
+    the identical page-sweep grid on its slice and the o-proj's
+    row-parallel psum merges the head outputs downstream.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.collectives import tp_shard_map
+
+    qo = jnp.broadcast_to(jnp.asarray(q_offset), (q.shape[0],))
+    vl = jnp.broadcast_to(jnp.asarray(kv_valid_len), (q.shape[0],))
+
+    def body(q_l, k_l, v_l, t_l, qo_l, vl_l):
+        return paged_prefill_attention_pallas(
+            q_l, k_l, v_l, t_l, qo_l, vl_l, interpret=interpret
+        )
+
+    h = P(None, None, "model", None)
+    pool = P(None, None, "model", None)
+    return tp_shard_map(
+        body, mesh,
+        in_specs=(h, pool, pool, P(None, None), P(None), P(None)),
+        out_specs=h,
+    )(q, k_pool, v_pool, table, qo, vl)

@@ -137,3 +137,38 @@ def fused_linear_q_pallas(
         ),
         interpret=interpret,
     )(x, data, scales, idx, val, b)
+
+
+# --------------------------------------------------- TP-sharded dispatch
+
+
+def matmul_q_cols_sharded(x2d, qw, mesh, *, interpret: bool = False):
+    """Column-sharded ``x @ dequant(Wq)`` for the vocab-sharded serving
+    head: ``data`` and ``scales`` both carry d_out last, so they split
+    over ``model`` together while the activation replicates. Each shard
+    runs the fused dequant×matmul kernel (zero bypass) on its local
+    column slice; the output stays vocab-sharded and the sampler's argmax
+    triggers the GSPMD all-gather.
+
+    Only the col-parallel case lives here: a row-parallel quant matmul
+    would split d_in across scale-block boundaries and need an in-body
+    psum — serving's quantized row-parallel weights take the fused path
+    with their deltas instead, where GSPMD owns the layout.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.collectives import tp_shard_map
+    from repro.kernels import ops
+
+    meta = (qw.qdtype, qw.block, interpret)
+
+    def body(x_l, d_l, s_l):
+        n = d_l.shape[-1]
+        idx = jnp.zeros((1, n), jnp.int32)
+        val = jnp.zeros((1, n), x_l.dtype)
+        return ops._fused_linear_q(meta, x_l, d_l, s_l, idx, val, None)
+
+    col = P(None, "model")
+    return tp_shard_map(
+        body, mesh, in_specs=(P(None, None), col, col), out_specs=col
+    )(x2d, qw.data, qw.scales)

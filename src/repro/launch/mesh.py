@@ -25,6 +25,26 @@ def make_local_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
+def make_serve_mesh(tp: int):
+    """Serving mesh with a ``model`` axis of size ``tp`` over the local
+    devices: ``("model",)`` when TP consumes every device, else
+    ``("data", "model")`` with the spare devices on a leading data axis
+    (replica room for a future data-parallel serving tier; today's
+    engine only populates the model axis).
+
+    Raises ``ValueError`` up front when ``tp`` does not divide the device
+    count — the serving launcher turns that into a readable SystemExit
+    instead of a GSPMD error three layers down."""
+    n = jax.device_count()
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if n % tp:
+        raise ValueError(f"tp={tp} does not divide the {n} local devices")
+    if tp == n:
+        return jax.make_mesh((tp,), ("model",))
+    return jax.make_mesh((n // tp, tp), ("data", "model"))
+
+
 # TPU v5e structural constants for the roofline (DESIGN.md §5).
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip

@@ -50,6 +50,8 @@ from repro.serve import AdapterStore, ServeEngine
 
 def validate_args(args) -> None:
     """Reject bad flag combinations before any compilation starts."""
+    if getattr(args, "tp", 1) < 1:
+        raise SystemExit(f"--tp must be >= 1, got {args.tp}")
     if args.decode_chunk < 1:
         raise SystemExit(f"--decode-chunk must be >= 1, got {args.decode_chunk}")
     if args.prefill_chunk < 1:
@@ -200,6 +202,13 @@ def main(argv=None):
                          "verification is cheap and output repetitive), "
                          "off = plain decode. Greedy outputs are "
                          "token-identical to --draft off")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards (DESIGN §14): base weights "
+                         "Megatron-split, the KV pool partitioned along "
+                         "kv-heads (per-shard pool bytes = total / tp), "
+                         "greedy outputs token-identical to --tp 1. Must "
+                         "divide the local device count and the model's "
+                         "head counts")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="drafted tokens per speculative round; the full "
                          "model verifies all k+1 positions in one batched "
@@ -224,6 +233,26 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_serve_mesh
+
+        try:
+            mesh = make_serve_mesh(args.tp)
+        except ValueError as e:
+            raise SystemExit(f"--tp {args.tp}: {e}") from None
+        for name, heads in (
+            ("num_kv_heads", cfg.num_kv_heads), ("num_heads", cfg.num_heads)
+        ):
+            if heads % args.tp:
+                raise SystemExit(
+                    f"--tp {args.tp} does not divide {name}={heads} for "
+                    f"--arch {args.arch}"
+                )
+        print(f"serving tensor-parallel over {args.tp} shards "
+              f"(mesh {dict(mesh.shape)})")
+
     model = get_model(cfg)
     if args.params:
         from repro.checkpoint.manager import load_pytree
@@ -264,7 +293,7 @@ def main(argv=None):
         page_size=16 if args.page_size is None else args.page_size,
         num_blocks=args.num_blocks,
         draft=args.draft, spec_k=args.spec_k,
-        tracer=tracer,
+        tracer=tracer, mesh=mesh,
     )
     prompts = [p for p in args.prompts.split(";") if p]
     n_tenants = store.num_adapters if store is not None else 0

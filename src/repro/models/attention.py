@@ -13,9 +13,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import context as tp_ctx
 from repro.kernels import ops
 
 _MASKED = -1e30
+
+
+def _kernel_tp_ok(num_kv_heads: int) -> bool:
+    """Under a TP serve mesh the Pallas kernels dispatch through shard_map
+    over the kv-head axis — only sound when the heads divide. Otherwise
+    the opaque kernel call would force GSPMD to all-gather the sharded
+    cache, so the dispatchers below fall back to the dense einsum path,
+    which the partitioner can split itself."""
+    tp = tp_ctx.serve_tp()
+    return tp <= 1 or num_kv_heads % tp == 0
 
 
 def _grouped(q: jax.Array, num_kv: int) -> jax.Array:
@@ -212,6 +223,7 @@ def attention(
         and h % hkv == 0
         and skv >= DECODE_KERNEL_MIN_LEN
         and ops.get_backend() != "jnp"
+        and _kernel_tp_ok(hkv)
     ):
         # decode hot path: online-softmax kernel over the slot cache with
         # per-slot valid lengths — one HBM read per cache byte per step.
@@ -274,6 +286,7 @@ def paged_prefill_attention(
         ops.get_backend() != "jnp"
         and q.shape[2] % k_pool.shape[2] == 0
         and page * n_pages >= DECODE_KERNEL_MIN_LEN
+        and _kernel_tp_ok(k_pool.shape[2])
     ):
         return ops.prefill_attention(
             q, k_pool, v_pool, table, q_offset, kv_valid_len
@@ -311,6 +324,7 @@ def paged_attention(
         ops.get_backend() != "jnp"
         and q.shape[2] % k_pool.shape[2] == 0
         and page * n_pages >= DECODE_KERNEL_MIN_LEN
+        and _kernel_tp_ok(k_pool.shape[2])
     ):
         return ops.paged_decode_attention(q, k_pool, v_pool, table, kv_valid_len)
     k = ref.gather_paged_kv(k_pool, table)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.delta import BatchedDelta, Delta
-from repro.distributed.context import constrain, constrain_inner
+from repro.distributed.context import constrain, constrain_inner, constrain_kv
 from repro.kernels import ops
 from repro.models import moe as moe_lib
 from repro.models.attention import (
@@ -137,8 +137,8 @@ def _block_decode(cfg, h, p, a, ck, cv, pos, positions, mrope_pos):
     """One-token step. ck/cv (B,Smax,KV,hd); pos scalar or (B,) write index."""
     x = rms_norm(h, p["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(cfg, p, a, x, positions, mrope_pos)
-    ck = cache_update(ck, k, pos)
-    cv = cache_update(cv, v, pos)
+    ck = constrain_kv(cache_update(ck, k, pos))
+    cv = constrain_kv(cache_update(cv, v, pos))
     o = attention(q, ck, cv, cfg, causal=False, kv_valid_len=pos + 1)
     h = h + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
     x = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
@@ -151,8 +151,8 @@ def _block_decode_paged(cfg, h, p, a, ck, cv, pos, table, positions, mrope_pos):
     table (B, n_pages) routes each slot's logical pages; pos (B,)."""
     x = rms_norm(h, p["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(cfg, p, a, x, positions, mrope_pos)
-    ck = paged_cache_update(ck, k, table, pos)
-    cv = paged_cache_update(cv, v, table, pos)
+    ck = constrain_kv(paged_cache_update(ck, k, table, pos))
+    cv = constrain_kv(paged_cache_update(cv, v, table, pos))
     o = paged_attention(q, ck, cv, table, cfg, kv_valid_len=pos + 1)
     h = h + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
     x = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
@@ -179,8 +179,10 @@ def _head_logits(cfg, params, adapters, h):
     if cfg.tie_embeddings:
         logits = jnp.dot(h, params["embed"]["w"].T)
     else:
-        # untied head is adaptable and may be a quantized frozen matrix
-        logits = ops.matmul_q(h, params["head"]["w"])
+        # untied head is adaptable and may be a quantized frozen matrix;
+        # under a TP serve mesh its columns are vocab-sharded (the one
+        # call site where col-parallel placement is structurally known)
+        logits = ops.matmul_q(h, params["head"]["w"], tp_col_sharded=True)
     d = ad_get(adapters, "head") if isinstance(adapters, dict) else None
     if isinstance(d, BatchedDelta):
         logits = logits + ops.delta_apply_batched(h, d.idx, d.val, d.aid)
@@ -319,14 +321,14 @@ def _chunk_forward(cfg, params, adapters, cache, batch):
         x = rms_norm(hh, p["attn_norm"], cfg.norm_eps)
         q, k, v = _qkv(cfg, p, a, x, positions, None)
         if table is None:
-            ck = chunk_cache_update(ck, k, q_offset, q_len)
-            cv = chunk_cache_update(cv, v, q_offset, q_len)
+            ck = constrain_kv(chunk_cache_update(ck, k, q_offset, q_len))
+            cv = constrain_kv(chunk_cache_update(cv, v, q_offset, q_len))
             o = chunk_attention(
                 q, ck, cv, cfg, q_offset=q_offset, kv_valid_len=vl
             )
         else:
-            ck = paged_chunk_cache_update(ck, k, wtable, q_offset, q_len)
-            cv = paged_chunk_cache_update(cv, v, wtable, q_offset, q_len)
+            ck = constrain_kv(paged_chunk_cache_update(ck, k, wtable, q_offset, q_len))
+            cv = constrain_kv(paged_chunk_cache_update(cv, v, wtable, q_offset, q_len))
             o = paged_prefill_attention(
                 q, ck, cv, table, cfg, q_offset=q_offset, kv_valid_len=vl
             )

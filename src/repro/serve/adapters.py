@@ -44,6 +44,7 @@ class AdapterStore:
         self._values: list = []
         self.names: list[str] = []
         self._stacked: tuple | None = None
+        self._placed: tuple | None = None  # (stacked identity, placed copy)
         self._base = base_params
         # observability tally: full re-stacks of the tenant tree (each is
         # O(total adapter bytes) of host work + a device upload). The
@@ -209,3 +210,32 @@ class AdapterStore:
                 {k: stack_subtree(k, *(t[k] for t in val_all)) for k in base_val},
             )
         return self._stacked
+
+    def stacked_placed(self, mesh, base_params, family: str):
+        """:meth:`stacked`, device_put with the TP delta placement: every
+        stacked leaf inherits its host matrix's d_out sharding through
+        ``delta_spec_from`` — (L, N, k, d_out) block stacks and (N, k, V)
+        head stacks split their last axis over ``model``, so a tenant's
+        bypass lands on the shard that owns those output columns.
+
+        Cached against the identity of the raw stack (same invalidation
+        as :meth:`stacked`): the engine calls this per chunk, and the
+        upload must not repeat while the tenant set is unchanged."""
+        cur = self.stacked()
+        if mesh is None or cur is None:
+            return cur
+        if self._placed is not None and self._placed[0] is cur:
+            return self._placed[1]
+        from repro.distributed.sharding import adapter_shardings
+
+        idx, val = cur
+        placed = (
+            jax.device_put(
+                idx, adapter_shardings(base_params, idx, mesh, family, fsdp=False)
+            ),
+            jax.device_put(
+                val, adapter_shardings(base_params, val, mesh, family, fsdp=False)
+            ),
+        )
+        self._placed = (cur, placed)
+        return placed

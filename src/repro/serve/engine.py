@@ -122,6 +122,7 @@ class ServeEngine:
         spec_k: int = 4,
         metrics: "MetricsRegistry | bool | None" = None,
         tracer: Tracer | None = None,
+        mesh=None,
     ):
         if model.cfg.family not in ("dense", "moe", "vlm"):
             # engine currently drives KV-cache LMs; SSM/hybrid/encdec decode
@@ -148,12 +149,47 @@ class ServeEngine:
             raise ValueError(
                 "draft='merged' needs an adapter store with registered tenants"
             )
+        # ---- tensor-parallel serving mesh (DESIGN §14) -------------------
+        # Validated BEFORE any placement: a bad head count must fail here
+        # with a readable message, not as a GSPMD error inside the first
+        # compiled step three layers down.
+        self.mesh = mesh
+        self.tp = 1
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"serve mesh needs a 'model' axis, got {mesh.axis_names}"
+                )
+            self.tp = int(mesh.shape["model"])
+            cfg = model.cfg
+            if cfg.num_kv_heads % self.tp:
+                raise ValueError(
+                    f"tp={self.tp} does not divide num_kv_heads="
+                    f"{cfg.num_kv_heads} — the KV pool partitions along the "
+                    "kv-head axis, so heads must split evenly"
+                )
+            if cfg.num_heads % self.tp:
+                raise ValueError(
+                    f"tp={self.tp} does not divide num_heads={cfg.num_heads}"
+                )
         if base_dtype != "fp32":
             # one quantized base serves every tenant: the decode/prefill
             # matmuls run the fused dequant path, tenant deltas apply on
             # top. quant_block must match the base the adapters were
             # trained against (launch --quant-block).
             params = quantize_base(params, base_dtype, block=quant_block)
+        if mesh is not None:
+            # Megatron placement over the frozen (possibly packed) base:
+            # col-parallel qkv/up, row-parallel o/down, vocab-sharded
+            # embed/head; QuantizedTensor leaves fit the spec to their
+            # packed data/scales children. fsdp=False — serving shards for
+            # compute, never for optimizer-state capacity.
+            from repro.distributed.sharding import param_shardings
+
+            params = jax.device_put(
+                params,
+                param_shardings(params, mesh, model.cfg.family, fsdp=False),
+            )
         self.model = model
         self.params = params
         self.slots = slots
@@ -161,6 +197,14 @@ class ServeEngine:
         self.eos_id = eos_id
         self.temperature = temperature
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        if mesh is not None:
+            # PRNG keys from jax.random are committed to device 0; the
+            # multi-device compiled steps need them replicated. A
+            # replicated key stays replicated through random.split.
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            self.rng = jax.device_put(self.rng, NamedSharding(mesh, P()))
         self.store = adapter_store
         self.decode_chunk = decode_chunk
         # the chunk buffer width IS the per-step prefill token budget: a
@@ -191,9 +235,11 @@ class ServeEngine:
                 # capacity-equivalent default: same token budget the dense
                 # layout would reserve, now shared instead of per-slot
                 num_blocks = slots * max_pages
-            self.kv = PagedKVCache(model, slots, max_len, page_size, num_blocks)
+            self.kv = PagedKVCache(
+                model, slots, max_len, page_size, num_blocks, mesh=mesh
+            )
         else:
-            self.kv = KVCache(model, slots, max_len)
+            self.kv = KVCache(model, slots, max_len, mesh=mesh)
         self.sampler = Sampler(model.cfg.vocab_size, top_k=top_k, top_p=top_p)
 
         # speculative decoding (DESIGN §12): the drafter is derived from
@@ -205,7 +251,16 @@ class ServeEngine:
             self.draft_params = build_draft_params(
                 self.params, draft, store=adapter_store, quant_block=quant_block
             )
-            self.draft_kv = DraftKVCache(model, slots, max_len)
+            if mesh is not None:
+                from repro.distributed.sharding import param_shardings
+
+                self.draft_params = jax.device_put(
+                    self.draft_params,
+                    param_shardings(
+                        self.draft_params, mesh, model.cfg.family, fsdp=False
+                    ),
+                )
+            self.draft_kv = DraftKVCache(model, slots, max_len, mesh=mesh)
         else:
             # off, or the model-free ngram drafter: no params, no scratch —
             # ngram proposals come from the slot's own committed tokens
@@ -661,7 +716,17 @@ class ServeEngine:
         def _jit(name, fn):
             j = jax.jit(fn)
             self._jitted[name] = j
-            return j
+            if mesh is None:
+                return j
+
+            # sharded engine: every compiled call runs inside a SCOPED
+            # sharding context (serve mesh + TP activation layout),
+            # snapshot/restored around the call — a tp=1 engine or a
+            # trainer in the same process must never observe this state
+            def call(*args, _j=j):
+                return self._sharded_call(_j, *args)
+
+            return call
 
         self._chunkstep_plain = _jit("chunkstep_plain", chunkstep_plain)
         self._chunkstep_ad = _jit("chunkstep_ad", chunkstep_ad)
@@ -711,6 +776,41 @@ class ServeEngine:
                 "spec_megastep_paged_ad", spec_megastep_paged_ad
             )
         self._obs_init()
+
+    # ------------------------------------------------- sharded dispatch
+
+    def _sharded_call(self, fn, *args):
+        """Run one compiled step inside the TP sharding scope.
+
+        Sets the process-global serve mesh (read by the Pallas kernel
+        dispatch and ``constrain_kv``) and the Megatron activation layout
+        (``inner_all``: heads/FFN hidden shard over ``model``), enters the
+        mesh so bare-``P`` constraints resolve, and restores the previous
+        context even when tracing raises — tp=1 engines and trainers
+        coexisting in this process see none of it."""
+        from repro.distributed import context as dist_ctx
+
+        snap = dist_ctx.snapshot()
+        dist_ctx.set_serve_mesh(self.mesh)
+        dist_ctx.set_activation_sharding(
+            None, "model", seq_div=self.tp, variant="inner_all"
+        )
+        try:
+            with self.mesh:
+                return fn(*args)
+        finally:
+            dist_ctx.restore(snap)
+
+    def _stacked(self):
+        """The tenant stacks, placed for this engine's mesh (tp=1: the
+        raw cached stacks, unchanged)."""
+        if self.store is None:
+            return None
+        if self.mesh is None:
+            return self.store.stacked()
+        return self.store.stacked_placed(
+            self.mesh, self.params, self.model.cfg.family
+        )
 
     # ------------------------------------------------ observability (§13)
 
@@ -795,6 +895,23 @@ class ServeEngine:
             "Full tenant-tree re-stacks (should track register/remove "
             "count, not step count).",
         )
+        # static placement facts, set once: the bench's sharded section
+        # reads these to show per-shard pool bytes = unsharded / TP
+        self._g_tp = reg.gauge(
+            "serve_tp_size",
+            "Tensor-parallel shards serving this engine (1 = unsharded).",
+        )
+        self._g_pool_bytes = reg.gauge(
+            "serve_pool_bytes",
+            "KV cache/pool bytes across all shards (logical total).",
+        )
+        self._g_pool_bytes_shard = reg.gauge(
+            "serve_pool_bytes_per_shard",
+            "KV cache/pool bytes ONE shard holds (total / TP sharded).",
+        )
+        self._g_tp.set(self.tp)
+        self._g_pool_bytes.set(self.kv.pool_bytes())
+        self._g_pool_bytes_shard.set(self.kv.pool_bytes_per_shard())
         if self.paged:
             self._g_pool_used = reg.gauge(
                 "serve_pool_blocks_used", "KV pool blocks allocated."
@@ -1082,7 +1199,7 @@ class ServeEngine:
         if self.paged:
             self._reserve(1)
         plan = self.scheduler.chunk_plan(self.prefill_chunk, self.kv.pos_host)
-        stacked = self.store.stacked() if self.store is not None else None
+        stacked = self._stacked()
         spec = self.draft_kv is not None  # ngram prefills like plain
         lead = [self.params]
         if spec:
@@ -1207,7 +1324,7 @@ class ServeEngine:
         if self.paged:
             self._reserve(self.decode_chunk)
         st = self.scheduler.slot_arrays()
-        stacked = self.store.stacked() if self.store is not None else None
+        stacked = self._stacked()
         args = (
             self.kv.data, jnp.asarray(st["tokens"]), self.kv.pos,
             jnp.asarray(st["active"]), jnp.asarray(st["remaining"]),
@@ -1265,7 +1382,7 @@ class ServeEngine:
         if self.paged:
             self._reserve(self._decode_horizon())
         st = self.scheduler.slot_arrays()
-        stacked = self.store.stacked() if self.store is not None else None
+        stacked = self._stacked()
         ngram = self.draft == "ngram"
         lead = [self.params] if ngram else [self.params, self.draft_params]
         if stacked is not None:

@@ -38,15 +38,61 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import cache_shardings
+
+
+def _place_cache(tree, mesh):
+    """Shard a k/v tree's kv-head axis over the mesh's ``model`` axis.
+
+    jit outputs like ``jnp.zeros`` are *committed* to device 0 — feeding
+    them to a multi-device compiled step raises "incompatible devices" —
+    so sharded caches must be explicitly device_put at construction; the
+    compiled steps then carry the placement through their cache outputs.
+    """
+    if mesh is None:
+        return tree
+    return jax.device_put(tree, cache_shardings(tree, mesh))
+
+
+def _replicated(x, mesh):
+    if mesh is None:
+        return jnp.asarray(x)
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.nbytes for x in jax.tree.leaves(tree))
+
+
+def _tree_shard_bytes(tree) -> int:
+    """Bytes ONE device holds: the per-shard footprint the kv-head
+    partition buys (total / TP for the k/v pools, = total unsharded)."""
+    def one(x):
+        shards = getattr(x, "addressable_shards", None)
+        if shards:
+            return shards[0].data.nbytes
+        return x.nbytes
+    return sum(one(x) for x in jax.tree.leaves(tree))
 
 
 class KVCache:
-    def __init__(self, model, slots: int, max_len: int):
+    def __init__(self, model, slots: int, max_len: int, mesh=None):
         self.slots = slots
         self.max_len = max_len
-        self.data = model.init_cache(slots, max_len)
-        self.pos = jnp.zeros((slots,), jnp.int32)  # device (compiled-step carry)
+        self.mesh = mesh
+        self.data = _place_cache(model.init_cache(slots, max_len), mesh)
+        # device (compiled-step carry); replicated under a serve mesh
+        self.pos = _replicated(jnp.zeros((slots,), jnp.int32), mesh)
         self.pos_host = np.zeros((slots,), np.int32)  # admission mirror
+
+    def pool_bytes(self) -> int:
+        return _tree_bytes(self.data)
+
+    def pool_bytes_per_shard(self) -> int:
+        return _tree_shard_bytes(self.data)
 
     def sync(self, pos_dev: jax.Array, pos_np: np.ndarray) -> None:
         """Adopt a compiled step's final position state (device + mirror)."""
@@ -78,8 +124,8 @@ class DraftKVCache:
     are simply overwritten by the next round.
     """
 
-    def __init__(self, model, slots: int, max_len: int):
-        self.data = model.init_cache(slots, max_len)
+    def __init__(self, model, slots: int, max_len: int, mesh=None):
+        self.data = _place_cache(model.init_cache(slots, max_len), mesh)
 
 
 # --------------------------------------------------------------- paged pool
@@ -104,20 +150,23 @@ class PagedKVCache:
     """
 
     def __init__(
-        self, model, slots: int, max_len: int, page_size: int, num_blocks: int
+        self, model, slots: int, max_len: int, page_size: int, num_blocks: int,
+        mesh=None,
     ):
         self.slots = slots
         self.max_len = max_len
         self.page_size = page_size
         self.num_blocks = num_blocks
+        self.mesh = mesh
         self.max_pages = -(-max_len // page_size)
         if num_blocks < self.max_pages:
             raise ValueError(
                 f"num_blocks {num_blocks} cannot hold one max_len={max_len} "
                 f"request ({self.max_pages} pages of {page_size})"
             )
-        self.data = model.init_paged_cache(num_blocks, page_size)
-        self.pos = jnp.zeros((slots,), jnp.int32)  # device (compiled-step carry)
+        self.data = _place_cache(model.init_paged_cache(num_blocks, page_size), mesh)
+        # device (compiled-step carry); replicated under a serve mesh
+        self.pos = _replicated(jnp.zeros((slots,), jnp.int32), mesh)
         self.pos_host = np.zeros((slots,), np.int32)  # admission mirror
         self.table = np.full((slots, self.max_pages), num_blocks, np.int32)
         self.wtable = np.full((slots, self.max_pages), num_blocks, np.int32)
@@ -165,19 +214,27 @@ class PagedKVCache:
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    def pool_bytes(self) -> int:
+        return _tree_bytes(self.data)
+
+    def pool_bytes_per_shard(self) -> int:
+        return _tree_shard_bytes(self.data)
+
     def full(self, slot: int) -> bool:
         return self.pos_host[slot] >= self.max_len - 1
 
     def table_device(self) -> jax.Array:
-        """Read table as a device array; re-uploaded only after mutation."""
+        """Read table as a device array; re-uploaded only after mutation.
+        Replicated under a serve mesh — every shard routes the same
+        logical pages into its local kv-head slice of the pool."""
         if self._table_dev is None:
-            self._table_dev = jnp.asarray(self.table)
+            self._table_dev = _replicated(self.table, self.mesh)
         return self._table_dev
 
     def write_table_device(self) -> jax.Array:
         """Write table as a device array; re-uploaded only after mutation."""
         if self._wtable_dev is None:
-            self._wtable_dev = jnp.asarray(self.wtable)
+            self._wtable_dev = _replicated(self.wtable, self.mesh)
         return self._wtable_dev
 
     # ---------------------------------------------------------- allocation

@@ -156,3 +156,71 @@ def test_8device_pjit_matches_single_device():
     out = json.loads(line[len("RESULT:"):])
     assert abs(out["loss_d"] - out["loss_r"]) < 1e-3
     assert out["max_diff"] < 5e-2  # bf16 accumulation-order noise
+
+
+# --------------------------------------------- canonical spec form (§14)
+
+
+def test_single_axis_entries_are_canonical():
+    """Regression: P('x') and P(('x',)) mean the same placement but
+    compare unequal — every rule must emit the bare-name form."""
+    from repro.distributed.sharding import canonical_axes, canonical_spec
+
+    assert canonical_axes(("model",)) == "model"
+    assert canonical_axes("model") == "model"
+    assert canonical_axes(("data", "model")) == ("data", "model")
+    assert canonical_axes(None) is None
+    assert canonical_spec(P(("model",), None)) == P("model", None)
+    # multi-axis entries survive canonicalization untouched
+    assert canonical_spec(P(("data", "model"), None)) == P(("data", "model"), None)
+    # every public rule funnels through it: no entry is ever a 1-tuple
+    for spec in (
+        spec_for_param("blocks/wq/w", (8, 64, 32), MESH, "dense"),
+        spec_for_param("embed/w", (1024, 64), MESH, "dense"),
+        delta_spec_from(P(None, None, "model"), (8, 2, 32)),
+    ):
+        assert all(not (isinstance(e, tuple) and len(e) == 1) for e in spec)
+
+
+# --------------------------- delta placement: untied heads, expert stacks
+
+
+def test_delta_spec_untied_head():
+    # untied head/w (d_model, V) is col-parallel: vocab-sharded d_out
+    wspec = spec_for_param("head/w", (64, 1024), MESH, "dense")
+    assert wspec == P(None, "model")
+    # training delta (k, V) inherits the vocab sharding
+    assert delta_spec_from(wspec, (2, 1024)) == P(None, "model")
+    # serving tenant stack (N, k, V): N replicated, vocab still sharded
+    assert delta_spec_from(wspec, (4, 2, 1024)) == P(None, None, "model")
+
+
+def test_delta_spec_serving_stacks():
+    """The store's stacked trees insert a tenant axis after the layer
+    axis; leading weight entries must land on their original dims."""
+    # dense blocks: weight (L, d_in, d_out) -> stack (L, N, k, d_out)
+    wspec = spec_for_param("blocks/wq/w", (8, 64, 32), MESH, "dense")
+    assert delta_spec_from(wspec, (8, 4, 2, 32)) == P(None, None, None, "model")
+    # moe experts: weight (L, E, d_in, F) is expert-parallel on E; the
+    # stack (L, N, E, k, F) must keep "model" on E, NOT on the tenant N
+    wspec = spec_for_param("blocks/wgate/w", (4, 8, 64, 32), MESH, "moe")
+    assert wspec == P(None, "model", None, None)
+    assert delta_spec_from(wspec, (4, 8, 2, 32)) == P(None, "model", None, None)
+    assert delta_spec_from(wspec, (4, 3, 8, 2, 32)) == P(
+        None, None, "model", None, None
+    )
+
+
+def test_param_shardings_quantized_base():
+    """QuantizedTensor leaves: rules fire on the logical shape, then
+    re-fit to the packed data/scales children (col axis survives)."""
+    from repro.distributed.sharding import param_shardings
+    from repro.quant.qtensor import quantize
+
+    mesh = jax.make_mesh((jax.device_count(),), ("model",))
+    w = np.random.default_rng(0).standard_normal((64, 32)).astype(np.float32)
+    params = {"blocks": {"wq": {"w": quantize(jax.numpy.asarray(w), "int8", block=16)}}}
+    sh = param_shardings(params, mesh, "dense", fsdp=False)
+    qsh = sh["blocks"]["wq"]["w"]
+    assert qsh.data.spec == P(None, "model")
+    assert qsh.scales.spec == P(None, "model")
