@@ -82,13 +82,14 @@ def _adapter(params, seed, k=2, scale=0.05):
 
 def _run_engine(m, params, *, slots, store, n_tenants, chunk, steps,
                 base_dtype="fp32", paged=False, max_len=MAX_LEN,
-                draft="off", spec_k=4, windows=3, warm_out=0):
+                draft="off", spec_k=4, windows=3, warm_out=0,
+                kv_dtype="fp32"):
     # eos outside the vocab: a greedy sample hitting the default eos_id
     # mid-window would idle its slot for the rest of the timed window
     eng = ServeEngine(
         m, params, slots=slots, max_len=max_len, adapter_store=store,
         decode_chunk=chunk, base_dtype=base_dtype, eos_id=1 << 20,
-        paged=paged, draft=draft, spec_k=spec_k,
+        paged=paged, draft=draft, spec_k=spec_k, kv_dtype=kv_dtype,
     )
     for i in range(slots):
         aid = 1 + i % n_tenants if n_tenants else 0
@@ -318,6 +319,7 @@ def run(*, steps: int = 24) -> list[str]:
 
     mixed = _mixed_workload(m, params, out)
     capacity = _capacity_demo(m, params, out)
+    quant_kv = _quant_kv_section(out, steps=steps)
     observability = _obs_overhead(m, params, out)
     sharded = _sharded_section(out)
 
@@ -326,6 +328,7 @@ def run(*, steps: int = 24) -> list[str]:
          "results": records, "speedups": ratios,
          "paged_vs_dense": paged_ratios, "speculative": spec_records,
          "mixed_workload": mixed, "capacity": capacity,
+         "quant_kv": quant_kv,
          "observability": observability, "sharded": sharded},
         indent=2,
     ))
@@ -499,6 +502,145 @@ def _capacity_demo(m, params, out):
         "prefix_requests": 8, "prefix_tokens": len(prefix),
         "prefix_logical_tokens": logical,
         "prefix_physical_tokens": physical,
+    }
+
+
+def _quant_kv_section(out, *, steps):
+    """int8 KV cache (DESIGN §15): capacity, throughput, composed memory.
+
+    Runs on a float32-dtype twin of the bench model so the ``fp32``
+    kv_dtype genuinely stores 4-byte values — the honest baseline for
+    the packed-bytes claims (the main grid's bf16 cache would halve the
+    headline for a reason that has nothing to do with quantization).
+
+    The capacity leg *asserts* the structural win: on the same pool-byte
+    budget the int8 engine admits >= 2x the concurrently active requests
+    and holds >= 2x the tokens-in-flight capacity per pool byte. Both
+    engines' pool bytes are cross-checked against the labeled
+    ``serve_pool_bytes`` gauge so this JSON, the smoke script, and the
+    metrics exposition all read one number. The drift columns record
+    greedy agreement between the twins (the hard logit-drift bounds live
+    in tests/serve/test_quant_kv.py); the throughput and composed legs
+    document the tok/s cost of dequant-on-read and the full int8-base +
+    int8-KV serving footprint, extending the quantized-base memory table.
+    """
+    from repro.quant import tree_bytes
+
+    cfg_q, m_q, params_q = bench_model("qwen2-1.5b", dtype="float32")
+    page = 16
+
+    def pool_bytes_for(num_blocks, kv_dtype):
+        tree = jax.eval_shape(
+            lambda: m_q.init_paged_cache(num_blocks, page, kv_dtype=kv_dtype)
+        )
+        return sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(tree)
+        )
+
+    # ---- asserted capacity: same pool-byte budget, 2x+ the requests ----
+    nb_fp = 16  # 256-token fp32 pool
+    budget = pool_bytes_for(nb_fp, "fp32")
+    nb_i8 = budget // (pool_bytes_for(nb_fp, "int8") // nb_fp)
+    assert pool_bytes_for(nb_i8, "int8") <= budget
+    assert nb_i8 >= 2 * nb_fp, (
+        f"int8 pool holds {nb_i8} blocks on the fp32 {nb_fp}-block byte "
+        "budget; expected >= 2x tokens-in-flight per pool byte"
+    )
+
+    def admit_run(kv_dtype, num_blocks):
+        eng = ServeEngine(
+            m_q, params_q, slots=24, max_len=MAX_LEN, eos_id=1 << 20,
+            decode_chunk=8, paged=True, page_size=page,
+            num_blocks=num_blocks, kv_dtype=kv_dtype,
+        )
+        assert eng.kv.pool_bytes() == pool_bytes_for(num_blocks, kv_dtype)
+        # one source of truth: the labeled gauge reads the same number
+        assert eng.metrics.value("serve_pool_bytes", kv_dtype) == (
+            eng.kv.pool_bytes()
+        )
+        for i in range(24):
+            eng.submit(list(np.arange(1, 33) + i), max_new=8)
+        eng.step()
+        active = sum(r is not None for r in eng.scheduler.active)
+        reqs = eng.scheduler.in_flight()
+        eng.run_to_completion()
+        assert eng.kv.free_blocks == eng.kv.num_blocks
+        return eng, active, [r.out for r in reqs]
+
+    eng_fp, active_fp, outs_fp = admit_run("fp32", nb_fp)
+    eng_i8, active_i8, outs_i8 = admit_run("int8", nb_i8)
+    assert active_i8 >= 2 * active_fp, (
+        f"int8 admitted {active_i8} vs fp32 {active_fp} on the same "
+        "pool-byte budget; expected >= 2x concurrent requests"
+    )
+    exact = sum(a == b for a, b in zip(outs_fp, outs_i8))
+    agree = [
+        sum(1 for x, y in zip(a, b) if x == y) / max(len(a), 1)
+        for a, b in zip(outs_fp, outs_i8)
+    ]
+    out.append(
+        f"serve.quant_kv.capacity,0,blocks={nb_i8}vs{nb_fp}"
+        f"_budget={budget}B_active={active_i8}vs{active_fp}"
+        f"_exact_outputs={exact}of{len(outs_fp)}"
+    )
+
+    # ---- throughput: int8-KV twin of the slots=4/chunk=8 paged column --
+    r_fp = _run_engine(m_q, params_q, slots=4, store=None, n_tenants=0,
+                       chunk=8, steps=steps, paged=True)
+    r_i8 = _run_engine(m_q, params_q, slots=4, store=None, n_tenants=0,
+                       chunk=8, steps=steps, paged=True, kv_dtype="int8")
+    tok_ratio = r_i8["tok_s"] / r_fp["tok_s"]
+    out.append(
+        f"serve.quant_kv.decode,{r_i8['us_per_call']:.0f},"
+        f"tok_s={r_i8['tok_s']:.1f}_vs_fp32={tok_ratio:.2f}x"
+    )
+
+    # ---- composed: int8 base + int8 KV, the full packed footprint ------
+    r_both = _run_engine(m_q, params_q, slots=4, store=None, n_tenants=0,
+                         chunk=8, steps=steps, paged=True,
+                         base_dtype="int8", kv_dtype="int8")
+    from repro.peft import quantize_base
+
+    params_bytes = tree_bytes(params_q)
+    params_bytes_i8 = tree_bytes(quantize_base(params_q, "int8", block=64))
+    out.append(
+        f"serve.quant_kv.composed_int8,{r_both['us_per_call']:.0f},"
+        f"tok_s={r_both['tok_s']:.1f}"
+        f"_params={params_bytes_i8}B_pool={eng_i8.kv.pool_bytes()}B"
+    )
+    return {
+        "page_size": page, "max_len": MAX_LEN,
+        "capacity": {
+            "pool_byte_budget": budget,
+            "blocks_fp32": nb_fp, "blocks_int8": int(nb_i8),
+            "pool_bytes_fp32": eng_fp.kv.pool_bytes(),
+            "pool_bytes_int8": eng_i8.kv.pool_bytes(),
+            "tokens_in_flight_fp32": nb_fp * page,
+            "tokens_in_flight_int8": int(nb_i8) * page,
+            "active_fp32": active_fp, "active_int8": active_i8,
+            "claim": ">=2x concurrent requests and tokens-in-flight per "
+                     "pool byte on the same budget (asserted)",
+        },
+        "drift": {
+            "requests": len(outs_fp),
+            "exact_output_matches": exact,
+            "mean_token_agreement": round(float(np.mean(agree)), 3),
+            "note": "greedy agreement fp32-vs-int8 twins; logit-drift "
+                    "bounds pinned in tests/serve/test_quant_kv.py",
+        },
+        "decode": {
+            "fp32": {k: round(v, 1) for k, v in r_fp.items()},
+            "int8_kv": {k: round(v, 1) for k, v in r_i8.items()},
+            "int8_vs_fp32_tok_s": round(tok_ratio, 3),
+        },
+        "composed_int8_base_int8_kv": {
+            **{k: round(v, 1) for k, v in r_both.items()},
+            "params_bytes_fp32": params_bytes,
+            "params_bytes_int8": params_bytes_i8,
+            "pool_bytes_int8": eng_i8.kv.pool_bytes(),
+            "pool_bytes_fp32_equiv": eng_fp.kv.pool_bytes(),
+        },
     }
 
 

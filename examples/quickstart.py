@@ -64,7 +64,11 @@ def main():
     # --- Phase 3: merge and serve (zero inference overhead) ------------
     # metrics=True turns on the serving observability layer (DESIGN.md
     # §13): counters/gauges/latency histograms derived host-side, free of
-    # extra device transfers (CLI twin: serve --metrics-out metrics.prom)
+    # extra device transfers (CLI twin: serve --metrics-out metrics.prom).
+    # kv_dtype="int8" would drop the KV cache to packed int8 codes +
+    # per-group scales (~3.9x smaller pool, dequant in-kernel, DESIGN.md
+    # §15; CLI twin: serve --kv-dtype int8) — fp32 here keeps the
+    # quickstart bit-exact.
     merged = trainer.merged_params()
     engine = ServeEngine(model, merged, slots=2, max_len=64, metrics=True)
     engine.submit([1, 17, 25], max_new=8)

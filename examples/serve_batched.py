@@ -56,10 +56,16 @@ def main():
     # 16 tokens per mixed step (--prefill-chunk): a long prompt never
     # stalls the other streams' decode, and later same-prefix arrivals
     # skip chunk-walking the pages that are already resident.
+    # kv_dtype="int8" quantizes the pool itself (DESIGN.md §15): pages
+    # store int8 codes + per-(page, kv-head) scales, attention dequantizes
+    # in-kernel, and the same byte budget funds ~4x the pooled tokens
+    # (CLI twin: serve --kv-dtype int8) — composing with the int8 base
+    # above so both weights AND cache ride the quantized path.
     engine = ServeEngine(model, params, slots=6, max_len=128,
                          adapter_store=store, decode_chunk=8,
                          prefill_chunk=16,
                          paged=True, page_size=16, num_blocks=32,
+                         kv_dtype="int8",
                          metrics=True, tracer=Tracer())
     system = list(range(1, 17))  # 16-token "system prompt" = 1 full page
     prompts = [
@@ -119,21 +125,29 @@ def main():
     # same workload with speculative decoding (DESIGN.md §12): the merged
     # drafter (base + mean of the two tenants' deltas, adapter-free
     # forward) proposes 4 tokens per round and the full model verifies
-    # them in one batched chunk pass. Greedy outputs are token-identical;
-    # the pool must fund the wider reserve horizon decode_chunk*(k+1)
-    # (CLI twin: serve --draft merged --spec-k 4 --adapters …)
+    # them in one batched chunk pass. The twin keeps kv_dtype="int8" so
+    # the comparison stays apples-to-apples; verify writes land in wider
+    # chunks than plain decode, so int8 outputs agree on most tokens but
+    # aren't guaranteed bit-identical (they are under fp32 — DESIGN.md
+    # §15). The pool must fund the wider reserve horizon decode_chunk*(k+1)
+    # (CLI twin: serve --draft merged --spec-k 4 --kv-dtype int8 …)
     spec = ServeEngine(model, params, slots=6, max_len=128,
                        adapter_store=store, decode_chunk=8,
                        prefill_chunk=16, paged=True, page_size=16,
-                       num_blocks=48, draft="merged", spec_k=4)
+                       num_blocks=48, draft="merged", spec_k=4,
+                       kv_dtype="int8")
     for p, aid in zip(prompts, ids):
         spec.submit(p, max_new=16, adapter_id=aid)
     t0 = time.perf_counter()
     spec_reqs = spec.run_to_completion()
     dt_spec = time.perf_counter() - t0
-    match = [r.out for r in spec_reqs] == [r.out for r in reqs]
+    agree = sum(
+        a == b
+        for rs, rp in zip(spec_reqs, reqs)
+        for a, b in zip(rs.out, rp.out)
+    ) / max(sum(len(r.out) for r in reqs), 1)
     rate = spec.spec_accepted / max(spec.spec_drafted, 1)
-    print(f"speculative twin: outputs identical: {match}, "
+    print(f"speculative twin: token agreement {agree:.0%}, "
           f"{spec.spec_accepted}/{spec.spec_drafted} drafts accepted "
           f"({rate:.0%}), {sum(len(r.out) for r in spec_reqs)} tokens "
           f"in {dt_spec:.2f}s")

@@ -90,6 +90,21 @@ def constrain_kv(x: jax.Array) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, P(*spec))
 
 
+def constrain_kv_scale(x: jax.Array) -> jax.Array:
+    """Pin a quantized-cache scale leaf to its kv-head sharding. Scale
+    leaves put kv-heads LAST — (N, KV) paged, (B, groups, KV) dense — so
+    this pins dim -1 where :func:`constrain_kv` pins dim -2; same no-op
+    conditions."""
+    if x is None or _SERVE["mesh"] is None or _SERVE["tp"] <= 1 or x.ndim < 1:
+        return x
+    kv = x.shape[-1]
+    if kv % _SERVE["tp"] or kv < _SERVE["tp"]:
+        return x
+    spec = [None] * x.ndim
+    spec[-1] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
 def constrain(h: jax.Array) -> jax.Array:
     """h (B, S, D) -> sharding-constrained h (sequence-parallel layout)."""
     if _STATE["variant"] == "none":

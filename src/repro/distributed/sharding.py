@@ -263,10 +263,23 @@ def kv_axis_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
     return P(*spec)
 
 
+def kv_scale_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Partition a quantized cache's scale leaf along its kv-head axis.
+
+    Scale tensors put kv-heads LAST — paged ``(L, N, KV)``, dense
+    ``(L, B, S/group, KV)`` — so each TP shard holds exactly the scales
+    its int8 pool slice dequantizes with (DESIGN §15). Falls back to
+    replicated when KV % tp != 0, matching :func:`kv_axis_spec`."""
+    spec: list = [None] * len(shape)
+    if "model" in mesh.axis_names:
+        _put(spec, -1, "model", shape, mesh)
+    return P(*spec)
+
+
 def cache_shardings(cache, mesh: Mesh):
     """NamedShardings for a serving cache tree: ``k``/``v`` leaves shard
-    on the kv-head axis, everything else (positions, conv/ssm state)
-    replicates."""
+    on the kv-head axis (``k_scale``/``v_scale`` likewise, kv-heads
+    last), everything else (positions, conv/ssm state) replicates."""
 
     def one(path, leaf):
         if leaf is None:
@@ -274,6 +287,8 @@ def cache_shardings(cache, mesh: Mesh):
         key = path_str(path).split("/")[-1]
         if key in ("k", "v"):
             return NamedSharding(mesh, kv_axis_spec(leaf.shape, mesh))
+        if key in ("k_scale", "v_scale"):
+            return NamedSharding(mesh, kv_scale_spec(leaf.shape, mesh))
         return NamedSharding(mesh, P())
 
     return jax.tree_util.tree_map_with_path(one, cache)

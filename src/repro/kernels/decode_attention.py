@@ -84,12 +84,62 @@ def _decode_attn_kernel(
         ).astype(o_ref.dtype)
 
 
+def _decode_attn_q_kernel(
+    vl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, block_s: int, scale: float, group: int,
+):
+    """int8-cache variant of :func:`_decode_attn_kernel`: k/v arrive as
+    int8 codes plus per-:data:`~repro.models.layers.KV_QUANT_GROUP`-row
+    scale tiles, dequantized in VMEM right before the dot — the
+    ``quant_linear`` tile-dequant idiom applied to the cache sweep."""
+    s_step = pl.program_id(2)
+
+    @pl.when(s_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    ks = jnp.repeat(ks_ref[0, :, 0].astype(jnp.float32)[:, None], group, axis=0)
+    vs = jnp.repeat(vs_ref[0, :, 0].astype(jnp.float32)[:, None], group, axis=0)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32) * ks   # (block_s, hd)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32) * vs   # (block_s, hd)
+    g = q.shape[0]
+    s = jax.lax.dot_general(
+        q, kb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (G, block_s)
+    col = s_step * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (g, block_s), 1
+    )
+    valid = col < vl_ref[0, 0]                   # per-slot cache frontier
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s_step == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
 def decode_attention_pallas(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
     kv_valid_len,
     *,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
     block_s: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
@@ -99,6 +149,11 @@ def decode_attention_pallas(
     int — positions ``>= kv_valid_len[b]`` are masked out. Returns
     (B, 1, H, hd). Smax is padded up to a ``block_s`` multiple here (pad
     columns are always masked: ``kv_valid_len <= Smax``).
+
+    With ``k_scale``/``v_scale`` (B, Smax // group, Hkv) the cache is int8
+    and each KV tile is dequantized in VMEM against its scale rows; Smax
+    must then be a whole number of scale groups (``init_cache`` rounds it
+    up) so the KV block never straddles a partial group.
     """
     b, sq, h, hd = q.shape
     if sq != 1:
@@ -109,24 +164,49 @@ def decode_attention_pallas(
     g = h // hkv
     vl = jnp.asarray(kv_valid_len, jnp.int32).reshape(-1)
     vl = jnp.broadcast_to(vl, (b,))[:, None]     # (B, 1)
+    quant = k_scale is not None
+    group = skv // k_scale.shape[1] if quant else 1
+    if quant and group * k_scale.shape[1] != skv:
+        raise ValueError(f"Smax={skv} not a whole number of scale groups")
     bs = min(block_s, skv)
     pad = (-skv) % bs
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if quant:
+            gpad = (skv + pad) // group - k_scale.shape[1]
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, gpad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, gpad), (0, 0)))
     ns = (skv + pad) // bs
     qg = q.reshape(b, hkv, g, hd)
     grid = (b, hkv, ns)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda b_, h_, s_: (b_, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, 1, g, hd), lambda b_, h_, s_: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd), lambda b_, h_, s_: (b_, s_, h_, 0)),
+        pl.BlockSpec((1, bs, 1, hd), lambda b_, h_, s_: (b_, s_, h_, 0)),
+    ]
+    operands = [vl, qg, k, v]
+    if quant:
+        if bs % group:
+            raise ValueError(
+                f"KV block {bs} not a multiple of scale group {group}"
+            )
+        body = functools.partial(
+            _decode_attn_q_kernel, block_s=bs, scale=hd**-0.5, group=group
+        )
+        sc_spec = pl.BlockSpec(
+            (1, bs // group, 1), lambda b_, h_, s_: (b_, s_, h_)
+        )
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale, v_scale]
+    else:
+        body = functools.partial(_decode_attn_kernel, block_s=bs, scale=hd**-0.5)
     out = pl.pallas_call(
-        functools.partial(_decode_attn_kernel, block_s=bs, scale=hd**-0.5),
+        body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda b_, h_, s_: (b_, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, s_: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd), lambda b_, h_, s_: (b_, s_, h_, 0)),
-            pl.BlockSpec((1, bs, 1, hd), lambda b_, h_, s_: (b_, s_, h_, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h_, s_: (b_, h_, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
         scratch_shapes=[
@@ -138,7 +218,7 @@ def decode_attention_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(vl, qg, k, v)
+    )(*operands)
     return out.reshape(b, 1, h, hd)
 
 
@@ -188,6 +268,54 @@ def _paged_decode_attn_kernel(
         ).astype(o_ref.dtype)
 
 
+def _paged_decode_attn_q_kernel(
+    table_ref, vl_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+    o_ref, m_ref, l_ref, acc_ref, *, page: int, scale: float,
+):
+    """int8-pool variant of :func:`_paged_decode_attn_kernel`: the
+    per-(block, kv-head) scales ride next to the block table as
+    scalar-prefetch operands, so the body resolves this cell's scale with
+    the same ``table_ref[slot, page]`` lookup the DMA index map used, and
+    dequantizes the page tile in VMEM."""
+    slot = pl.program_id(0)
+    h_ = pl.program_id(1)
+    p_step = pl.program_id(2)
+
+    @pl.when(p_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = table_ref[slot, p_step]
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[blk, h_]
+    vb = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[blk, h_]
+    g = q.shape[0]
+    s = jax.lax.dot_general(
+        q, kb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (G, page)
+    col = p_step * page + jax.lax.broadcasted_iota(jnp.int32, (g, page), 1)
+    valid = col < vl_ref[slot]                   # per-slot cache frontier
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(p_step == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
 def paged_decode_attention_pallas(
     q: jax.Array,
     k_pool: jax.Array,
@@ -195,6 +323,8 @@ def paged_decode_attention_pallas(
     table: jax.Array,
     kv_valid_len,
     *,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Single-token GQA attention against a paged block pool.
@@ -208,7 +338,9 @@ def paged_decode_attention_pallas(
     Grid (slot, kv-head, page): the block table is a scalar-prefetch
     operand, so the k/v index maps resolve the *physical* block for each
     (slot, page) cell ahead of the DMA — the pool is never gathered into
-    a contiguous per-slot cache.
+    a contiguous per-slot cache. With ``k_scale``/``v_scale`` (N, Hkv)
+    the pools are int8: the scales prefetch alongside the table and each
+    page tile dequantizes in VMEM (DESIGN §15).
     """
     b, sq, h, hd = q.shape
     if sq != 1:
@@ -227,36 +359,50 @@ def paged_decode_attention_pallas(
     tbl = jnp.minimum(table.astype(jnp.int32), n - 1)
     qg = q.reshape(b, hkv, g, hd)
     grid = (b, hkv, n_pages)
-    kv_spec = pl.BlockSpec(
-        (1, page, 1, hd),
-        lambda b_, h_, p_, table_ref, vl_ref: (table_ref[b_, p_], 0, h_, 0),
-    )
+    quant = k_scale is not None
+    n_prefetch = 4 if quant else 2
+
+    def kv_map(b_, h_, p_, table_ref, *_):
+        return (table_ref[b_, p_], 0, h_, 0)
+
+    def q_map(b_, h_, p_, *_):
+        return (b_, h_, 0, 0)
+
+    kv_spec = pl.BlockSpec((1, page, 1, hd), kv_map)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=n_prefetch,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, p_, t_, v_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, g, hd), q_map),
             kv_spec,
             kv_spec,
         ],
-        out_specs=pl.BlockSpec(
-            (1, 1, g, hd), lambda b_, h_, p_, t_, v_: (b_, h_, 0, 0)
-        ),
+        out_specs=pl.BlockSpec((1, 1, g, hd), q_map),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),    # running max
             pltpu.VMEM((g, 1), jnp.float32),    # running denom
             pltpu.VMEM((g, hd), jnp.float32),   # f32 accumulator
         ],
     )
+    if quant:
+        body = functools.partial(
+            _paged_decode_attn_q_kernel, page=page, scale=hd**-0.5
+        )
+        operands = (tbl, vl, k_scale, v_scale, qg, k_pool, v_pool)
+    else:
+        body = functools.partial(
+            _paged_decode_attn_kernel, page=page, scale=hd**-0.5
+        )
+        operands = (tbl, vl, qg, k_pool, v_pool)
     out = pl.pallas_call(
-        functools.partial(_paged_decode_attn_kernel, page=page, scale=hd**-0.5),
+        body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(tbl, vl, qg, k_pool, v_pool)
+    )(*operands)
     return out.reshape(b, 1, h, hd)
 
 
@@ -265,7 +411,8 @@ def paged_decode_attention_pallas(
 
 def decode_attention_sharded(
     q: jax.Array, k: jax.Array, v: jax.Array, kv_valid_len, mesh,
-    *, interpret: bool = False,
+    *, k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
+    interpret: bool = False,
 ) -> jax.Array:
     """Tensor-parallel dispatch of :func:`decode_attention_pallas`.
 
@@ -275,17 +422,31 @@ def decode_attention_sharded(
     h // G, so the (B, 1, H, hd) query splits along H exactly like the
     cache splits along Hkv). Output stays head-sharded; the row-parallel
     o-proj psum right after absorbs the merge, so no collective runs here.
+    Quantized-cache scales (B, groups, Hkv) split along their trailing
+    kv-head axis, riding the same partition as the pool they describe.
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed.collectives import tp_shard_map
 
     vl = jnp.broadcast_to(jnp.asarray(kv_valid_len), (q.shape[0],))
+    h = P(None, None, "model", None)
+
+    if k_scale is not None:
+        def body_q(q_l, k_l, v_l, vl_l, ks_l, vs_l):
+            return decode_attention_pallas(
+                q_l, k_l, v_l, vl_l, k_scale=ks_l, v_scale=vs_l,
+                interpret=interpret,
+            )
+
+        sc = P(None, None, "model")
+        return tp_shard_map(
+            body_q, mesh, in_specs=(h, h, h, P(None), sc, sc), out_specs=h
+        )(q, k, v, vl, k_scale, v_scale)
 
     def body(q_l, k_l, v_l, vl_l):
         return decode_attention_pallas(q_l, k_l, v_l, vl_l, interpret=interpret)
 
-    h = P(None, None, "model", None)
     return tp_shard_map(
         body, mesh, in_specs=(h, h, h, P(None)), out_specs=h
     )(q, k, v, vl)
@@ -293,28 +454,46 @@ def decode_attention_sharded(
 
 def paged_decode_attention_sharded(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
-    kv_valid_len, mesh, *, interpret: bool = False,
+    kv_valid_len, mesh,
+    *, k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
+    interpret: bool = False,
 ) -> jax.Array:
     """Tensor-parallel dispatch of :func:`paged_decode_attention_pallas`.
 
     The block pool partitions along its kv-head axis (every shard holds
     ALL pages, but only its head slice of each — the ÷TP capacity win),
     the block table and valid lengths replicate, and each shard sweeps
-    its local pool with the same (slot, kv-head, page) grid.
+    its local pool with the same (slot, kv-head, page) grid. Quantized
+    pools bring their (N, Hkv) scales along, split on the kv-head axis
+    like the pool rows they describe.
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed.collectives import tp_shard_map
 
     vl = jnp.broadcast_to(jnp.asarray(kv_valid_len), (q.shape[0],))
+    h = P(None, None, "model", None)
+    pool = P(None, None, "model", None)
+
+    if k_scale is not None:
+        def body_q(q_l, k_l, v_l, t_l, vl_l, ks_l, vs_l):
+            return paged_decode_attention_pallas(
+                q_l, k_l, v_l, t_l, vl_l, k_scale=ks_l, v_scale=vs_l,
+                interpret=interpret,
+            )
+
+        sc = P(None, "model")
+        return tp_shard_map(
+            body_q, mesh,
+            in_specs=(h, pool, pool, P(None, None), P(None), sc, sc),
+            out_specs=h,
+        )(q, k_pool, v_pool, table, vl, k_scale, v_scale)
 
     def body(q_l, k_l, v_l, t_l, vl_l):
         return paged_decode_attention_pallas(
             q_l, k_l, v_l, t_l, vl_l, interpret=interpret
         )
 
-    h = P(None, None, "model", None)
-    pool = P(None, None, "model", None)
     return tp_shard_map(
         body, mesh,
         in_specs=(h, pool, pool, P(None, None), P(None)), out_specs=h,

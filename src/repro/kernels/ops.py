@@ -378,32 +378,42 @@ def _serve_mesh_for_kv(num_kv_heads: int):
 
 
 def decode_attention(
-    q: jax.Array, k: jax.Array, v: jax.Array, kv_valid_len
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_valid_len,
+    k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Batched single-token GQA attention for the serving decode hot path.
 
     q (B, 1, H, hd) against a (B, Smax, Hkv, hd) slot cache with per-slot
     ``kv_valid_len``. jnp backend: the gathered-einsum oracle; Pallas
     backends: the online-softmax kernel (grid slot × kv-head, f32
-    accumulation in VMEM). Dispatch policy — *when* this replaces the
-    dense masked softmax — lives in ``models.attention.attention``.
+    accumulation in VMEM). With ``k_scale``/``v_scale`` (B, groups, Hkv)
+    the cache is int8 and every path dequantizes tile-wise (DESIGN §15).
+    Dispatch policy — *when* this replaces the dense masked softmax —
+    lives in ``models.attention.attention``.
     """
     if _backend == "jnp":
+        if k_scale is not None:
+            return ref.decode_attention_q_ref(
+                q, k, v, k_scale, v_scale, kv_valid_len
+            )
         return ref.decode_attention_ref(q, k, v, kv_valid_len)
     mesh = _serve_mesh_for_kv(k.shape[-2])
     if mesh is not None:
         return decode_attention_sharded(
             q, k, v, kv_valid_len, mesh,
+            k_scale=k_scale, v_scale=v_scale,
             interpret=_backend == "pallas_interpret",
         )
     return decode_attention_pallas(
-        q, k, v, kv_valid_len, interpret=_backend == "pallas_interpret"
+        q, k, v, kv_valid_len, k_scale=k_scale, v_scale=v_scale,
+        interpret=_backend == "pallas_interpret",
     )
 
 
 def paged_decode_attention(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
     kv_valid_len,
+    k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Block-table decode attention for the paged serving core.
 
@@ -411,18 +421,25 @@ def paged_decode_attention(
     (B, n_pages) block table with per-slot ``kv_valid_len``. jnp backend:
     gather-then-softmax oracle; Pallas backends: the scalar-prefetch
     kernel that DMAs physical pages straight from the pool (no contiguous
-    gather ever materialises).
+    gather ever materialises). With ``k_scale``/``v_scale`` (N, Hkv) the
+    pool is int8 and the scales prefetch beside the table (DESIGN §15).
     """
     if _backend == "jnp":
+        if k_scale is not None:
+            return ref.paged_decode_attention_q_ref(
+                q, k_pool, v_pool, k_scale, v_scale, table, kv_valid_len
+            )
         return ref.paged_decode_attention_ref(q, k_pool, v_pool, table, kv_valid_len)
     mesh = _serve_mesh_for_kv(k_pool.shape[-2])
     if mesh is not None:
         return paged_decode_attention_sharded(
             q, k_pool, v_pool, table, kv_valid_len, mesh,
+            k_scale=k_scale, v_scale=v_scale,
             interpret=_backend == "pallas_interpret",
         )
     return paged_decode_attention_pallas(
         q, k_pool, v_pool, table, kv_valid_len,
+        k_scale=k_scale, v_scale=v_scale,
         interpret=_backend == "pallas_interpret",
     )
 
@@ -430,6 +447,7 @@ def paged_decode_attention(
 def prefill_attention(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
     q_offset, kv_valid_len,
+    k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Query-chunk × paged-KV attention for chunked prefill (DESIGN §11).
 
@@ -438,9 +456,15 @@ def prefill_attention(
     intra-causal mask and ``kv_valid_len`` is the post-write cache
     frontier. jnp backend: gather-then-masked-softmax oracle; Pallas
     backends: the scalar-prefetch page-sweep kernel (physical pages DMA
-    straight from the pool, online softmax in VMEM).
+    straight from the pool, online softmax in VMEM). With ``k_scale``/
+    ``v_scale`` (N, Hkv) the pool is int8, dequantized per page tile.
     """
     if _backend == "jnp":
+        if k_scale is not None:
+            return ref.paged_prefill_attention_q_ref(
+                q, k_pool, v_pool, k_scale, v_scale, table,
+                q_offset, kv_valid_len,
+            )
         return ref.paged_prefill_attention_ref(
             q, k_pool, v_pool, table, q_offset, kv_valid_len
         )
@@ -448,10 +472,12 @@ def prefill_attention(
     if mesh is not None:
         return paged_prefill_attention_sharded(
             q, k_pool, v_pool, table, q_offset, kv_valid_len, mesh,
+            k_scale=k_scale, v_scale=v_scale,
             interpret=_backend == "pallas_interpret",
         )
     return paged_prefill_attention_pallas(
         q, k_pool, v_pool, table, q_offset, kv_valid_len,
+        k_scale=k_scale, v_scale=v_scale,
         interpret=_backend == "pallas_interpret",
     )
 

@@ -98,6 +98,55 @@ def _paged_prefill_attn_kernel(
         ).astype(o_ref.dtype)
 
 
+def _paged_prefill_attn_q_kernel(
+    table_ref, qoff_ref, vl_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref, *, page: int, g: int, scale: float,
+):
+    """int8-pool variant of :func:`_paged_prefill_attn_kernel`: the
+    per-(block, kv-head) scales prefetch beside the block table and each
+    KV page dequantizes in VMEM before the score dot (DESIGN §15)."""
+    slot = pl.program_id(0)
+    h_ = pl.program_id(1)
+    p_step = pl.program_id(2)
+
+    @pl.when(p_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = table_ref[slot, p_step]
+    q = q_ref[0, 0].astype(jnp.float32)          # (C·G, hd)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[blk, h_]
+    vb = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[blk, h_]
+    cg = q.shape[0]
+    s = jax.lax.dot_general(
+        q, kb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (C·G, page)
+    col = p_step * page + jax.lax.broadcasted_iota(jnp.int32, (cg, page), 1)
+    qpos = qoff_ref[slot] + jax.lax.broadcasted_iota(
+        jnp.int32, (cg, page), 0
+    ) // g
+    valid = (col <= qpos) & (col < vl_ref[slot])
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(p_step == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
 def paged_prefill_attention_pallas(
     q: jax.Array,
     k_pool: jax.Array,
@@ -106,6 +155,8 @@ def paged_prefill_attention_pallas(
     q_offset,
     kv_valid_len,
     *,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Chunked-prefill GQA attention against a paged block pool.
@@ -137,43 +188,50 @@ def paged_prefill_attention_pallas(
     qg = q.reshape(b, c, hkv, g, hd).transpose(0, 2, 1, 3, 4)
     qg = qg.reshape(b, hkv, c * g, hd)
     grid = (b, hkv, n_pages)
-    kv_spec = pl.BlockSpec(
-        (1, page, 1, hd),
-        lambda b_, h_, p_, table_ref, qoff_ref, vl_ref: (
-            table_ref[b_, p_], 0, h_, 0
-        ),
-    )
+    quant = k_scale is not None
+    n_prefetch = 5 if quant else 3
+
+    def kv_map(b_, h_, p_, table_ref, *_):
+        return (table_ref[b_, p_], 0, h_, 0)
+
+    def q_map(b_, h_, p_, *_):
+        return (b_, h_, 0, 0)
+
+    kv_spec = pl.BlockSpec((1, page, 1, hd), kv_map)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=n_prefetch,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(
-                (1, 1, c * g, hd),
-                lambda b_, h_, p_, t_, o_, v_: (b_, h_, 0, 0),
-            ),
+            pl.BlockSpec((1, 1, c * g, hd), q_map),
             kv_spec,
             kv_spec,
         ],
-        out_specs=pl.BlockSpec(
-            (1, 1, c * g, hd), lambda b_, h_, p_, t_, o_, v_: (b_, h_, 0, 0)
-        ),
+        out_specs=pl.BlockSpec((1, 1, c * g, hd), q_map),
         scratch_shapes=[
             pltpu.VMEM((c * g, 1), jnp.float32),    # running max
             pltpu.VMEM((c * g, 1), jnp.float32),    # running denom
             pltpu.VMEM((c * g, hd), jnp.float32),   # f32 accumulator
         ],
     )
-    out = pl.pallas_call(
-        functools.partial(
+    if quant:
+        body = functools.partial(
+            _paged_prefill_attn_q_kernel, page=page, g=g, scale=hd**-0.5
+        )
+        operands = (tbl, qoff, vl, k_scale, v_scale, qg, k_pool, v_pool)
+    else:
+        body = functools.partial(
             _paged_prefill_attn_kernel, page=page, g=g, scale=hd**-0.5
-        ),
+        )
+        operands = (tbl, qoff, vl, qg, k_pool, v_pool)
+    out = pl.pallas_call(
+        body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, c * g, hd), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(tbl, qoff, vl, qg, k_pool, v_pool)
+    )(*operands)
     out = out.reshape(b, hkv, c, g, hd).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, c, h, hd)
 
@@ -183,7 +241,9 @@ def paged_prefill_attention_pallas(
 
 def paged_prefill_attention_sharded(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array, table: jax.Array,
-    q_offset, kv_valid_len, mesh, *, interpret: bool = False,
+    q_offset, kv_valid_len, mesh,
+    *, k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
+    interpret: bool = False,
 ) -> jax.Array:
     """Tensor-parallel dispatch of :func:`paged_prefill_attention_pallas`.
 
@@ -200,14 +260,30 @@ def paged_prefill_attention_sharded(
 
     qo = jnp.broadcast_to(jnp.asarray(q_offset), (q.shape[0],))
     vl = jnp.broadcast_to(jnp.asarray(kv_valid_len), (q.shape[0],))
+    h = P(None, None, "model", None)
+    pool = P(None, None, "model", None)
+
+    if k_scale is not None:
+        def body_q(q_l, k_l, v_l, t_l, qo_l, vl_l, ks_l, vs_l):
+            return paged_prefill_attention_pallas(
+                q_l, k_l, v_l, t_l, qo_l, vl_l,
+                k_scale=ks_l, v_scale=vs_l, interpret=interpret,
+            )
+
+        sc = P(None, "model")
+        return tp_shard_map(
+            body_q, mesh,
+            in_specs=(
+                h, pool, pool, P(None, None), P(None), P(None), sc, sc
+            ),
+            out_specs=h,
+        )(q, k_pool, v_pool, table, qo, vl, k_scale, v_scale)
 
     def body(q_l, k_l, v_l, t_l, qo_l, vl_l):
         return paged_prefill_attention_pallas(
             q_l, k_l, v_l, t_l, qo_l, vl_l, interpret=interpret
         )
 
-    h = P(None, None, "model", None)
-    pool = P(None, None, "model", None)
     return tp_shard_map(
         body, mesh,
         in_specs=(h, pool, pool, P(None, None), P(None), P(None)),

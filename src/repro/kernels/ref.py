@@ -140,6 +140,67 @@ def paged_prefill_attention_ref(
     return prefill_attention_ref(q, k, v, q_offset, kv_valid_len)
 
 
+# ------------------------------------------------ quantized KV (DESIGN §15)
+
+
+def dequant_dense_kv(data: jax.Array, scale: jax.Array) -> jax.Array:
+    """Dequantize a dense int8 slot cache: (B, S, KV, hd) codes with
+    (B, S // group, KV) per-group scales → f32 values. ``group`` is
+    implied by the shapes (S must divide evenly, which ``init_cache``
+    guarantees by rounding S up to whole groups)."""
+    s = data.shape[-3]
+    ngr = scale.shape[-2]
+    sg = jnp.repeat(scale.astype(jnp.float32), s // ngr, axis=-2)
+    return data.astype(jnp.float32) * sg[..., None]
+
+
+def gather_paged_kv_q(
+    pool: jax.Array, scale: jax.Array, table: jax.Array
+) -> jax.Array:
+    """Quantized twin of :func:`gather_paged_kv`: gather int8 pages AND
+    their per-(block, kv-head) scales through the block table, dequantize
+    to a contiguous (B, n_pages·P, KV, hd) f32 view."""
+    n = pool.shape[0]
+    tbl = jnp.minimum(table, n - 1)
+    b, n_pages = table.shape
+    pages = pool[tbl].astype(jnp.float32)        # (B, n_pages, P, KV, hd)
+    sc = scale[tbl].astype(jnp.float32)          # (B, n_pages, KV)
+    pages = pages * sc[:, :, None, :, None]
+    return pages.reshape(b, n_pages * pool.shape[1], *pool.shape[2:])
+
+
+def decode_attention_q_ref(
+    q, k, v, k_scale, v_scale, kv_valid_len
+) -> jax.Array:
+    """int8-cache decode oracle: dequantize the dense cache, then
+    :func:`decode_attention_ref`."""
+    return decode_attention_ref(
+        q,
+        dequant_dense_kv(k, k_scale),
+        dequant_dense_kv(v, v_scale),
+        kv_valid_len,
+    )
+
+
+def paged_decode_attention_q_ref(
+    q, k_pool, v_pool, k_scale, v_scale, table, kv_valid_len
+) -> jax.Array:
+    """int8-pool paged decode oracle: gather+dequantize, dense softmax."""
+    k = gather_paged_kv_q(k_pool, k_scale, table)
+    v = gather_paged_kv_q(v_pool, v_scale, table)
+    return decode_attention_ref(q, k, v, kv_valid_len)
+
+
+def paged_prefill_attention_q_ref(
+    q, k_pool, v_pool, k_scale, v_scale, table, q_offset, kv_valid_len
+) -> jax.Array:
+    """int8-pool chunked-prefill oracle: gather+dequantize, two-sided
+    masked softmax."""
+    k = gather_paged_kv_q(k_pool, k_scale, table)
+    v = gather_paged_kv_q(v_pool, v_scale, table)
+    return prefill_attention_ref(q, k, v, q_offset, kv_valid_len)
+
+
 def fused_linear_ref(
     x: jax.Array,
     w: jax.Array,

@@ -206,9 +206,16 @@ def attention(
     causal: bool,
     q_offset=0,
     kv_valid_len=None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Dispatch: decode -> Pallas decode kernel (dense on jnp/tiny caches);
-    long sequences -> flash scan; everything else -> dense."""
+    long sequences -> flash scan; everything else -> dense.
+
+    ``k_scale``/``v_scale`` (B, groups, Hkv) mark an int8 slot cache
+    (DESIGN §15): the decode kernel dequantizes tile-wise in VMEM, the
+    dense fallback dequantizes the cache view up front.
+    """
     skv = k.shape[1]
     sq = q.shape[1]
     h, hkv = q.shape[2], k.shape[2]
@@ -229,7 +236,12 @@ def attention(
         # per-slot valid lengths — one HBM read per cache byte per step.
         # Dense fallback remains for the jnp backend (CPU oracle) and for
         # caches too small to amortise the KV-chunk padding.
-        return ops.decode_attention(q, k, v, kv_valid_len)
+        return ops.decode_attention(q, k, v, kv_valid_len, k_scale, v_scale)
+    if k_scale is not None:
+        from repro.kernels import ref
+
+        k = ref.dequant_dense_kv(k, k_scale).astype(q.dtype)
+        v = ref.dequant_dense_kv(v, v_scale).astype(q.dtype)
     return dense_attention(
         q, k, v, causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len
     )
@@ -243,6 +255,8 @@ def chunk_attention(
     *,
     q_offset,
     kv_valid_len,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Chunked-prefill attention against a dense slot cache (DESIGN §11).
 
@@ -252,8 +266,14 @@ def chunk_attention(
     post-write frontier. The dense masked softmax IS today's prefill
     numerics per query row (masked columns contribute exact zeros), which
     is what keeps chunked greedy outputs token-identical to the one-shot
-    prefill they replace.
+    prefill they replace. An int8 cache (``k_scale``/``v_scale`` present)
+    dequantizes its view first — same values the kernels reconstruct.
     """
+    if k_scale is not None:
+        from repro.kernels import ref
+
+        k = ref.dequant_dense_kv(k, k_scale).astype(q.dtype)
+        v = ref.dequant_dense_kv(v, v_scale).astype(q.dtype)
     return dense_attention(
         q, k, v, causal=True, q_offset=q_offset, kv_valid_len=kv_valid_len
     )
@@ -268,16 +288,20 @@ def paged_prefill_attention(
     *,
     q_offset,
     kv_valid_len,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Chunked-prefill attention against a paged block pool (DESIGN §11).
 
     Pallas backends take the query-chunk × paged-KV kernel — the block
     table and per-slot (q_offset, kv_valid_len) ride as scalar prefetch,
-    physical pages DMA straight from the pool. The jnp backend (and
-    pools too small to amortise page-grain DMA) gathers the table's
-    pages into the contiguous view and runs the same dense masked
-    softmax as :func:`chunk_attention`, keeping paged-vs-dense chunked
-    prefill bit-identical on the oracle backend.
+    physical pages DMA straight from the pool (int8 pools bring their
+    (N, Hkv) scales along the same prefetch path, DESIGN §15). The jnp
+    backend (and pools too small to amortise page-grain DMA) gathers the
+    table's pages into the contiguous view — dequantizing per page when
+    quantized — and runs the same dense masked softmax as
+    :func:`chunk_attention`, keeping paged-vs-dense chunked prefill
+    bit-identical on the oracle backend.
     """
     from repro.kernels import ref
 
@@ -289,10 +313,15 @@ def paged_prefill_attention(
         and _kernel_tp_ok(k_pool.shape[2])
     ):
         return ops.prefill_attention(
-            q, k_pool, v_pool, table, q_offset, kv_valid_len
+            q, k_pool, v_pool, table, q_offset, kv_valid_len,
+            k_scale, v_scale,
         )
-    k = ref.gather_paged_kv(k_pool, table)
-    v = ref.gather_paged_kv(v_pool, table)
+    if k_scale is not None:
+        k = ref.gather_paged_kv_q(k_pool, k_scale, table).astype(q.dtype)
+        v = ref.gather_paged_kv_q(v_pool, v_scale, table).astype(q.dtype)
+    else:
+        k = ref.gather_paged_kv(k_pool, table)
+        v = ref.gather_paged_kv(v_pool, table)
     return dense_attention(
         q, k, v, causal=True, q_offset=q_offset, kv_valid_len=kv_valid_len
     )
@@ -306,14 +335,18 @@ def paged_attention(
     cfg,
     *,
     kv_valid_len,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Decode attention against a paged block pool (DESIGN §10).
 
     Pallas backends take the block-table kernel — physical pages DMA
     straight from the (N, P, Hkv, hd) pool, no contiguous per-slot cache
-    is ever materialised. The jnp backend (and pools too small to amortise
-    page-grain DMA) gathers the table's pages into the contiguous view and
-    runs the same dense masked softmax the dense-slot engine uses, keeping
+    is ever materialised (int8 pools prefetch their (N, Hkv) scales next
+    to the table, DESIGN §15). The jnp backend (and pools too small to
+    amortise page-grain DMA) gathers the table's pages into the
+    contiguous view — dequantized when quantized — and runs the same
+    dense masked softmax the dense-slot engine uses, keeping
     paged-vs-dense greedy outputs token-for-token identical on the oracle
     backend.
     """
@@ -326,7 +359,13 @@ def paged_attention(
         and page * n_pages >= DECODE_KERNEL_MIN_LEN
         and _kernel_tp_ok(k_pool.shape[2])
     ):
-        return ops.paged_decode_attention(q, k_pool, v_pool, table, kv_valid_len)
-    k = ref.gather_paged_kv(k_pool, table)
-    v = ref.gather_paged_kv(v_pool, table)
+        return ops.paged_decode_attention(
+            q, k_pool, v_pool, table, kv_valid_len, k_scale, v_scale
+        )
+    if k_scale is not None:
+        k = ref.gather_paged_kv_q(k_pool, k_scale, table).astype(q.dtype)
+        v = ref.gather_paged_kv_q(v_pool, v_scale, table).astype(q.dtype)
+    else:
+        k = ref.gather_paged_kv(k_pool, table)
+        v = ref.gather_paged_kv(v_pool, table)
     return dense_attention(q, k, v, causal=False, kv_valid_len=kv_valid_len)

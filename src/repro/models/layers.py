@@ -181,6 +181,189 @@ def paged_chunk_cache_update(
     return cache.at[blk, pos % page].set(new.astype(cache.dtype), mode="drop")
 
 
+# ------------------------------------------------- quantized KV (DESIGN §15)
+
+# rows per dense-cache scale group: the dense slot cache quantizes its
+# sequence axis in chunks of this many positions (the dense twin of a
+# paged pool's page), one fp32 absmax scale per (slot, group, kv-head).
+KV_QUANT_GROUP = 16
+
+
+def quant_kv_page(page: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric absmax int8 over a ``(…, rows, KV, hd)`` page view.
+
+    One scale per kv-head — absmax over the page's rows × head dim — the
+    cache twin of ``quant/qtensor.py``'s blockwise weight scheme: ``s =
+    absmax / 127`` with the zero-page guard, codes clipped to ±127.
+    Returns ``(codes int8 (…, rows, KV, hd), scales f32 (…, KV))``.
+    """
+    page = page.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(page), axis=(-3, -1))
+    s = absmax / 127.0
+    safe = jnp.where(s > 0, s, 1.0)[..., None, :, None]
+    q = jnp.clip(jnp.round(page / safe), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def dequant_kv_page(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse of :func:`quant_kv_page`: ``(…, rows, KV, hd)`` f32."""
+    return codes.astype(jnp.float32) * scales.astype(jnp.float32)[..., None, :, None]
+
+
+def _rebuild_pages(cur, new, lp, q_offset, q_len):
+    """Shared overlay step of every quantize-on-write path.
+
+    ``cur`` (…, rows, KV, hd) is the dequantized current page content,
+    ``new`` (B, C, KV, hd) the incoming fp chunk, ``lp`` (…, rows) each
+    row's logical sequence position. Rows below ``q_offset`` keep their
+    (dequantized) values, rows in ``[q_offset, q_offset + q_len)`` take
+    the chunk, rows at/past the new frontier are ZEROED — they hold
+    either a prior owner's garbage or rolled-back speculative rows, and
+    zeroing keeps them out of the recomputed absmax so the page content
+    is a pure function of the committed write sequence (what makes
+    preemption's exact re-prefill reproduce the pool bit-for-bit).
+    """
+    b, c = new.shape[:2]
+    qo = q_offset.reshape(b, *([1] * (lp.ndim - 1)))
+    end = (q_offset + q_len).reshape(b, *([1] * (lp.ndim - 1)))
+    ci = jnp.clip(lp - qo, 0, c - 1)
+    ov = jnp.take_along_axis(
+        new.astype(jnp.float32),
+        ci.reshape(b, -1)[:, :, None, None],
+        axis=1,
+    ).reshape(*lp.shape, *new.shape[2:])
+    write = ((lp >= qo) & (lp < end))[..., None, None]
+    keep = (lp < qo)[..., None, None]
+    return jnp.where(write, ov, jnp.where(keep, cur, 0.0))
+
+
+def cache_update_q(
+    data: jax.Array, scale: jax.Array, new: jax.Array, pos
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized twin of :func:`cache_update`: rebuild the one scale
+    group containing ``pos`` per slot (dequantize → overlay the token →
+    zero rows past it → requantize), deterministic per write sequence.
+
+    data (B, S, KV, hd) int8 with S a multiple of :data:`KV_QUANT_GROUP`;
+    scale (B, S // group, KV) f32; new (B, 1, KV, hd); pos scalar or (B,).
+    """
+    b = new.shape[0]
+    ngr = scale.shape[1]
+    group = data.shape[1] // ngr
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    g = pos // group
+    dv = data.reshape(b, ngr, group, *data.shape[2:])
+    cur_q = jnp.take_along_axis(dv, g[:, None, None, None, None], axis=1)[:, 0]
+    cur_s = jnp.take_along_axis(scale, g[:, None, None], axis=1)[:, 0]
+    cur = dequant_kv_page(cur_q, cur_s)
+    lp = g[:, None] * group + jnp.arange(group)[None, :]  # (B, rows)
+    page_f = _rebuild_pages(cur, new, lp, pos, jnp.ones((b,), jnp.int32))
+    q_new, s_new = quant_kv_page(page_f)
+    rows = g[:, None] * group + jnp.arange(group)[None, :]
+    data = data.at[jnp.arange(b)[:, None], rows].set(q_new, mode="drop")
+    scale = scale.at[jnp.arange(b), g].set(s_new, mode="drop")
+    return data, scale
+
+
+def chunk_cache_update_q(
+    data: jax.Array, scale: jax.Array, new: jax.Array, q_offset, q_len
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized twin of :func:`chunk_cache_update`: every scale group the
+    chunk touches is gathered, dequantized, overlaid, frontier-zeroed,
+    and requantized under a recomputed absmax scale (the tail group's
+    scale is recomputed on every append).
+
+    data (B, S, KV, hd) int8, S a multiple of :data:`KV_QUANT_GROUP`;
+    scale (B, S // group, KV) f32; new (B, C, KV, hd). Idle slots
+    (``q_len = 0``) and rows past the cache end drop via ``mode="drop"``.
+    """
+    b, c = new.shape[:2]
+    ngr = scale.shape[1]
+    group = data.shape[1] // ngr
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    q_len = jnp.asarray(q_len, jnp.int32)
+    t = (c - 1) // group + 2  # static bound on touched groups per slot
+    g0 = q_offset // group
+    tg = g0[:, None] + jnp.arange(t)[None, :]  # (B, T) group indices
+    end = q_offset + q_len
+    covered = (q_len > 0)[:, None] & (tg * group < end[:, None]) & (tg < ngr)
+    tg_safe = jnp.minimum(tg, ngr - 1)
+    dv = data.reshape(b, ngr, group, *data.shape[2:])
+    cur_q = jnp.take_along_axis(dv, tg_safe[:, :, None, None, None], axis=1)
+    cur_s = jnp.take_along_axis(scale, tg_safe[:, :, None], axis=1)
+    cur = dequant_kv_page(cur_q, cur_s)  # (B, T, rows, KV, hd)
+    lp = tg[:, :, None] * group + jnp.arange(group)[None, None, :]
+    page_f = _rebuild_pages(cur, new, lp, q_offset, q_len)
+    q_new, s_new = quant_kv_page(page_f)
+    rows = jnp.where(covered[:, :, None], lp, data.shape[1])
+    data = data.at[jnp.arange(b)[:, None, None], rows].set(q_new, mode="drop")
+    g_w = jnp.where(covered, tg, ngr)
+    scale = scale.at[jnp.arange(b)[:, None], g_w].set(s_new, mode="drop")
+    return data, scale
+
+
+def paged_cache_update_q(
+    data: jax.Array, scale: jax.Array, new: jax.Array, table, pos
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized twin of :func:`paged_cache_update`: rebuild the ONE
+    physical page holding ``pos`` per slot. Sentinel table entries
+    (unadmitted slots) drop both the data and the scale write.
+
+    data (N, P, KV, hd) int8; scale (N, KV) f32; new (B, 1, KV, hd).
+    """
+    n, page = data.shape[0], data.shape[1]
+    b = new.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    blk = jnp.take_along_axis(table, (pos // page)[:, None], axis=1)[:, 0]
+    safe_blk = jnp.minimum(blk, n - 1)
+    cur = dequant_kv_page(data[safe_blk], scale[safe_blk])  # (B, P, KV, hd)
+    lp = (pos // page)[:, None] * page + jnp.arange(page)[None, :]
+    page_f = _rebuild_pages(cur, new, lp, pos, jnp.ones((b,), jnp.int32))
+    q_new, s_new = quant_kv_page(page_f)
+    data = data.at[blk].set(q_new, mode="drop")
+    scale = scale.at[blk].set(s_new, mode="drop")
+    return data, scale
+
+
+def paged_chunk_cache_update_q(
+    data: jax.Array, scale: jax.Array, new: jax.Array, table, q_offset, q_len
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized twin of :func:`paged_chunk_cache_update`: each physical
+    page the chunk touches (through the slot's *write* table — sentinel
+    on unallocated AND shared pages) is rebuilt whole: gather →
+    dequantize → overlay chunk rows → zero rows at/past the new frontier
+    → recompute the per-kv-head absmax scale → requantize → scatter.
+
+    data (N, P, KV, hd) int8; scale (N, KV) f32; new (B, C, KV, hd).
+    """
+    n, page = data.shape[0], data.shape[1]
+    b, c = new.shape[:2]
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    q_len = jnp.asarray(q_len, jnp.int32)
+    n_pages = table.shape[1]
+    t = (c - 1) // page + 2  # static bound on touched pages per slot
+    pg0 = q_offset // page
+    tpg = pg0[:, None] + jnp.arange(t)[None, :]  # (B, T) logical pages
+    blk = jnp.take_along_axis(table, jnp.minimum(tpg, n_pages - 1), axis=1)
+    end = q_offset + q_len
+    covered = (
+        (q_len > 0)[:, None] & (tpg * page < end[:, None]) & (tpg < n_pages)
+    )
+    blk_w = jnp.where(covered, blk, n)  # sentinel → mode="drop"
+    safe_blk = jnp.minimum(blk, n - 1)
+    cur = dequant_kv_page(data[safe_blk], scale[safe_blk])  # (B,T,P,KV,hd)
+    lp = tpg[:, :, None] * page + jnp.arange(page)[None, None, :]
+    page_f = _rebuild_pages(cur, new, lp, q_offset, q_len)
+    q_new, s_new = quant_kv_page(page_f)
+    data = data.at[blk_w].set(q_new, mode="drop")
+    scale = scale.at[blk_w].set(s_new, mode="drop")
+    return data, scale
+
+
 def decode_positions(pos, batch: int) -> jax.Array:
     """(B,1) rope positions from scalar or per-slot pos."""
     pos = jnp.asarray(pos)

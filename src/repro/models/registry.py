@@ -65,16 +65,28 @@ class Model:
             )
         return self.mod.verify_chunk(self.cfg, params, adapters, cache, batch)
 
-    def init_cache(self, batch: int, max_len: int):
-        return self.mod.init_cache(self.cfg, batch, max_len)
+    def init_cache(self, batch: int, max_len: int, kv_dtype: str = "fp32"):
+        if kv_dtype == "fp32":
+            return self.mod.init_cache(self.cfg, batch, max_len)
+        if self.mod is not transformer:
+            raise ValueError(
+                f"family {self.cfg.family!r} has no quantized KV cache"
+            )
+        return self.mod.init_cache(self.cfg, batch, max_len, kv_dtype=kv_dtype)
 
-    def init_paged_cache(self, num_blocks: int, page_size: int):
+    def init_paged_cache(
+        self, num_blocks: int, page_size: int, kv_dtype: str = "fp32"
+    ):
         """Block-pool KV cache for the paged serving core (KV-cache LMs)."""
         if not hasattr(self.mod, "init_paged_cache"):
             raise ValueError(
                 f"family {self.cfg.family!r} has no paged KV cache"
             )
-        return self.mod.init_paged_cache(self.cfg, num_blocks, page_size)
+        if kv_dtype == "fp32":
+            return self.mod.init_paged_cache(self.cfg, num_blocks, page_size)
+        return self.mod.init_paged_cache(
+            self.cfg, num_blocks, page_size, kv_dtype=kv_dtype
+        )
 
     # ---------------------------------------------------------------- specs
 

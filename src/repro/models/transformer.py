@@ -12,7 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.delta import BatchedDelta, Delta
-from repro.distributed.context import constrain, constrain_inner, constrain_kv
+from repro.distributed.context import (
+    constrain,
+    constrain_inner,
+    constrain_kv,
+    constrain_kv_scale,
+)
 from repro.kernels import ops
 from repro.models import moe as moe_lib
 from repro.models.attention import (
@@ -22,18 +27,23 @@ from repro.models.attention import (
     paged_prefill_attention,
 )
 from repro.models.layers import (
+    KV_QUANT_GROUP,
     ad_get,
     alinear,
     apply_mrope,
     apply_rope,
     cache_update,
+    cache_update_q,
     chunk_cache_update,
+    chunk_cache_update_q,
     compute_dtype,
     decode_positions,
     init_linear,
     init_norm,
     paged_cache_update,
+    paged_cache_update_q,
     paged_chunk_cache_update,
+    paged_chunk_cache_update_q,
     rms_norm,
     softmax_cross_entropy,
 )
@@ -133,31 +143,96 @@ def _block_train(cfg, h, p, a, positions, mrope_pos):
     return h + y, aux
 
 
-def _block_decode(cfg, h, p, a, ck, cv, pos, positions, mrope_pos):
-    """One-token step. ck/cv (B,Smax,KV,hd); pos scalar or (B,) write index."""
+def _write_decode(c, k, v, pos, table):
+    """Single-token cache write into a per-layer cache dict ``c``.
+
+    ``c`` holds ``{"k", "v"}`` fp leaves — or the int8 quartet with
+    ``{"k_scale", "v_scale"}``, in which case the quantize-on-write twins
+    rebuild the touched page/group (DESIGN §15)."""
+    if "k_scale" in c:
+        if table is None:
+            dk, sk = cache_update_q(c["k"], c["k_scale"], k, pos)
+            dv, sv = cache_update_q(c["v"], c["v_scale"], v, pos)
+        else:
+            dk, sk = paged_cache_update_q(c["k"], c["k_scale"], k, table, pos)
+            dv, sv = paged_cache_update_q(c["v"], c["v_scale"], v, table, pos)
+        return {
+            "k": constrain_kv(dk),
+            "v": constrain_kv(dv),
+            "k_scale": constrain_kv_scale(sk),
+            "v_scale": constrain_kv_scale(sv),
+        }
+    if table is None:
+        return {
+            "k": constrain_kv(cache_update(c["k"], k, pos)),
+            "v": constrain_kv(cache_update(c["v"], v, pos)),
+        }
+    return {
+        "k": constrain_kv(paged_cache_update(c["k"], k, table, pos)),
+        "v": constrain_kv(paged_cache_update(c["v"], v, table, pos)),
+    }
+
+
+def _write_chunk(c, k, v, wtable, q_offset, q_len):
+    """Chunk cache write into a per-layer cache dict ``c`` (dense when
+    ``wtable`` is None, else routed through the slot write tables)."""
+    if "k_scale" in c:
+        if wtable is None:
+            dk, sk = chunk_cache_update_q(c["k"], c["k_scale"], k, q_offset, q_len)
+            dv, sv = chunk_cache_update_q(c["v"], c["v_scale"], v, q_offset, q_len)
+        else:
+            dk, sk = paged_chunk_cache_update_q(
+                c["k"], c["k_scale"], k, wtable, q_offset, q_len
+            )
+            dv, sv = paged_chunk_cache_update_q(
+                c["v"], c["v_scale"], v, wtable, q_offset, q_len
+            )
+        return {
+            "k": constrain_kv(dk),
+            "v": constrain_kv(dv),
+            "k_scale": constrain_kv_scale(sk),
+            "v_scale": constrain_kv_scale(sv),
+        }
+    if wtable is None:
+        return {
+            "k": constrain_kv(chunk_cache_update(c["k"], k, q_offset, q_len)),
+            "v": constrain_kv(chunk_cache_update(c["v"], v, q_offset, q_len)),
+        }
+    return {
+        "k": constrain_kv(paged_chunk_cache_update(c["k"], k, wtable, q_offset, q_len)),
+        "v": constrain_kv(paged_chunk_cache_update(c["v"], v, wtable, q_offset, q_len)),
+    }
+
+
+def _block_decode(cfg, h, p, a, c, pos, positions, mrope_pos):
+    """One-token step. c["k"]/c["v"] (B,Smax,KV,hd); pos scalar or (B,)."""
     x = rms_norm(h, p["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(cfg, p, a, x, positions, mrope_pos)
-    ck = constrain_kv(cache_update(ck, k, pos))
-    cv = constrain_kv(cache_update(cv, v, pos))
-    o = attention(q, ck, cv, cfg, causal=False, kv_valid_len=pos + 1)
+    c = _write_decode(c, k, v, pos, None)
+    o = attention(
+        q, c["k"], c["v"], cfg, causal=False, kv_valid_len=pos + 1,
+        k_scale=c.get("k_scale"), v_scale=c.get("v_scale"),
+    )
     h = h + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
     x = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
     y, _ = _mlp(cfg, p, a, x)
-    return h + y, ck, cv
+    return h + y, c
 
 
-def _block_decode_paged(cfg, h, p, a, ck, cv, pos, table, positions, mrope_pos):
-    """One-token step against a block pool. ck/cv (N,P,KV,hd) shared pool;
+def _block_decode_paged(cfg, h, p, a, c, pos, table, positions, mrope_pos):
+    """One-token step against a block pool. c["k"]/c["v"] (N,P,KV,hd);
     table (B, n_pages) routes each slot's logical pages; pos (B,)."""
     x = rms_norm(h, p["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(cfg, p, a, x, positions, mrope_pos)
-    ck = constrain_kv(paged_cache_update(ck, k, table, pos))
-    cv = constrain_kv(paged_cache_update(cv, v, table, pos))
-    o = paged_attention(q, ck, cv, table, cfg, kv_valid_len=pos + 1)
+    c = _write_decode(c, k, v, pos, table)
+    o = paged_attention(
+        q, c["k"], c["v"], table, cfg, kv_valid_len=pos + 1,
+        k_scale=c.get("k_scale"), v_scale=c.get("v_scale"),
+    )
     h = h + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
     x = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
     y, _ = _mlp(cfg, p, a, x)
-    return h + y, ck, cv
+    return h + y, c
 
 
 # ----------------------------------------------------------------- forward
@@ -249,20 +324,46 @@ def loss_fn(cfg, params, adapters, batch, *, remat="none"):
 # ------------------------------------------------------------------- serve
 
 
-def init_cache(cfg, batch: int, max_len: int):
+def init_cache(cfg, batch: int, max_len: int, kv_dtype: str = "fp32"):
+    """Dense slot cache. ``kv_dtype="int8"`` packs k/v as int8 codes with
+    per-(slot, :data:`KV_QUANT_GROUP`-row group, kv-head) fp32 scales; the
+    sequence axis rounds up to a whole number of groups (attention masks
+    the pad rows the same way it masks unwritten ones). DESIGN §15."""
     dt = compute_dtype(cfg)
     L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    if kv_dtype == "int8":
+        g = KV_QUANT_GROUP
+        ngr = -(-max_len // g)
+        return {
+            "k": jnp.zeros((L, batch, ngr * g, KV, hd), jnp.int8),
+            "v": jnp.zeros((L, batch, ngr * g, KV, hd), jnp.int8),
+            "k_scale": jnp.zeros((L, batch, ngr, KV), jnp.float32),
+            "v_scale": jnp.zeros((L, batch, ngr, KV), jnp.float32),
+        }
+    if kv_dtype != "fp32":
+        raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
     return {
         "k": jnp.zeros((L, batch, max_len, KV, hd), dt),
         "v": jnp.zeros((L, batch, max_len, KV, hd), dt),
     }
 
 
-def init_paged_cache(cfg, num_blocks: int, page_size: int):
+def init_paged_cache(cfg, num_blocks: int, page_size: int, kv_dtype: str = "fp32"):
     """Block-pool cache: capacity is tokens (num_blocks × page_size), not
-    slots × max_len — slots own pages through a block table, not rows."""
+    slots × max_len — slots own pages through a block table, not rows.
+    ``kv_dtype="int8"`` packs the pools as int8 codes with one fp32 scale
+    per (block, kv-head) riding beside them (DESIGN §15)."""
     dt = compute_dtype(cfg)
     L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    if kv_dtype == "int8":
+        return {
+            "k": jnp.zeros((L, num_blocks, page_size, KV, hd), jnp.int8),
+            "v": jnp.zeros((L, num_blocks, page_size, KV, hd), jnp.int8),
+            "k_scale": jnp.zeros((L, num_blocks, KV), jnp.float32),
+            "v_scale": jnp.zeros((L, num_blocks, KV), jnp.float32),
+        }
+    if kv_dtype != "fp32":
+        raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
     return {
         "k": jnp.zeros((L, num_blocks, page_size, KV, hd), dt),
         "v": jnp.zeros((L, num_blocks, page_size, KV, hd), dt),
@@ -317,30 +418,28 @@ def _chunk_forward(cfg, params, adapters, cache, batch):
     blocks, a_blocks = _split_blocks(params, adapters)
 
     def body(hh, xs):
-        p, a, ck, cv = xs
+        p, a, c = xs
         x = rms_norm(hh, p["attn_norm"], cfg.norm_eps)
         q, k, v = _qkv(cfg, p, a, x, positions, None)
         if table is None:
-            ck = constrain_kv(chunk_cache_update(ck, k, q_offset, q_len))
-            cv = constrain_kv(chunk_cache_update(cv, v, q_offset, q_len))
+            c = _write_chunk(c, k, v, None, q_offset, q_len)
             o = chunk_attention(
-                q, ck, cv, cfg, q_offset=q_offset, kv_valid_len=vl
+                q, c["k"], c["v"], cfg, q_offset=q_offset, kv_valid_len=vl,
+                k_scale=c.get("k_scale"), v_scale=c.get("v_scale"),
             )
         else:
-            ck = constrain_kv(paged_chunk_cache_update(ck, k, wtable, q_offset, q_len))
-            cv = constrain_kv(paged_chunk_cache_update(cv, v, wtable, q_offset, q_len))
+            c = _write_chunk(c, k, v, wtable, q_offset, q_len)
             o = paged_prefill_attention(
-                q, ck, cv, table, cfg, q_offset=q_offset, kv_valid_len=vl
+                q, c["k"], c["v"], table, cfg, q_offset=q_offset, kv_valid_len=vl,
+                k_scale=c.get("k_scale"), v_scale=c.get("v_scale"),
             )
         hh = hh + alinear(p, a, "wo", o.reshape(*o.shape[:2], -1))
         x = rms_norm(hh, p["mlp_norm"], cfg.norm_eps)
         y, _ = _mlp(cfg, p, a, x)
-        return hh + y, (ck, cv)
+        return hh + y, c
 
-    h, (ck, cv) = jax.lax.scan(
-        body, h, (blocks, a_blocks, cache["k"], cache["v"])
-    )
-    return h, {"k": ck, "v": cv}
+    h, cache = jax.lax.scan(body, h, (blocks, a_blocks, cache))
+    return h, cache
 
 
 def prefill_chunk(cfg, params, adapters, cache, batch):
@@ -405,18 +504,16 @@ def decode_step(cfg, params, adapters, cache, batch):
     blocks, a_blocks = _split_blocks(params, adapters)
 
     def body(hh, xs):
-        p, a, ck, cv = xs
+        p, a, c = xs
         if table is None:
-            hh, ck, cv = _block_decode(
-                cfg, hh, p, a, ck, cv, pos, positions, mrope_pos
-            )
+            hh, c = _block_decode(cfg, hh, p, a, c, pos, positions, mrope_pos)
         else:
-            hh, ck, cv = _block_decode_paged(
-                cfg, hh, p, a, ck, cv, pos, table, positions, mrope_pos
+            hh, c = _block_decode_paged(
+                cfg, hh, p, a, c, pos, table, positions, mrope_pos
             )
-        return hh, (ck, cv)
+        return hh, c
 
-    h, (ck, cv) = jax.lax.scan(body, h, (blocks, a_blocks, cache["k"], cache["v"]))
+    h, cache = jax.lax.scan(body, h, (blocks, a_blocks, cache))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = _head_logits(cfg, params, adapters, h)[:, 0]
-    return logits, {"k": ck, "v": cv}
+    return logits, cache

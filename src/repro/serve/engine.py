@@ -90,7 +90,7 @@ import numpy as np
 from repro.core.delta import BatchedDelta
 from repro.obs import MetricsRegistry, NullRegistry, Tracer
 from repro.serve.adapters import AdapterStore
-from repro.serve.kv_cache import DraftKVCache, KVCache, PagedKVCache
+from repro.serve.kv_cache import KV_DTYPES, DraftKVCache, KVCache, PagedKVCache
 from repro.serve.sampler import Sampler
 from repro.serve.scheduler import Request, Scheduler
 
@@ -118,6 +118,7 @@ class ServeEngine:
         paged: bool = False,
         page_size: int = 16,
         num_blocks: int | None = None,
+        kv_dtype: str = "fp32",
         draft: str = "off",
         spec_k: int = 4,
         metrics: "MetricsRegistry | bool | None" = None,
@@ -134,6 +135,8 @@ class ServeEngine:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         if paged and (page_size < 1 or page_size & (page_size - 1)):
             raise ValueError(f"page_size must be a power of two, got {page_size}")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype {kv_dtype!r} not in {KV_DTYPES}")
         from repro.peft import BASE_DTYPES, quantize_base
         from repro.serve.draft import DRAFT_MODES, build_draft_params
 
@@ -213,6 +216,7 @@ class ServeEngine:
         # per decode slot. One compiled shape serves every prompt length.
         self.prefill_chunk = min(prefill_chunk, max_len)
         self.paged = paged
+        self.kv_dtype = kv_dtype
         self.draft = draft
         self.spec_k = spec_k
         # one metrics registry per engine unless the caller shares one;
@@ -236,10 +240,11 @@ class ServeEngine:
                 # layout would reserve, now shared instead of per-slot
                 num_blocks = slots * max_pages
             self.kv = PagedKVCache(
-                model, slots, max_len, page_size, num_blocks, mesh=mesh
+                model, slots, max_len, page_size, num_blocks, mesh=mesh,
+                kv_dtype=kv_dtype,
             )
         else:
-            self.kv = KVCache(model, slots, max_len, mesh=mesh)
+            self.kv = KVCache(model, slots, max_len, mesh=mesh, kv_dtype=kv_dtype)
         self.sampler = Sampler(model.cfg.vocab_size, top_k=top_k, top_p=top_p)
 
         # speculative decoding (DESIGN §12): the drafter is derived from
@@ -901,14 +906,21 @@ class ServeEngine:
             "serve_tp_size",
             "Tensor-parallel shards serving this engine (1 = unsharded).",
         )
+        # effective *packed* bytes — int8 codes + fp32 scales — labeled by
+        # storage dtype so fp32/int8 twins stay distinguishable when they
+        # share a registry (DESIGN §15)
         self._g_pool_bytes = reg.gauge(
             "serve_pool_bytes",
-            "KV cache/pool bytes across all shards (logical total).",
-        )
+            "Effective packed KV cache/pool bytes (data + scales) across "
+            "all shards (logical total).",
+            labels=("kv_dtype",),
+        ).labels(self.kv_dtype)
         self._g_pool_bytes_shard = reg.gauge(
             "serve_pool_bytes_per_shard",
-            "KV cache/pool bytes ONE shard holds (total / TP sharded).",
-        )
+            "Effective packed KV cache/pool bytes ONE shard holds "
+            "(total / TP sharded).",
+            labels=("kv_dtype",),
+        ).labels(self.kv_dtype)
         self._g_tp.set(self.tp)
         self._g_pool_bytes.set(self.kv.pool_bytes())
         self._g_pool_bytes_shard.set(self.kv.pool_bytes_per_shard())

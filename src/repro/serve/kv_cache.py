@@ -43,6 +43,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import cache_shardings
 
+#: cache storage dtypes the serve engines accept (DESIGN §15). "int8"
+#: packs k/v as symmetric-absmax codes with per-page (paged) or
+#: per-16-row-group (dense) fp32 scales along the kv-head axis.
+KV_DTYPES = ("fp32", "int8")
+
 
 def _place_cache(tree, mesh):
     """Shard a k/v tree's kv-head axis over the mesh's ``model`` axis.
@@ -79,16 +84,29 @@ def _tree_shard_bytes(tree) -> int:
 
 
 class KVCache:
-    def __init__(self, model, slots: int, max_len: int, mesh=None):
+    def __init__(
+        self, model, slots: int, max_len: int, mesh=None, kv_dtype: str = "fp32"
+    ):
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
+            )
         self.slots = slots
         self.max_len = max_len
         self.mesh = mesh
-        self.data = _place_cache(model.init_cache(slots, max_len), mesh)
+        self.kv_dtype = kv_dtype
+        self.data = _place_cache(
+            model.init_cache(slots, max_len, kv_dtype=kv_dtype), mesh
+        )
         # device (compiled-step carry); replicated under a serve mesh
         self.pos = _replicated(jnp.zeros((slots,), jnp.int32), mesh)
         self.pos_host = np.zeros((slots,), np.int32)  # admission mirror
 
     def pool_bytes(self) -> int:
+        """Effective packed cache bytes — int8 codes plus their fp32
+        scales, summed over every tree leaf. The one number the
+        ``serve_pool_bytes`` gauge, the bench memory table, and the
+        capacity planner all report (DESIGN §15)."""
         return _tree_bytes(self.data)
 
     def pool_bytes_per_shard(self) -> int:
@@ -151,20 +169,28 @@ class PagedKVCache:
 
     def __init__(
         self, model, slots: int, max_len: int, page_size: int, num_blocks: int,
-        mesh=None,
+        mesh=None, kv_dtype: str = "fp32",
     ):
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
+            )
         self.slots = slots
         self.max_len = max_len
         self.page_size = page_size
         self.num_blocks = num_blocks
         self.mesh = mesh
+        self.kv_dtype = kv_dtype
         self.max_pages = -(-max_len // page_size)
         if num_blocks < self.max_pages:
             raise ValueError(
                 f"num_blocks {num_blocks} cannot hold one max_len={max_len} "
                 f"request ({self.max_pages} pages of {page_size})"
             )
-        self.data = _place_cache(model.init_paged_cache(num_blocks, page_size), mesh)
+        self.data = _place_cache(
+            model.init_paged_cache(num_blocks, page_size, kv_dtype=kv_dtype),
+            mesh,
+        )
         # device (compiled-step carry); replicated under a serve mesh
         self.pos = _replicated(jnp.zeros((slots,), jnp.int32), mesh)
         self.pos_host = np.zeros((slots,), np.int32)  # admission mirror
@@ -215,6 +241,10 @@ class PagedKVCache:
         return -(-n_tokens // self.page_size)
 
     def pool_bytes(self) -> int:
+        """Effective packed pool bytes — int8 codes plus their fp32
+        per-(block, kv-head) scales. Same semantics as
+        :meth:`KVCache.pool_bytes` so the gauges, bench, and smoke all
+        read one number regardless of layout (DESIGN §15)."""
         return _tree_bytes(self.data)
 
     def pool_bytes_per_shard(self) -> int:

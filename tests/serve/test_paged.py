@@ -296,7 +296,7 @@ def test_prefix_sharing_respects_tenants():
 def _args(**kw):
     base = dict(decode_chunk=8, prefill_chunk=256, max_new=16, max_len=128,
                 dense=False, paged=False, page_size=None, num_blocks=None,
-                draft="off", spec_k=4, adapters="",
+                kv_dtype="fp32", draft="off", spec_k=4, adapters="",
                 prompts="1,17,25;1,40,41,42", metrics_out="", trace_out="",
                 metrics_every=0, profile_dir="")
     base.update(kw)

@@ -1,0 +1,208 @@
+"""Quantized KV cache through the serving engine (DESIGN §15).
+
+The int8 pool must be a drop-in `kv_dtype=` swap: same scheduler, same
+megastep shapes, same pool accounting — with greedy outputs tracking the
+fp32-cache engine inside a bounded drift budget (absmax int8 grouping on
+a random-init reduced model keeps short horizons stable). The grid
+sweeps both cache layouts through plain, multi-tenant, int8-base and
+speculative modes; preemption re-admission must drain the pool exactly
+and stay within the same budget; logit drift after a quantized prefill
+is bounded directly. Paged and dense int8 engines see identical
+quantization boundaries, so their outputs must match token-for-token.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.adapt import init_adapters
+from repro.models import get_model
+from repro.serve import AdapterStore, ServeEngine
+
+NO_EOS = 1 << 20  # never sampled: runs always emit exactly max_new
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("qwen2-1.5b")).replace(dtype="float32")
+    m = get_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def store(model):
+    _, params = model
+    st = AdapterStore()
+    for seed in (1, 2):
+        idx, val = init_adapters(params, 2, rng=jax.random.PRNGKey(seed))
+        val = jax.tree.map(
+            lambda i, v: None if v is None else 0.05 * jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(seed), v.size),
+                v.shape,
+            ),
+            idx, val, is_leaf=lambda x: x is None,
+        )
+        st.register(idx, val)
+    return st
+
+
+def _run(model, kv_dtype, *, paged=True, st=None, base="fp32",
+         draft="off", spec_k=2):
+    m, params = model
+    eng = ServeEngine(
+        m, params, slots=2, max_len=64, eos_id=NO_EOS, adapter_store=st,
+        base_dtype=base, decode_chunk=4, paged=paged, page_size=16,
+        draft=draft, spec_k=spec_k, kv_dtype=kv_dtype,
+    )
+    n_ad = st.num_adapters if st is not None else 0
+    for i, mn in enumerate((6, 8, 6, 8, 6)):
+        eng.submit([1, 5 + i, 9, 2], max_new=mn,
+                   adapter_id=(1 + i % n_ad) if n_ad else 0)
+    reqs = sorted(eng.run_to_completion(), key=lambda r: r.rid)
+    return [r.out for r in reqs], eng
+
+
+# ------------------------------------------------------------- drift grid
+
+GRID = {
+    "paged_plain": dict(),
+    "dense_plain": dict(paged=False),
+    "paged_mt": dict(st=True),
+    "paged_int8base": dict(base="int8"),
+    "paged_spec_int8": dict(draft="int8", spec_k=2),
+    "dense_ngram": dict(paged=False, draft="ngram", spec_k=2),
+}
+
+
+@pytest.mark.parametrize("name", GRID)
+def test_int8_tracks_fp32_within_budget(model, store, name):
+    """fp32 vs int8 cache, same engine mode: every request answered at
+    full length, most requests token-identical over these short
+    horizons, and any divergence starts late (the drift budget DESIGN
+    §15 documents, not a wrong-page / stale-scale class of bug, which
+    would trash outputs from the first token)."""
+    kw = dict(GRID[name])
+    st = store if kw.pop("st", False) else None
+    out_fp, _ = _run(model, "fp32", st=st, **kw)
+    out_q, eng = _run(model, "int8", st=st, **kw)
+    assert eng.kv_dtype == "int8"
+    assert [len(o) for o in out_q] == [len(o) for o in out_fp]
+    exact = sum(a == b for a, b in zip(out_fp, out_q))
+    first_div = [
+        next((i for i, (x, y) in enumerate(zip(a, b)) if x != y), len(a))
+        for a, b in zip(out_fp, out_q)
+    ]
+    assert exact >= 3, (name, exact, out_fp, out_q)
+    assert min(first_div) >= 2, (name, first_div, out_fp, out_q)
+
+
+def test_paged_and_dense_int8_identical(model):
+    """Both layouts quantize on the same 16-row boundaries (page size ==
+    KV_QUANT_GROUP here), so the codes — and therefore the greedy
+    outputs — must agree token-for-token, not just within tolerance."""
+    out_paged, _ = _run(model, "int8", paged=True)
+    out_dense, _ = _run(model, "int8", paged=False)
+    assert out_paged == out_dense
+
+
+# ---------------------------------------------------------- logit drift
+
+
+def test_prefill_logit_drift_bounded(model):
+    """One quantized prefill chunk vs the fp32 cache: the final-position
+    logits drift by a small fraction of the logit scale, pinned as an
+    absolute bound calibrated on this reduced config."""
+    m, params = model
+    prompt = [1, 5, 9, 2, 7, 3]
+    b, c = 1, len(prompt)
+    batch = {
+        "tokens": jnp.asarray([prompt], jnp.int32),
+        "q_offset": jnp.zeros((b,), jnp.int32),
+        "q_len": jnp.full((b,), c, jnp.int32),
+        "last_idx": jnp.full((b,), c - 1, jnp.int32),
+    }
+    lg_fp, _ = m.prefill_chunk(params, None, m.init_cache(b, 64), batch)
+    lg_q, _ = m.prefill_chunk(
+        params, None, m.init_cache(b, 64, kv_dtype="int8"), batch
+    )
+    scale = float(jnp.max(jnp.abs(lg_fp)))
+    drift = float(jnp.max(jnp.abs(lg_fp - lg_q)))
+    assert drift < 0.05 * scale, (drift, scale)
+
+
+# ----------------------------------------------------------- preemption
+
+
+def test_int8_preemption_drains_pool_and_stays_in_budget(model):
+    """Contended int8 pool: preempted requests re-prefill against
+    re-quantized pages. Pool accounting must stay exact (every block
+    returned), and outputs must stay within the drift budget of the
+    uncontended single-slot runs — re-prefill replays decode-phase
+    tokens through chunked writes, so bit-exactness is only guaranteed
+    when write boundaries match (DESIGN §15), but agreement must stay
+    high."""
+    m, params = model
+    prompts = [[1, 5, 9, 2], [1, 6, 9, 2], [1, 7, 9, 2]]
+
+    def solo(p):
+        eng = ServeEngine(m, params, slots=1, max_len=64, eos_id=NO_EOS,
+                          decode_chunk=4, paged=True, page_size=4,
+                          kv_dtype="int8")
+        eng.submit(p, max_new=20)
+        return eng.run_to_completion()[0].out
+
+    want = [solo(p) for p in prompts]
+    eng = ServeEngine(m, params, slots=3, max_len=64, eos_id=NO_EOS,
+                      decode_chunk=4, paged=True, page_size=4,
+                      num_blocks=16, kv_dtype="int8")
+    for p in prompts:
+        eng.submit(p, max_new=20)
+    reqs = sorted(eng.run_to_completion(), key=lambda r: r.rid)
+    got = [r.out for r in reqs]
+    assert eng.preemptions >= 1, "contention never triggered preemption"
+    assert eng.kv.free_blocks == eng.kv.num_blocks, "pool leaked blocks"
+    assert (eng.kv.refcount == 0).all()
+    assert [len(g) for g in got] == [len(w) for w in want]
+    agree = [
+        sum(x == y for x, y in zip(a, b)) / len(a)
+        for a, b in zip(want, got)
+    ]
+    assert min(agree) >= 0.5, (agree, want, got)
+
+
+def test_int8_mid_prefill_preemption_exact(model):
+    """A request preempted before its first decode step re-prefills its
+    prompt through the same chunk boundaries it used the first time —
+    quantize-on-write is deterministic (rebuild from dequantized pages +
+    recomputed absmax), so the outcome is token-identical to the
+    uncontended run, no tolerance needed.
+
+    Scenario calibration (page_size=4, num_blocks=16, prefill_chunk=8,
+    decode_chunk=4): admission reserves prompt + one decode horizon, so
+    two 4-token decoders take 2 pages each and the 44-token prompt takes
+    the remaining 12 — the pool is exactly full. A decoder needs its 3rd
+    page on mixed step 4, mid-way through the long prompt's 6-chunk
+    walk, preempting the youngest (the long request) mid-prefill."""
+    m, params = model
+    long_prompt = list(range(1, 45))  # 44 tokens = 6 chunks of 8
+
+    def run(contended):
+        slots = 3 if contended else 1
+        eng = ServeEngine(m, params, slots=slots, max_len=64,
+                          eos_id=NO_EOS, decode_chunk=4, prefill_chunk=8,
+                          paged=True, page_size=4, num_blocks=16,
+                          kv_dtype="int8")
+        if contended:
+            eng.submit([2, 3, 4, 5], max_new=12)
+            eng.submit([6, 7, 8, 9], max_new=12)
+        eng.submit(long_prompt, max_new=6)
+        reqs = sorted(eng.run_to_completion(), key=lambda r: r.rid)
+        return [r.out for r in reqs], eng
+
+    want, _ = run(False)
+    got, eng = run(True)
+    assert eng.preemptions_mid_prefill >= 1, "preemption missed prefill"
+    assert eng.kv.free_blocks == eng.kv.num_blocks
+    assert (eng.kv.refcount == 0).all()
+    assert got[-1] == want[0], (got[-1], want[0])

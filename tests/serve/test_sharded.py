@@ -164,7 +164,9 @@ _INVARIANTS = _PRELUDE + textwrap.dedent(
         "pool_shard_tp2": eng2.kv.pool_bytes_per_shard(),
         "pool_total_tp1": eng1.kv.pool_bytes(),
         "g_tp": eng2.metrics.value("serve_tp_size"),
-        "g_shard_bytes": eng2.metrics.value("serve_pool_bytes_per_shard"),
+        "g_shard_bytes": eng2.metrics.value(
+            "serve_pool_bytes_per_shard", "fp32"
+        ),
     }
     print("RESULT:" + json.dumps(out))
     """
