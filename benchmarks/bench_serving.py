@@ -47,6 +47,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import random
 import subprocess
 import sys
 import textwrap
@@ -58,7 +59,7 @@ import numpy as np
 from benchmarks.common import bench_model
 from repro.core.adapt import init_adapters, merge_adapters
 from repro.obs import Tracer, percentile
-from repro.serve import AdapterStore, ServeEngine
+from repro.serve import AdapterStore, QueueFullError, ServeEngine
 
 MAX_LEN = 128
 JSON_PATH = pathlib.Path("BENCH_serving.json")
@@ -321,6 +322,7 @@ def run(*, steps: int = 24) -> list[str]:
     capacity = _capacity_demo(m, params, out)
     quant_kv = _quant_kv_section(out, steps=steps)
     observability = _obs_overhead(m, params, out)
+    lifecycle = _lifecycle_section(m, params, out)
     sharded = _sharded_section(out)
 
     JSON_PATH.write_text(json.dumps(
@@ -329,7 +331,8 @@ def run(*, steps: int = 24) -> list[str]:
          "paged_vs_dense": paged_ratios, "speculative": spec_records,
          "mixed_workload": mixed, "capacity": capacity,
          "quant_kv": quant_kv,
-         "observability": observability, "sharded": sharded},
+         "observability": observability, "lifecycle": lifecycle,
+         "sharded": sharded},
         indent=2,
     ))
     out.append(f"serve.json_written,0,{JSON_PATH}")
@@ -769,6 +772,112 @@ _SHARDED_SCRIPT = textwrap.dedent(
     print("RESULT:" + json.dumps(res))
     """
 )
+
+
+def _lifecycle_section(m, params, out):
+    """Request-lifecycle robustness columns (DESIGN §16): what the
+    production front end's admission machinery costs and delivers.
+
+    Open-loop Poisson arrivals (seeded ``random.Random`` in *step* time —
+    each engine step advances virtual time by one unit, so arrivals never
+    wait on service and the offered trace replays exactly) are pushed at
+    a bounded-queue engine slightly past its service rate. Half the
+    offered requests carry a tight deadline calibrated from a measured
+    solo run, half a generous one. Recorded:
+
+    * **shed rate** — fraction of offered load refused at the door
+      (bounded queue 503s plus deadline-unreachable refusals, keyed by
+      which), the backpressure story in one number;
+    * **goodput under deadline** — of everything offered, the fraction
+      that reached a natural terminal state (``max_new``) vs evicted at
+      a boundary sweep (``deadline``): admitting work that cannot finish
+      is the failure mode this column watches;
+    * **cancel-reclaim latency** — host wall time for ``cancel(rid)`` on
+      a mid-decode request, which synchronously frees the slot and its
+      pages (p50/p95 over every victim; the pool audit asserts the
+      blocks actually came back).
+    """
+    eng = ServeEngine(m, params, slots=4, max_len=MAX_LEN, eos_id=1 << 20,
+                      decode_chunk=4, paged=True, queue_limit=6,
+                      metrics=True)
+    # warm: compile both megasteps, then calibrate a solo service time on
+    # a second (warm) run so compile time never inflates the deadlines
+    eng.submit([1, 5, 9], max_new=16)
+    eng.run_to_completion()
+    eng.submit([1, 5, 9], max_new=16)
+    t0 = time.perf_counter()
+    eng.run_to_completion()
+    t_solo = time.perf_counter() - t0
+    # tight finishes solo but not behind a queue; loose always finishes
+    tight, loose = 2.0 * t_solo, 30.0 * t_solo
+
+    rng = random.Random(0)
+    # service rate is ~1 req/step (4 slots × 16 new @ chunk 4): offer
+    # 1.6× that so the bounded queue genuinely fills and sheds
+    n_offered, rate = 48, 1.6
+    t, arrivals = 0.0, []
+    for _ in range(n_offered):
+        t += rng.expovariate(rate)
+        arrivals.append(t)
+    reqs, shed = [], {"queue_full": 0, "deadline_unreachable": 0}
+    step_i, next_arr = 0, 0
+    while next_arr < n_offered or eng.scheduler.in_flight():
+        while next_arr < n_offered and arrivals[next_arr] <= step_i:
+            timeout = tight if rng.random() < 0.5 else loose
+            try:
+                rid = eng.submit([1, 2 + next_arr % 7, 9], max_new=16,
+                                 timeout=timeout)
+                reqs.append(eng.scheduler.get(rid))
+            except QueueFullError as e:
+                key = ("deadline_unreachable" if e.reason else "queue_full")
+                shed[key] += 1
+            next_arr += 1
+        eng.step()
+        step_i += 1
+    reasons = {}
+    for r in reqs:
+        assert r.done and r.reason is not None
+        reasons[r.reason] = reasons.get(r.reason, 0) + 1
+    n_shed = sum(shed.values())
+    assert len(reqs) + n_shed == n_offered
+    assert eng.kv.drained(), "lifecycle bench leaked pool blocks"
+    shed_rate = n_shed / n_offered
+    goodput = reasons.get("max_new", 0) / n_offered
+    out.append(
+        f"serve.lifecycle.open_loop,0,offered={n_offered}"
+        f"_shed={n_shed}_rate={shed_rate:.2f}_goodput={goodput:.2f}"
+    )
+
+    # cancel-reclaim latency: victims cancelled mid-decode, one at a time
+    lat_us = []
+    for i in range(4):
+        eng.submit([1, 3 + i, 9, 5], max_new=48)
+    eng.step()
+    while eng.scheduler.has_prefilling():
+        eng.step()
+    eng.step()  # into decode
+    for req in [r for r in eng.scheduler.in_flight()]:
+        free0 = eng.kv.free_blocks
+        t0 = time.perf_counter()
+        assert eng.cancel(req.rid)
+        lat_us.append((time.perf_counter() - t0) * 1e6)
+        assert eng.kv.free_blocks > free0
+    eng.run_to_completion()
+    assert eng.kv.drained()
+    p50 = percentile(lat_us, 0.5)
+    p95 = percentile(lat_us, 0.95)
+    out.append(f"serve.lifecycle.cancel_reclaim,{p50:.0f},p95={p95:.0f}us")
+    return {
+        "offered": n_offered, "arrival_rate_per_step": rate,
+        "queue_limit": 6, "slots": 4, "steps": step_i,
+        "deadline_tight_s": round(tight, 4),
+        "deadline_loose_s": round(loose, 4),
+        "shed": shed, "shed_rate": round(shed_rate, 3),
+        "reasons": reasons, "goodput": round(goodput, 3),
+        "cancel_reclaim_us": {
+            "p50": round(p50, 1), "p95": round(p95, 1), "n": len(lat_us),
+        },
+    }
 
 
 def _sharded_section(out):

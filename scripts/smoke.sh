@@ -265,4 +265,110 @@ if python -m repro.launch.serve --kv-dtype int4 2>/dev/null; then
 fi
 echo "quantized-KV OK"
 
+echo "== async streaming server (--serve: SSE parity, cancel, graceful drain) =="
+# batch-mode reference outputs for the same two tenants' prompts, then
+# the real HTTP front end over the same adapters: stream both tenants
+# over SSE (token parity), cancel a third request mid-stream by its
+# X-Request-Id, check /metrics saw it, drain via POST /admin/shutdown —
+# the server process must exit 0 on its own
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --prompts "1,17,25;1,40,41,42" --max-new 8 \
+    | grep '^req' > "$tmpdir/server_ref.out"
+python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+    --adapters "$tmpdir/tenant1.npz,$tmpdir/tenant2.npz" \
+    --serve --port 0 --queue-limit 8 \
+    --metrics-out "$obsdir/server_metrics.prom" \
+    > "$tmpdir/server.out" 2>&1 &
+server_pid=$!
+for _ in $(seq 1 120); do
+    grep -q "serving on" "$tmpdir/server.out" && break
+    kill -0 "$server_pid" 2>/dev/null || break
+    sleep 1
+done
+grep -q "serving on" "$tmpdir/server.out"
+port=$(sed -n 's|.*serving on http://[^:]*:\([0-9]*\).*|\1|p' "$tmpdir/server.out")
+python - "$port" "$tmpdir/server_ref.out" <<'EOF'
+import ast
+import asyncio
+import json
+import sys
+
+PORT = int(sys.argv[1])
+REF = [ast.literal_eval(l.split(" -> ", 1)[1]) for l in open(sys.argv[2])]
+
+
+async def req(method, path, body=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", PORT)
+    data = json.dumps(body).encode() if body is not None else b""
+    writer.write(f"{method} {path} HTTP/1.1\r\nHost: s\r\n"
+                 f"Content-Length: {len(data)}\r\n\r\n".encode() + data)
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    headers = {}
+    while (line := await reader.readline()) not in (b"\r\n", b"\n", b""):
+        k, _, v = line.decode().partition(":")
+        headers[k.strip().lower()] = v.strip()
+    return status, headers, reader, writer
+
+
+async def sse(reader):
+    toks, reason = [], None
+    while line := await asyncio.wait_for(reader.readline(), timeout=120):
+        line = line.strip()
+        if not line.startswith(b"data: "):
+            continue
+        ev = json.loads(line[len(b"data: "):])
+        if "token" in ev:
+            toks.append(ev["token"])
+        if ev.get("done"):
+            reason = ev["reason"]
+            break
+    return toks, reason
+
+
+async def main():
+    # two concurrent SSE streams, one per tenant: token parity with the
+    # batch-mode run (which assigned these prompts tenants 1 and 2)
+    conns = [await req("POST", "/v1/generate",
+                       {"prompt": p, "max_new": 8, "adapter_id": aid})
+             for p, aid in [([1, 17, 25], 1), ([1, 40, 41, 42], 2)]]
+    assert all(c[0] == 200 for c in conns)
+    got = await asyncio.gather(*(sse(c[2]) for c in conns))
+    for c in conns:
+        c[3].close()
+    assert [g[0] for g in got] == REF, (got, REF)
+    assert all(g[1] == "max_new" for g in got)
+
+    # cancel mid-stream by the X-Request-Id handle
+    st, h, rdr, w = await req("POST", "/v1/generate",
+                              {"prompt": [1, 7, 25], "max_new": 64})
+    assert st == 200
+    rid = int(h["x-request-id"])
+    st, _, r2, w2 = await req("POST", "/v1/cancel", {"rid": rid})
+    assert st == 200
+    w2.close()
+    toks, reason = await sse(rdr)
+    w.close()
+    assert reason == "cancelled" and len(toks) < 64, (reason, len(toks))
+
+    # live metrics reflect the traffic; graceful drain
+    st, h, rdr, w = await req("GET", "/metrics")
+    text = await rdr.readexactly(int(h["content-length"]))
+    w.close()
+    assert st == 200 and b"serve_requests_cancelled_total" in text
+    st, _, _, w = await req("POST", "/admin/shutdown")
+    assert st == 200
+    w.close()
+    print(f"server client OK: parity on {len(REF)} streams, "
+          f"cancelled rid{rid} after {len(toks)} tokens")
+
+
+asyncio.run(main())
+EOF
+wait "$server_pid"
+grep -q "server drained" "$tmpdir/server.out"
+grep -q "serve_requests_cancelled_total" "$obsdir/server_metrics.prom"
+echo "async streaming server OK"
+
 echo "== smoke OK =="

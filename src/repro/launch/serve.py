@@ -85,8 +85,29 @@ def validate_args(args) -> None:
         raise SystemExit(
             f"--metrics-every must be >= 0, got {args.metrics_every}"
         )
-    has_prompts = any(p for p in args.prompts.split(";") if p)
-    if not has_prompts:
+    serve_mode = getattr(args, "serve", False)
+    port = getattr(args, "port", None)
+    if port is not None:
+        if not serve_mode:
+            raise SystemExit("--port needs --serve")
+        if not 0 <= port <= 65535:
+            raise SystemExit(f"--port must be in [0, 65535], got {port}")
+    queue_limit = getattr(args, "queue_limit", None)
+    if queue_limit is not None and queue_limit < 1:
+        raise SystemExit(f"--queue-limit must be >= 1, got {queue_limit}")
+    from repro.serve import POLICIES
+
+    fairness = getattr(args, "fairness", "fifo")
+    if fairness not in POLICIES:
+        raise SystemExit(
+            f"--fairness {fairness!r} must be one of {', '.join(POLICIES)}"
+        )
+    prompt_fields = [p for p in args.prompts.split(";") if p]
+    for p in prompt_fields:
+        if not any(t.strip() for t in p.split(",")):
+            raise SystemExit(f"--prompts entry {p!r} holds no token ids")
+    has_prompts = bool(prompt_fields)
+    if not has_prompts and not serve_mode:
         for flag, val in (
             ("--metrics-out", args.metrics_out),
             ("--trace-out", args.trace_out),
@@ -240,6 +261,23 @@ def main(argv=None):
     ap.add_argument("--profile-dir", default="",
                     help="capture a jax.profiler device trace of the run "
                          "into this directory (TensorBoard/XProf)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the async streaming front end (DESIGN §16) "
+                         "instead of a batch run: SSE token streaming on "
+                         "POST /v1/generate, cancellation, /metrics, "
+                         "graceful drain on POST /admin/shutdown. "
+                         "--prompts is ignored; requests come over HTTP")
+    ap.add_argument("--port", type=int, default=None,
+                    help="front-end TCP port (needs --serve; 0 = ephemeral, "
+                         "default 8000)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the admission backlog: submits beyond this "
+                         "depth are shed (HTTP 503 + Retry-After under "
+                         "--serve, QueueFullError from the API)")
+    ap.add_argument("--fairness", default="fifo",
+                    help="admission policy: fifo = global arrival order, "
+                         "drr = per-tenant deficit round robin (a hot "
+                         "tenant cannot starve the others)")
     args = ap.parse_args(argv)
     validate_args(args)
 
@@ -308,7 +346,11 @@ def main(argv=None):
         kv_dtype=args.kv_dtype,
         draft=args.draft, spec_k=args.spec_k,
         tracer=tracer, mesh=mesh,
+        queue_limit=args.queue_limit, fairness=args.fairness,
     )
+    if args.serve:
+        _serve_http(engine, args, tracer)
+        return
     prompts = [p for p in args.prompts.split(";") if p]
     n_tenants = store.num_adapters if store is not None else 0
     if args.adapter_ids:
@@ -344,6 +386,12 @@ def main(argv=None):
               f"drafted={engine.spec_drafted} "
               f"accepted={engine.spec_accepted} ({rate:.0%}) "
               f"emitted={engine.spec_emitted}")
+    _dump_obs(engine, tracer, args)
+
+
+def _dump_obs(engine, tracer, args) -> None:
+    """Flush --metrics-out / --trace-out (after the drain in serve mode,
+    so the dumps cover every request the server handled)."""
     if args.metrics_out:
         if args.metrics_out.endswith(".json"):
             text = engine.metrics.dump_json()
@@ -355,6 +403,36 @@ def main(argv=None):
     if args.trace_out:
         tracer.write(args.trace_out)
         print(f"trace written to {args.trace_out} ({len(tracer)} events)")
+
+
+def _serve_http(engine, args, tracer) -> None:
+    """--serve: run the async streaming front end until a graceful
+    shutdown (POST /admin/shutdown or Ctrl-C) drains the engine."""
+    import asyncio
+
+    from repro.serve import ServeFrontend
+
+    front = ServeFrontend(
+        engine, port=8000 if args.port is None else args.port
+    )
+
+    async def run():
+        port = await front.start()
+        print(f"serving on http://{front.host}:{port} "
+              f"(POST /v1/generate streams SSE; POST /admin/shutdown drains)",
+              flush=True)
+        try:
+            await front.serve()
+        except KeyboardInterrupt:
+            await front.shutdown()
+            await front.serve()
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+    print("server drained")
+    _dump_obs(engine, tracer, args)
 
 
 if __name__ == "__main__":

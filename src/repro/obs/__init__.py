@@ -6,7 +6,12 @@ metrics — dependency-free registry of counters / gauges / fixed-bucket
 trace   — request-lifecycle tracer (submit → queued → admitted →
           prefill_chunk(s) → first_token → decode/spec rounds →
           preempt/re-prefill → finish) exporting Chrome trace-event
-          JSON (Perfetto-loadable) and JSONL.
+          JSON (Perfetto-loadable) and JSONL;
+clock   — the ONE monotonic source every lifecycle timestamp routes
+          through (``obs.now``): Request stamps, TTFT/ITL observation,
+          deadline arithmetic, rate-limit refills and trace timestamps
+          all read the same clock, so histograms and spans agree
+          exactly (DESIGN §16).
 
 Everything is host-side python over state the engine already fetched:
 instrumentation adds zero device→host transfers (the transfer-counting
@@ -14,6 +19,7 @@ tests run with metrics AND tracing enabled) and zero recompiles (the
 compile-count regression test pins it).
 """
 
+from repro.obs.clock import now
 from repro.obs.metrics import (
     LATENCY_BUCKETS,
     Counter,
@@ -33,5 +39,6 @@ __all__ = [
     "MetricsRegistry",
     "NullRegistry",
     "Tracer",
+    "now",
     "percentile",
 ]

@@ -14,8 +14,12 @@ state the engine already holds — recording is an append of one small
 dict, no jax, no device traffic.
 
 Timestamps come from an injectable ``clock`` (seconds; default
-``time.perf_counter``) and are stored in microseconds relative to
-tracer construction, which is exactly the Chrome trace-event convention:
+``repro.obs.clock.now`` — the SAME monotonic source the scheduler
+stamps ``Request.t_submit``/``t_last`` with and the engine feeds its
+TTFT/ITL histograms and deadline arithmetic from, DESIGN §16, so trace
+spans and latency metrics are exactly comparable) and are stored in
+microseconds relative to tracer construction, which is exactly the
+Chrome trace-event convention:
 :meth:`to_chrome` emits a Perfetto-loadable ``{"traceEvents": [...]}``
 document (``ph: "X"`` complete events for spans, ``ph: "i"`` instants,
 one ``tid`` per request plus a ``thread_name`` metadata event), and
@@ -25,14 +29,15 @@ one ``tid`` per request plus a ``thread_name`` metadata event), and
 from __future__ import annotations
 
 import json
-import time
+
+import repro.obs.clock as _clock
 
 __all__ = ["Tracer"]
 
 
 class Tracer:
     def __init__(self, clock=None):
-        self.clock = clock if clock is not None else time.perf_counter
+        self.clock = clock if clock is not None else _clock.now
         self._t0 = self.clock()
         self.events: list[dict] = []
 

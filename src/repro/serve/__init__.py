@@ -18,7 +18,13 @@ sampler   — greedy/temperature/top-k/top-p fused into the jitted calls;
 adapters  — tenant registry of unmerged NeuroAda deltas (stacked once,
             cached until register/remove);
 draft     — drafter construction for speculative decoding (DESIGN §12):
-            quantized self-draft or the merged mean-of-tenants model.
+            quantized self-draft or the merged mean-of-tenants model;
+frontend  — async streaming front end (DESIGN §16): stdlib asyncio HTTP
+            server with SSE per-token streaming, the engine on a
+            background thread, submits/cancels landing at step
+            boundaries through a command queue;
+chaos     — seeded fault injection (cancels, deadline storms, pool
+            pressure, slow clients) at the same step boundaries.
 
 Observability (DESIGN §13) plugs in via ``ServeEngine(metrics=...,
 tracer=...)``: a ``repro.obs`` metrics registry (TTFT/ITL histograms,
@@ -28,21 +34,34 @@ instrumentation on.
 """
 
 from repro.serve.adapters import AdapterStore
+from repro.serve.chaos import ChaosMonkey
 from repro.serve.draft import DRAFT_MODES, build_draft_params
 from repro.serve.engine import ServeEngine
+from repro.serve.frontend import ServeFrontend
 from repro.serve.kv_cache import DraftKVCache, KVCache, PagedKVCache
 from repro.serve.sampler import Sampler
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import (
+    POLICIES,
+    QueueFullError,
+    RateLimitedError,
+    Request,
+    Scheduler,
+)
 
 __all__ = [
     "AdapterStore",
+    "ChaosMonkey",
     "DRAFT_MODES",
     "DraftKVCache",
     "KVCache",
     "PagedKVCache",
+    "POLICIES",
+    "QueueFullError",
+    "RateLimitedError",
     "build_draft_params",
     "Request",
     "Sampler",
     "Scheduler",
     "ServeEngine",
+    "ServeFrontend",
 ]

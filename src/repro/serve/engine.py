@@ -81,20 +81,30 @@ default) skips lifecycle tracing entirely.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs.clock as _clock
 from repro.core.delta import BatchedDelta
 from repro.obs import MetricsRegistry, NullRegistry, Tracer
 from repro.serve.adapters import AdapterStore
 from repro.serve.kv_cache import KV_DTYPES, DraftKVCache, KVCache, PagedKVCache
 from repro.serve.sampler import Sampler
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import (
+    POLICIES,
+    QueueFullError,
+    RateLimitedError,
+    Request,
+    Scheduler,
+)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "QueueFullError",
+    "RateLimitedError",
+    "Request",
+    "ServeEngine",
+]
 
 
 class ServeEngine:
@@ -124,6 +134,11 @@ class ServeEngine:
         metrics: "MetricsRegistry | bool | None" = None,
         tracer: Tracer | None = None,
         mesh=None,
+        queue_limit: int | None = None,
+        fairness: str = "fifo",
+        quantum: int = 256,
+        chaos=None,
+        clock=None,
     ):
         if model.cfg.family not in ("dense", "moe", "vlm"):
             # engine currently drives KV-cache LMs; SSM/hybrid/encdec decode
@@ -232,7 +247,32 @@ class ServeEngine:
         self.tracer = tracer
         self._queued_ts: dict[int, float] = {}  # rid -> tracer enqueue ts
 
-        self.scheduler = Scheduler(slots)
+        # ---- request lifecycle (DESIGN §16) ------------------------------
+        # ONE monotonic clock for every lifecycle timestamp: Request
+        # stamps, TTFT/ITL observation, deadline arithmetic and trace
+        # events. Default order: an explicit clock= wins, else the
+        # tracer's (so spans and histograms literally share a source),
+        # else the process-wide repro.obs.clock.
+        if clock is not None:
+            self.clock = clock
+        elif tracer is not None:
+            self.clock = tracer.clock
+        else:
+            self.clock = _clock.now
+        if fairness not in POLICIES:
+            raise ValueError(f"fairness {fairness!r} not in {POLICIES}")
+        self.chaos = chaos
+        self.draining = False  # graceful shutdown: intake closed
+        # seconds-per-step EMA (None until measured): the deadline-aware
+        # admission gate's service-time estimate — a queued request that
+        # cannot even reach its first token before its deadline is shed
+        # instead of admitted (see _expire_deadlines).
+        self.step_seconds_ema: float | None = None
+
+        self.scheduler = Scheduler(
+            slots, policy=fairness, queue_limit=queue_limit,
+            quantum=quantum, clock=self.clock,
+        )
         if paged:
             max_pages = -(-max_len // page_size)
             if num_blocks is None:
@@ -859,6 +899,33 @@ class ServeEngine:
             "Completed requests by termination reason.",
             labels=("tenant", "reason"),
         )
+        shed = reg.counter(
+            "serve_requests_shed_total",
+            "Requests refused at intake or admission (never a slot): "
+            "bounded-queue overflow, tenant rate limit, or a deadline "
+            "that cannot be met.",
+            labels=("reason",),
+        )
+        self._c_shed = {
+            k: shed.labels(k) for k in ("queue_full", "rate_limit", "deadline")
+        }
+        cancelled = reg.counter(
+            "serve_requests_cancelled_total",
+            "cancel() calls that found a live request (mid-queue, "
+            "mid-prefill or mid-decode).",
+            labels=("phase",),
+        )
+        self._c_cancelled = {
+            k: cancelled.labels(k) for k in ("queued", "prefill", "decode")
+        }
+        expired = reg.counter(
+            "serve_deadline_expired_total",
+            "Requests evicted by the boundary deadline sweep.",
+            labels=("phase",),
+        )
+        self._c_expired = {
+            k: expired.labels(k) for k in ("queued", "prefill", "decode")
+        }
         pre = reg.counter(
             "serve_preemptions_total",
             "Block-pool OOM evictions back to the queue head.",
@@ -1012,22 +1079,39 @@ class ServeEngine:
         self._c_tenant_tokens.labels(str(req.adapter_id)).inc()
 
     def _finish(self, slot: int, req: Request) -> None:
-        """Complete a request: classify the termination reason the same
-        way the in-graph mask fired it (EOS | max_new | cache full, in
-        that order), count it, trace it, free the slot."""
+        """Complete a request that ran to its in-graph stop: classify the
+        termination reason the same way the compiled mask fired it
+        (EOS | max_new | cache full, in that order)."""
         if req.out and req.out[-1] == self.eos_id:
             reason = "eos"
         elif len(req.out) >= req.max_new:
             reason = "max_new"
         else:
             reason = "cache_full"
+        self._terminate(slot, req, reason)
+
+    def _terminate(self, slot: int | None, req: Request, reason: str) -> None:
+        """The ONE exit path every request takes (DESIGN §16 state
+        machine): stamp the terminal reason, count it, trace it, and
+        reclaim whatever the request held — its slot and cache pages when
+        admitted (``slot`` given: the same ``complete`` + ``evict`` pair
+        preemption uses, minus the re-queue), nothing when it dies in the
+        queue (``slot=None``)."""
+        req.reason = reason
+        req.done = True
         self._c_finished.labels(str(req.adapter_id), reason).inc()
         if self.tracer is not None:
+            now = self.tracer.now()
+            t_q = self._queued_ts.pop(req.rid, None)
+            if t_q is not None and slot is None:
+                # died queued: close the open queued span first
+                self.tracer.span(req.rid, "queued", t_q, now)
             self.tracer.instant(
-                req.rid, "finish", reason=reason, tokens=len(req.out)
+                req.rid, "finish", ts=now, reason=reason, tokens=len(req.out)
             )
-        self.scheduler.complete(slot)
-        self.kv.evict(slot)
+        if slot is not None:
+            self.scheduler.complete(slot)
+            self.kv.evict(slot)
 
     # ---------------------------------------- registry-backed telemetry
 
@@ -1070,7 +1154,22 @@ class ServeEngine:
         *,
         adapter_id: int = 0,
         temperature: float | None = None,
+        deadline: float | None = None,
+        timeout: float | None = None,
     ) -> int:
+        """Enqueue one request. ``timeout`` (seconds from now) is sugar
+        for an absolute ``deadline`` on the engine clock; a request whose
+        deadline passes — queued or admitted — is evicted at the next
+        step boundary with reason="deadline". Raises ValueError on a
+        malformed request, :class:`QueueFullError` /
+        :class:`RateLimitedError` on shed (both carry ``retry_after``),
+        RuntimeError once :meth:`drain` has closed intake."""
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new <= 0:
+            raise ValueError(f"max_new must be positive, got {max_new}")
+        if self.draining:
+            raise RuntimeError("engine is draining: intake closed")
         if len(prompt) > self.max_len - 1:
             raise ValueError(f"prompt length {len(prompt)} >= max_len {self.max_len}")
         n_reg = self.store.num_adapters if self.store is not None else 0
@@ -1078,11 +1177,38 @@ class ServeEngine:
             raise ValueError(
                 f"adapter_id {adapter_id} not registered (have {n_reg} + base)"
             )
+        if timeout is not None:
+            if timeout <= 0:
+                raise ValueError(f"timeout must be positive, got {timeout}")
+            deadline = self.clock() + timeout
+        if deadline is not None and self.step_seconds_ema is not None:
+            # deadline-aware admission: even if admitted IMMEDIATELY the
+            # request needs ~one compiled step to produce a token — if the
+            # deadline can't cover that, shed now instead of queue-then-
+            # evict (the client's retry budget is better spent elsewhere)
+            if deadline - self.clock() < self.step_seconds_ema:
+                self._c_shed["deadline"].inc()
+                raise QueueFullError(
+                    self.scheduler.queue_depth,
+                    self.scheduler.queue_limit,
+                    retry_after=0.0,
+                    reason="deadline unreachable: "
+                    f"{max(deadline - self.clock(), 0.0):.3f}s left, "
+                    f"steps take ~{self.step_seconds_ema:.3f}s",
+                )
         temp = self.temperature if temperature is None else temperature
-        rid = self.scheduler.submit(
-            prompt, max_new, adapter_id=adapter_id, temperature=temp,
-            store_rev=self.store.removals if self.store is not None else 0,
-        )
+        try:
+            rid = self.scheduler.submit(
+                prompt, max_new, adapter_id=adapter_id, temperature=temp,
+                store_rev=self.store.removals if self.store is not None else 0,
+                deadline=deadline,
+            )
+        except QueueFullError:
+            self._c_shed["queue_full"].inc()
+            raise
+        except RateLimitedError:
+            self._c_shed["rate_limit"].inc()
+            raise
         self._c_submitted.labels(str(adapter_id)).inc()
         self._g_queue.set(self.scheduler.queue_depth)
         if self.tracer is not None:
@@ -1093,6 +1219,66 @@ class ServeEngine:
             )
             self._queued_ts[rid] = ts
         return rid
+
+    def set_rate_limit(
+        self, adapter_id: int, rate: float, burst: float | None = None
+    ) -> None:
+        """Per-tenant token-bucket admission limit (pass-through to the
+        scheduler): sustained ``rate`` submits/sec with ``burst`` head-
+        room; violators get :class:`RateLimitedError` with retry_after."""
+        self.scheduler.set_rate_limit(adapter_id, rate, burst=burst)
+
+    # -------------------------------------------- cancellation & deadlines
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel one request wherever it is — mid-queue, mid-prefill or
+        mid-decode — reclaiming everything it holds (slot, cache pages,
+        refcounts) at host level, exactly like a preemption minus the
+        re-queue. Idempotent: False when the rid is unknown or already
+        terminal. Safe between steps only (the front end routes cancels
+        through the engine thread's command queue for exactly this
+        reason)."""
+        req = self.scheduler.get(rid)
+        if req is None or req.done:
+            return False
+        req.cancelled = True
+        slot = self.scheduler.slot_of(rid)
+        if slot is None:
+            phase = "queued"
+            self.scheduler.remove_queued(rid)
+        else:
+            phase = "prefill" if req.mid_prefill else "decode"
+        self._c_cancelled[phase].inc()
+        self._terminate(slot, req, "cancelled")
+        self._g_queue.set(self.scheduler.queue_depth)
+        return True
+
+    def _expire_deadlines(self) -> None:
+        """Boundary sweep: every in-flight request whose deadline has
+        passed — queued or admitted — is evicted with reason="deadline".
+        Runs before admission so an expired queued request never takes a
+        slot it would immediately give back."""
+        now = self.clock()
+        for req in self.scheduler.expired_queued(now):
+            self._c_expired["queued"].inc()
+            self._terminate(None, req, "deadline")
+        for slot, req in enumerate(self.scheduler.active):
+            if (
+                req is not None
+                and req.deadline is not None
+                and req.deadline <= now
+            ):
+                self._c_expired["prefill" if req.mid_prefill else "decode"].inc()
+                self._terminate(slot, req, "deadline")
+        self._g_queue.set(self.scheduler.queue_depth)
+
+    def drain(self) -> list[Request]:
+        """Graceful shutdown: close intake (further submits raise), run
+        the engine until every in-flight request reaches a terminal
+        state, return them. Metrics/trace dumps are the caller's to
+        flush — the engine only guarantees the pool is fully drained."""
+        self.draining = True
+        return self.run_to_completion()
 
     def _check_adapter_ids(self) -> None:
         """Requests freeze their adapter id at submit; a store.remove()
@@ -1179,11 +1365,22 @@ class ServeEngine:
         one device→host transfer.
         """
         self.rng, k_step = jax.random.split(self.rng)
+        if self.chaos is not None:
+            # faults land at the exact boundary real ones do: before the
+            # sweep (a stormed deadline expires THIS step) and before
+            # admission (stolen pool blocks refuse placements THIS step)
+            self.chaos.on_step(self)
+        self._expire_deadlines()
         self._check_adapter_ids()
         self._admit()
         if not self.scheduler.has_active():
+            if self.chaos is not None:
+                # this step's own injections may have just terminated the
+                # last request; hand any stolen pool blocks back before
+                # reporting idle (nobody will call step() again)
+                self.chaos.release(self)
             return False
-        t0 = time.perf_counter()
+        t0 = self.clock()
         if self.scheduler.has_prefilling():
             kind = "mixed"
             self._chunk_step(k_step)
@@ -1195,8 +1392,16 @@ class ServeEngine:
             self._decode_step(k_step)
         # step accounting is pure host arithmetic on the clocks and
         # free-lists the step already maintained — no device traffic
-        self._h_step[kind].observe(time.perf_counter() - t0)
+        dt = self.clock() - t0
+        self._h_step[kind].observe(dt)
         self._c_step[kind].inc()
+        # EMA of compiled-step wall time feeds deadline-aware admission:
+        # a request whose deadline cannot cover even one more step is
+        # refused instead of admitted-then-evicted (DESIGN §16)
+        self.step_seconds_ema = (
+            dt if self.step_seconds_ema is None
+            else 0.9 * self.step_seconds_ema + 0.1 * dt
+        )
         self._update_gauges()
         return True
 
@@ -1242,7 +1447,7 @@ class ServeEngine:
         toks = jax.device_get(toks_dev)
         self._c_transfers.inc()
         self.kv.sync(pos_dev, plan["q_offset"] + plan["q_len"])
-        now = time.perf_counter()
+        now = self.clock()
         tr1 = self.tracer.now() if self.tracer is not None else 0.0
         n_emit = 0
         for s, req in enumerate(self.scheduler.active):
@@ -1361,7 +1566,7 @@ class ServeEngine:
         # steps): emitted tokens + mask, final positions, survivor mask.
         pos_np, active_np, toks, emits = jax.device_get(out[1:])
         self._c_transfers.inc()
-        now = time.perf_counter()
+        now = self.clock()
         tr1 = self.tracer.now() if self.tracer is not None else 0.0
         self.kv.sync(pos_dev, pos_np)
         n_emit = 0
@@ -1437,7 +1642,7 @@ class ServeEngine:
         # round-entry live masks — one fetch of the bundle
         pos_np, active_np, toks, emits, accs, lives = jax.device_get(fetched)
         self._c_transfers.inc()
-        now = time.perf_counter()
+        now = self.clock()
         tr1 = self.tracer.now() if self.tracer is not None else 0.0
         self.kv.sync(pos_dev, pos_np)
         n_emit = 0

@@ -126,6 +126,12 @@ class KVCache:
     def full(self, slot: int) -> bool:
         return self.pos_host[slot] >= self.max_len - 1
 
+    def drained(self) -> bool:
+        """Dense twin of :meth:`PagedKVCache.drained`: a slot reservation
+        frees by zeroing its position mirror, so drained = all slots idle
+        (the lifecycle/chaos suites call this uniformly on both layouts)."""
+        return not self.pos_host.any()
+
 
 class DraftKVCache:
     """Drafter-side KV state for speculative decoding (DESIGN §12).
@@ -219,6 +225,10 @@ class PagedKVCache:
         # pool itself stays dependency-free.
         self.prefix_page_hits = 0
         self.prefix_page_fresh = 0
+        # chaos pool pressure (DESIGN §16): free blocks held hostage by
+        # steal_blocks — unallocatable but owned by nobody — so tests can
+        # force the preempt-on-OOM and admission-refusal paths on demand.
+        self._stolen: list[int] = []
 
     # ------------------------------------------------------------- queries
 
@@ -406,3 +416,45 @@ class PagedKVCache:
         self.alloc_count[slot] = 0
         self.pos_host[slot] = 0
         self._dirty()
+
+    # -------------------------------------------- chaos hooks (DESIGN §16)
+
+    @property
+    def stolen_blocks(self) -> int:
+        return len(self._stolen)
+
+    def steal_blocks(self, n: int) -> int:
+        """Chaos pool pressure: pull up to ``n`` blocks off the free list
+        and hold them hostage — unallocatable, owned by no slot — forcing
+        reserve() shortfalls and admission refusals exactly as a fuller
+        pool would. Returns how many were actually taken. The caller is
+        responsible for :meth:`restore_blocks` (the chaos harness holds
+        them a bounded number of steps); ``drained`` stays False while
+        any block is stolen so a leak cannot masquerade as pressure."""
+        take = min(max(n, 0), len(self._free))
+        for _ in range(take):
+            self._stolen.append(self._free.pop())
+        return take
+
+    def restore_blocks(self, n: int | None = None) -> int:
+        """Return stolen blocks (all of them by default) to the free list."""
+        back = len(self._stolen) if n is None else min(n, len(self._stolen))
+        for _ in range(back):
+            self._free.append(self._stolen.pop())
+        return back
+
+    def drained(self) -> bool:
+        """True iff every block is back on the free list with zero
+        refcount and every table entry is the sentinel — the invariant
+        cancellation / deadline eviction / graceful drain must restore
+        (DESIGN §16; the lifecycle and chaos suites assert it)."""
+        return (
+            not self._stolen
+            and len(self._free) == self.num_blocks
+            and not self.refcount.any()
+            and bool((self.table == self.num_blocks).all())
+            and bool((self.wtable == self.num_blocks).all())
+            and not self.alloc_count.any()
+            and not self._prefix
+            and not self._block_key
+        )

@@ -1,0 +1,284 @@
+"""Async streaming front end (DESIGN §16): HTTP/SSE over a live engine.
+
+The server under test is the real :class:`ServeFrontend` — engine on its
+background thread, hand-rolled HTTP/1.1, SSE streaming — driven by a raw
+``asyncio.open_connection`` client (stdlib only, like the server). One
+event loop per test via ``asyncio.run``; ``port=0`` binds ephemerally so
+tests never collide.
+
+Covered: streamed tokens match a direct engine run of the same prompt
+(byte-level parity through the whole submit→publish→SSE path),
+concurrent multi-tenant streams, mid-stream cancellation reclaiming the
+pool, intake shed → HTTP 503/429 with Retry-After, input validation →
+400, /metrics and /healthz, and graceful drain via /admin/shutdown.
+"""
+
+import asyncio
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import get_model
+from repro.serve import ServeEngine, ServeFrontend
+
+_NO_EOS = 1 << 20
+_CACHE = {}
+
+
+def _model():
+    if "m" not in _CACHE:
+        cfg = reduced(get_config("qwen2-1.5b")).replace(dtype="float32")
+        m = get_model(cfg)
+        _CACHE["m"] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+    return _CACHE["m"]
+
+
+def _engine(**kw):
+    cfg, m, params = _model()
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("eos_id", _NO_EOS)
+    kw.setdefault("decode_chunk", 2)
+    kw.setdefault("metrics", True)
+    return ServeEngine(m, params, **kw)
+
+
+# ------------------------------------------------------------ tiny client
+
+
+async def _open(port, method, path, body=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    data = json.dumps(body).encode() if body is not None else b""
+    writer.write(
+        f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+        f"Content-Length: {len(data)}\r\n\r\n".encode() + data
+    )
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    headers = {}
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = line.decode().partition(":")
+        headers[k.strip().lower()] = v.strip()
+    return status, headers, reader, writer
+
+
+async def _request(port, method, path, body=None):
+    """Non-streaming request: returns (status, headers, parsed body)."""
+    status, headers, reader, writer = await _open(port, method, path, body)
+    raw = await reader.readexactly(int(headers["content-length"]))
+    writer.close()
+    if headers.get("content-type", "").startswith("application/json"):
+        return status, headers, json.loads(raw)
+    return status, headers, raw
+
+
+async def _sse_events(reader, limit=10_000):
+    """Parse data: frames until the done event (inclusive)."""
+    events = []
+    for _ in range(limit):
+        line = await asyncio.wait_for(reader.readline(), timeout=60)
+        if not line:
+            break
+        line = line.strip()
+        if not line.startswith(b"data: "):
+            continue
+        ev = json.loads(line[len(b"data: "):])
+        events.append(ev)
+        if ev.get("done"):
+            break
+    return events
+
+
+# ---------------------------------------------------------------- scenario
+
+
+def test_frontend_stream_cancel_metrics_shutdown():
+    """The full lifecycle scenario over one warm engine: two concurrent
+    SSE streams (parity against a direct engine run), a third cancelled
+    mid-stream, shed + validation status codes, /metrics, then a
+    graceful drain that flushes everything and returns the pool full."""
+    eng = _engine(paged=True, queue_limit=8)
+    # direct-run references BEFORE the frontend owns the engine
+    p_a, p_b = [1, 5, 9], [1, 6, 9, 4]
+    ra = eng.submit(p_a, max_new=6)
+    rb = eng.submit(p_b, max_new=6)
+    ref = {r.rid: list(r.out) for r in eng.run_to_completion()}
+    expect_a, expect_b = ref[ra], ref[rb]
+
+    async def scenario():
+        front = ServeFrontend(eng, port=0)
+        port = await front.start()
+
+        async def gen(prompt, max_new, stream=True, **extra):
+            body = {"prompt": prompt, "max_new": max_new,
+                    "stream": stream, **extra}
+            return await _open(port, "POST", "/v1/generate", body)
+
+        # two concurrent SSE streams
+        sa, ha, rdr_a, wa = await gen(p_a, 6)
+        sb, hb, rdr_b, wb = await gen(p_b, 6)
+        assert sa == sb == 200
+        assert ha["content-type"].startswith("text/event-stream")
+        ev_a, ev_b = await asyncio.gather(
+            _sse_events(rdr_a), _sse_events(rdr_b)
+        )
+        wa.close(), wb.close()
+        assert [e["token"] for e in ev_a if "token" in e] == expect_a
+        assert [e["token"] for e in ev_b if "token" in e] == expect_b
+        assert ev_a[-1]["done"] and ev_a[-1]["reason"] == "max_new"
+
+        # cancel mid-stream: read one token, cancel, stream ends cancelled
+        sc, hc, rdr_c, wc = await gen([1, 7, 9], 40)
+        rid_c = int(hc["x-request-id"])  # cancel handle, pre-done
+        first = await _sse_events(rdr_c, limit=1)
+        assert "token" in first[0]
+        st, _, out = await _request(
+            port, "POST", "/v1/cancel", {"rid": rid_c}
+        )
+        assert st == 200 and out["cancelled"] is True
+        rest = await _sse_events(rdr_c)
+        wc.close()
+        assert rest[-1]["done"] and rest[-1]["reason"] == "cancelled"
+        assert rest[-1]["rid"] == rid_c
+
+        # non-streaming mode buffers the same lifecycle
+        st, _, out = await _request(
+            port, "POST", "/v1/generate",
+            {"prompt": p_a, "max_new": 6, "stream": False},
+        )
+        assert st == 200 and out["tokens"] == expect_a
+        assert out["reason"] == "max_new"
+
+        # validation: malformed requests are 400s, never engine crashes
+        st, _, out = await _request(
+            port, "POST", "/v1/generate", {"prompt": [], "max_new": 4}
+        )
+        assert st == 400 and "empty prompt" in out["error"]
+        st, _, out = await _request(
+            port, "POST", "/v1/generate", {"prompt": [1, 2], "max_new": 0}
+        )
+        assert st == 400 and "max_new" in out["error"]
+        st, _, out = await _request(
+            port, "POST", "/v1/generate", {"prompt": "not-a-list"}
+        )
+        assert st == 400
+        st, _, out = await _request(port, "POST", "/v1/cancel", {"rid": "x"})
+        assert st == 400
+        st, _, out = await _request(port, "GET", "/nope")
+        assert st == 404
+
+        # rate-limit shed: 429 + Retry-After on the flooded tenant
+        eng.scheduler.set_rate_limit(0, rate=0.001, burst=1.0)
+        st1, _, _ = await _request(
+            port, "POST", "/v1/generate",
+            {"prompt": p_a, "max_new": 2, "stream": False},
+        )
+        st2, h2, out2 = await _request(
+            port, "POST", "/v1/generate",
+            {"prompt": p_a, "max_new": 2, "stream": False},
+        )
+        assert st1 == 200 and st2 == 429
+        assert float(h2["retry-after"]) > 0
+        eng.scheduler.clear_rate_limit(0)
+
+        # health + metrics reflect the traffic so far
+        st, _, health = await _request(port, "GET", "/healthz")
+        assert st == 200 and health["ok"] and not health["draining"]
+        st, h, text = await _request(port, "GET", "/metrics")
+        assert st == 200
+        assert b"serve_requests_submitted_total" in text
+        assert (
+            b'serve_requests_finished_total{tenant="0", reason="cancelled"} 1'
+            in text
+        )
+
+        # graceful drain: one request in flight, shutdown, stream flushes
+        sd, _, rdr_d, wd = await gen([1, 8, 9], 6)
+        assert sd == 200
+        st, _, out = await _request(port, "POST", "/admin/shutdown")
+        assert st == 200 and out["draining"]
+        ev_d = await _sse_events(rdr_d)
+        wd.close()
+        assert ev_d[-1]["done"] and ev_d[-1]["reason"] == "max_new"
+        assert len([e for e in ev_d if "token" in e]) == 6
+        await front.serve()  # returns only after the drain completes
+
+    asyncio.run(scenario())
+    # post-shutdown: intake closed, pool fully reclaimed
+    assert eng.draining
+    assert eng.kv.drained()
+    with pytest.raises(RuntimeError, match="draining"):
+        eng.submit([1, 2], max_new=2)
+
+
+def test_frontend_queue_full_is_503_with_retry_after():
+    eng = _engine(paged=True, slots=1, queue_limit=1)
+
+    async def scenario():
+        front = ServeFrontend(eng, port=0)
+        port = await front.start()
+        streams = []
+        # slots=1 + queue_limit=1: two live requests saturate intake
+        # (the 200 response means the submit already ran on the engine
+        # thread — request 1 holds the slot, request 2 fills the queue)
+        for p in ([1, 5, 9], [1, 6, 9]):
+            streams.append(
+                await _open(port, "POST", "/v1/generate",
+                            {"prompt": p, "max_new": 30})
+            )
+            assert streams[-1][0] == 200
+        await _sse_events(streams[0][2], limit=1)  # engine really running
+        st, h, out = await _request(
+            port, "POST", "/v1/generate",
+            {"prompt": [1, 7, 9], "max_new": 4, "stream": False},
+        )
+        assert st == 503
+        assert float(h["retry-after"]) > 0
+        assert "queue full" in out["error"]
+        for _, _, rdr, w in streams:
+            await _sse_events(rdr)
+            w.close()
+        st, _, _ = await _request(port, "POST", "/admin/shutdown")
+        assert st == 200
+        await front.serve()
+
+    asyncio.run(scenario())
+    assert eng.kv.drained()
+
+
+def test_frontend_slow_client_backpressure():
+    """A consumer that drains slower than the engine generates backs up
+    its stream queue past the bound — the publisher then cancels the
+    request (reclaiming the slot) instead of buffering without limit.
+    The stall is injected with the chaos harness's seeded per-token
+    delay, so the SSE writer itself is the slow party."""
+    from repro.serve import ChaosMonkey
+
+    eng = _engine(paged=True, slots=1)
+    chaos = ChaosMonkey(seed=0, slow_client_prob=1.0, slow_client_delay=0.25)
+
+    async def scenario():
+        front = ServeFrontend(eng, port=0, stream_buffer=4, chaos=chaos)
+        port = await front.start()
+        st, _, rdr, w = await _open(
+            port, "POST", "/v1/generate", {"prompt": [1, 5, 9], "max_new": 60}
+        )
+        assert st == 200
+        ev = await _sse_events(rdr)
+        w.close()
+        assert ev[-1]["done"] and ev[-1]["reason"] == "cancelled"
+        assert len([e for e in ev if "token" in e]) < 60
+        assert chaos.injected["slow_client"] > 0
+        st, _, _ = await _request(port, "POST", "/admin/shutdown")
+        assert st == 200
+        await front.serve()
+
+    asyncio.run(scenario())
+    assert eng.kv.drained()
+    cancelled = eng.metrics.get("serve_requests_cancelled_total")
+    assert cancelled.total == 1

@@ -325,6 +325,23 @@ def test_launch_flag_validation():
         launch_serve.validate_args(_args(dense=True, num_blocks=64))
     with pytest.raises(SystemExit, match="max-new"):
         launch_serve.validate_args(_args(max_new=0))
+    # lifecycle flags (DESIGN §16)
+    with pytest.raises(SystemExit, match="no token ids"):
+        launch_serve.validate_args(_args(prompts="1,2;,,;3"))
+    with pytest.raises(SystemExit, match="queue-limit"):
+        launch_serve.validate_args(_args(queue_limit=0))
+    with pytest.raises(SystemExit, match="fairness"):
+        launch_serve.validate_args(_args(fairness="lifo"))
+    with pytest.raises(SystemExit, match="needs --serve"):
+        launch_serve.validate_args(_args(port=8000))
+    with pytest.raises(SystemExit, match="port"):
+        launch_serve.validate_args(_args(serve=True, port=70000))
+    launch_serve.validate_args(_args(serve=True, port=0))
+    launch_serve.validate_args(_args(fairness="drr", queue_limit=8))
+    # --serve takes requests over HTTP: obs flags don't need --prompts
+    launch_serve.validate_args(
+        _args(serve=True, prompts="", metrics_out="m.prom")
+    )
     # the CLI rejects before any model/compile work happens
     with pytest.raises(SystemExit, match="power of two"):
         launch_serve.main(["--arch", "qwen2-1.5b", "--reduced",
