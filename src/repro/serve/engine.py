@@ -81,6 +81,8 @@ default) skips lifecycle tracing entirely.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -105,6 +107,21 @@ __all__ = [
     "Request",
     "ServeEngine",
 ]
+
+
+def _finite_or_raise(name: str, value):
+    """None passes through; anything else must coerce to a finite float."""
+    if value is None:
+        return None
+    try:
+        value = float(value)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{name} must be a finite number, got {value!r}"
+        ) from None
+    if not math.isfinite(value):
+        raise ValueError(f"{name} must be a finite number, got {value!r}")
+    return value
 
 
 class ServeEngine:
@@ -266,8 +283,12 @@ class ServeEngine:
         # seconds-per-step EMA (None until measured): the deadline-aware
         # admission gate's service-time estimate — a queued request that
         # cannot even reach its first token before its deadline is shed
-        # instead of admitted (see _expire_deadlines).
+        # instead of admitted (see _expire_deadlines). The first step of
+        # each kind pays JIT compilation, so it never feeds the EMA —
+        # seeding with a multi-second compile would make the gate shed
+        # every deadline-bearing request until the estimate decays.
         self.step_seconds_ema: float | None = None
+        self._step_timed: set[str] = set()
 
         self.scheduler = Scheduler(
             slots, policy=fairness, queue_limit=queue_limit,
@@ -1177,6 +1198,13 @@ class ServeEngine:
             raise ValueError(
                 f"adapter_id {adapter_id} not registered (have {n_reg} + base)"
             )
+        # coerce/validate the numeric knobs HERE: temperature flows into a
+        # float32 slot array and deadline/timeout into clock arithmetic —
+        # a non-numeric value must be a 400-class ValueError at intake,
+        # never a crash inside step() (which would kill the whole server)
+        temperature = _finite_or_raise("temperature", temperature)
+        deadline = _finite_or_raise("deadline", deadline)
+        timeout = _finite_or_raise("timeout", timeout)
         if timeout is not None:
             if timeout <= 0:
                 raise ValueError(f"timeout must be positive, got {timeout}")
@@ -1397,11 +1425,15 @@ class ServeEngine:
         self._c_step[kind].inc()
         # EMA of compiled-step wall time feeds deadline-aware admission:
         # a request whose deadline cannot cover even one more step is
-        # refused instead of admitted-then-evicted (DESIGN §16)
-        self.step_seconds_ema = (
-            dt if self.step_seconds_ema is None
-            else 0.9 * self.step_seconds_ema + 0.1 * dt
-        )
+        # refused instead of admitted-then-evicted (DESIGN §16). The
+        # first observation per step kind is the JIT compile and is
+        # discarded; later recompile spikes (>10x the estimate) are too.
+        if kind not in self._step_timed:
+            self._step_timed.add(kind)
+        elif self.step_seconds_ema is None:
+            self.step_seconds_ema = dt
+        elif dt < 10.0 * self.step_seconds_ema:
+            self.step_seconds_ema = 0.9 * self.step_seconds_ema + 0.1 * dt
         self._update_gauges()
         return True
 

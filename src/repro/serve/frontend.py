@@ -99,6 +99,7 @@ class ServeFrontend:
         self._server: asyncio.AbstractServer | None = None
         self._thread: threading.Thread | None = None
         self._stopping = False  # engine-thread flag: drain then exit
+        self._stopped = False  # engine thread exited: _call fails fast
         self._drained: asyncio.Event | None = None
         self._fatal: BaseException | None = None
 
@@ -125,8 +126,30 @@ class ServeFrontend:
                 ):
                     break
         finally:
+            # fail-fast ordering: flip the flag FIRST, then drain the
+            # command queue with errors. _call re-checks the flag after
+            # enqueueing, so a command can never be stranded between the
+            # final drain and thread exit — it is either drained here or
+            # its submitter sees _stopped and fails it itself.
+            self._stopped = True
+            self._fail_pending()
             if self._loop is not None:
                 self._loop.call_soon_threadsafe(self._drained.set)
+
+    def _fail_pending(self) -> None:
+        """Resolve every queued command future with an error instead of
+        leaving its awaiter hanging forever (which on Python 3.12+ would
+        also deadlock ``aclose``'s ``wait_closed``). Thread-safe: callable
+        from the engine thread's exit path and from ``_call``."""
+        while True:
+            try:
+                _, fut = self._cmds.get_nowait()
+            except queue.Empty:
+                return
+            if fut is not None:
+                self._loop.call_soon_threadsafe(
+                    self._resolve, fut, None, RuntimeError("engine stopped")
+                )
 
     def _drain_commands(self, block: bool) -> None:
         """Run queued submit/cancel/shutdown closures at the step
@@ -154,7 +177,7 @@ class ServeFrontend:
 
     @staticmethod
     def _resolve(fut, result, exc) -> None:
-        if fut.cancelled():
+        if fut.done():  # cancelled, or already failed by _fail_pending
             return
         if exc is not None:
             fut.set_exception(exc)
@@ -198,9 +221,17 @@ class ServeFrontend:
     # ---------------------------------------------------- loop-side bridge
 
     async def _call(self, fn):
-        """Run ``fn`` on the engine thread at the next step boundary."""
+        """Run ``fn`` on the engine thread at the next step boundary.
+        Raises RuntimeError once the engine thread has exited — a late
+        command must fail fast, not await a future nobody will resolve."""
+        if self._stopped:
+            raise RuntimeError("engine stopped")
         fut = self._loop.create_future()
         self._cmds.put((fn, fut))
+        if self._stopped:
+            # raced the engine thread's exit: it may have drained before
+            # our put landed, so drain (and fail) the residue ourselves
+            self._fail_pending()
         return await fut
 
     async def _submit(self, payload: dict) -> _Stream:
@@ -289,10 +320,21 @@ class ServeFrontend:
                 k, _, v = h.decode("latin1").partition(":")
                 headers[k.strip().lower()] = v.strip()
             body = b""
-            n = int(headers.get("content-length", "0") or 0)
+            try:
+                n = int(headers.get("content-length", "0") or 0)
+            except ValueError:
+                await self._respond(writer, 400, {"error": "bad content-length"})
+                return
             if n:
                 body = await reader.readexactly(n)
-            await self._route(method, path, body, writer)
+            try:
+                await self._route(method, path, body, writer)
+            except RuntimeError as e:  # engine stopped mid-request
+                await self._try_respond(writer, 503, {"error": str(e)})
+            except Exception as e:
+                # a handler bug must still answer the client, not just
+                # drop the connection (best-effort: headers may be gone)
+                await self._try_respond(writer, 500, {"error": str(e)})
         except (ConnectionResetError, asyncio.IncompleteReadError, BrokenPipeError):
             pass
         finally:
@@ -351,7 +393,9 @@ class ServeFrontend:
                 extra={"Retry-After": f"{max(e.retry_after, 0.0):.3f}"},
             )
             return
-        except ValueError as e:
+        except (ValueError, TypeError) as e:
+            # TypeError covers non-numeric max_new/adapter_id the int()
+            # coercions in do_submit choke on — a client error, not a 500
             await self._respond(writer, 400, {"error": str(e)})
             return
         except RuntimeError as e:  # draining
@@ -410,7 +454,10 @@ class ServeFrontend:
                     return
         except (ConnectionResetError, BrokenPipeError):
             # client went away mid-stream: reclaim its slot and pages
-            await self.cancel(stream.rid)
+            try:
+                await self.cancel(stream.rid)
+            except RuntimeError:
+                pass  # engine already stopped: nothing left to reclaim
 
     # ------------------------------------------------------------ responses
 
@@ -419,12 +466,21 @@ class ServeFrontend:
             writer, status, json.dumps(obj).encode(), "application/json", extra
         )
 
+    async def _try_respond(self, writer, status: int, obj: dict) -> None:
+        """Best-effort error response: the failure may have happened after
+        headers were already streamed, or on a dead socket."""
+        try:
+            await self._respond(writer, status, obj)
+        except (ConnectionResetError, BrokenPipeError, OSError):
+            pass
+
     async def _respond_raw(
         self, writer, status: int, body: bytes, ctype: str, extra=None
     ) -> None:
         reasons = {
             200: "OK", 400: "Bad Request", 404: "Not Found",
-            429: "Too Many Requests", 503: "Service Unavailable",
+            429: "Too Many Requests", 500: "Internal Server Error",
+            503: "Service Unavailable",
         }
         head = (
             f"HTTP/1.1 {status} {reasons.get(status, 'OK')}\r\n"

@@ -244,16 +244,20 @@ class Scheduler:
     ) -> int:
         if max_new < 0:
             raise ValueError(f"max_new must be >= 0, got {max_new}")
-        bucket = self._buckets.get(adapter_id)
-        if bucket is not None:
-            wait = bucket.try_take()
-            if wait is not None:
-                raise RateLimitedError(adapter_id, wait)
+        # queue_limit first (it mutates nothing): a request shed for a
+        # full queue must not also debit the tenant's token bucket, or
+        # overload double-penalizes the tenant with 429s for requests
+        # that were never queued
         if (
             self.queue_limit is not None
             and len(self._queue) >= self.queue_limit
         ):
             raise QueueFullError(len(self._queue), self.queue_limit)
+        bucket = self._buckets.get(adapter_id)
+        if bucket is not None:
+            wait = bucket.try_take()
+            if wait is not None:
+                raise RateLimitedError(adapter_id, wait)
         rid = self._next_rid
         self._next_rid += 1
         req = Request(

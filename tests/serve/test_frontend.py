@@ -251,6 +251,59 @@ def test_frontend_queue_full_is_503_with_retry_after():
     assert eng.kv.drained()
 
 
+def test_frontend_bad_inputs_and_late_calls_do_not_kill_server():
+    """Regression: a malformed payload must come back as a 400 and leave
+    the engine thread alive (a non-numeric temperature used to crash
+    inside step(), which the fatal path turned into a full-server drain
+    — a one-request DoS); after the drain completes, a late request must
+    fail fast with 503 instead of awaiting a future nobody resolves."""
+    eng = _engine(paged=True)
+
+    async def scenario():
+        front = ServeFrontend(eng, port=0)
+        port = await front.start()
+        bad_payloads = [
+            ("temperature", {"temperature": "hot"}),
+            ("temperature", {"temperature": [1, 2]}),
+            ("timeout", {"timeout": "soon"}),
+            ("", {"max_new": "lots"}),
+        ]
+        for needle, extra in bad_payloads:
+            body = {"prompt": [1, 5, 9], "max_new": 2, "stream": False}
+            body.update(extra)
+            st, _, out = await _request(port, "POST", "/v1/generate", body)
+            assert st == 400 and needle in out["error"]
+        # malformed Content-Length: a 400, not a dropped connection
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        writer.write(
+            b"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+            b"Content-Length: ZZ\r\n\r\n"
+        )
+        await writer.drain()
+        assert int((await reader.readline()).split()[1]) == 400
+        writer.close()
+        # the engine thread survived all of the above and still serves
+        st, _, out = await _request(
+            port, "POST", "/v1/generate",
+            {"prompt": [1, 5, 9], "max_new": 2, "stream": False},
+        )
+        assert st == 200 and len(out["tokens"]) == 2
+        # drain, wait for the engine thread to exit, then race a late
+        # command: it must 503 promptly, never hang (which on 3.12+
+        # would also deadlock aclose's wait_closed)
+        st, _, _ = await _request(port, "POST", "/admin/shutdown")
+        assert st == 200
+        await front._drained.wait()
+        st, _, out = await asyncio.wait_for(
+            _request(port, "GET", "/metrics"), timeout=5
+        )
+        assert st == 503 and "engine stopped" in out["error"]
+        await front.aclose()
+
+    asyncio.run(scenario())
+    assert eng.kv.drained()
+
+
 def test_frontend_slow_client_backpressure():
     """A consumer that drains slower than the engine generates backs up
     its stream queue past the bound — the publisher then cancels the

@@ -70,6 +70,20 @@ def test_submit_validation():
         eng.submit([1, 2], max_new=-3)
     with pytest.raises(ValueError, match="timeout"):
         eng.submit([1, 2], max_new=4, timeout=0.0)
+    # non-numeric / non-finite knobs are ValueErrors at intake, never a
+    # crash inside step() (which would take down a whole server)
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit([1, 2], max_new=4, temperature="hot")
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit([1, 2], max_new=4, temperature=[1, 2])
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit([1, 2], max_new=4, temperature=math.nan)
+    with pytest.raises(ValueError, match="timeout"):
+        eng.submit([1, 2], max_new=4, timeout="soon")
+    with pytest.raises(ValueError, match="timeout"):
+        eng.submit([1, 2], max_new=4, timeout=math.inf)
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit([1, 2], max_new=4, deadline="tomorrow")
     sched = Scheduler(2)
     with pytest.raises(ValueError, match="max_new"):
         sched.submit([1, 2], max_new=-1)
@@ -119,15 +133,32 @@ def test_token_bucket_rate_limit_exact_refill():
         sched.submit([4], 4, adapter_id=1)
 
 
+def test_queue_full_shed_does_not_debit_rate_bucket():
+    """A request shed on queue_limit must not also consume a rate-limit
+    token — under overload that would double-penalize the tenant with
+    429s for requests that were never queued."""
+    clock = FakeClock()
+    sched = Scheduler(1, queue_limit=1, clock=clock)
+    sched.set_rate_limit(0, rate=1.0, burst=1.0)
+    sched.submit([1], 4)  # takes the banked token, fills the backlog
+    clock.advance(1.0)  # exactly one token accrued again
+    with pytest.raises(QueueFullError):
+        sched.submit([2], 4)
+    sched.admissible()  # admission frees backlog space
+    sched.submit([2], 4)  # the accrued token was NOT debited by the shed
+
+
 def test_engine_shed_counters(monkeypatch):
     clock = FakeClock()
-    eng = _engine(queue_limit=3, metrics=True, clock=clock)
+    eng = _engine(queue_limit=5, metrics=True, clock=clock)
     eng.set_rate_limit(0, rate=1.0, burst=3.0)
-    for _ in range(3):  # backlog fills to the limit (no step yet)
+    for _ in range(3):  # burst exhausted; backlog still has room
         eng.submit([1, 2], max_new=2)
     with pytest.raises(RateLimitedError):
         eng.submit([1, 2], max_new=2)
-    clock.advance(10.0)
+    clock.advance(10.0)  # bucket refills: now fill the backlog itself
+    for _ in range(2):
+        eng.submit([1, 2], max_new=2)
     with pytest.raises(QueueFullError):
         eng.submit([1, 2], max_new=2)
     shed = eng.metrics.get("serve_requests_shed_total")
@@ -246,7 +277,15 @@ def test_step_seconds_ema_measured():
     assert eng.step_seconds_ema is None  # unknown until a step runs
     eng.submit([1, 5, 9], max_new=2)
     eng.run_to_completion()
+    # the very first mixed/decode steps are JIT compiles and are never
+    # folded in — a multi-second compile must not seed the admission
+    # gate's estimate; warm steps do
+    eng.submit([1, 5, 9], max_new=2)
+    eng.run_to_completion()
     assert eng.step_seconds_ema is not None and eng.step_seconds_ema > 0
+    # ...and the estimate reflects warm steps, not compile time: warm
+    # steps on this tiny model are far under a second
+    assert eng.step_seconds_ema < 1.0
 
 
 # --------------------------------------------------------- graceful drain
